@@ -1,0 +1,110 @@
+"""Shared miniature pipeline for the paper-table benchmarks.
+
+The paper's tables are accuracy-vs-budget on CIFAR; offline we run the same
+pipeline on synthetic CIFAR at reduced scale (documented in EXPERIMENTS.md).
+All benchmarks print ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import bcd, linearize, masks as M, snl
+from repro.data import ImageDatasetCfg, SyntheticImages
+from repro.models.resnet import CNN, CNNConfig
+from repro.training import optimizer as opt_lib, train as train_lib
+
+
+def tiny_cnn(n_classes=8, image_size=16):
+    cfg = CNNConfig("tiny", n_classes, image_size,
+                    ((8, 1, 1), (16, 1, 2)), stem_channels=8)
+    return CNN(cfg)
+
+
+def trained_pipeline(seed=0, steps=80, noise=2.5):
+    """noise=2.5 keeps the dense model ~75-90% so budget cuts actually cost
+    accuracy — otherwise every method saturates and comparisons degenerate."""
+    model = tiny_cnn()
+    data = SyntheticImages(ImageDatasetCfg(
+        n_classes=8, image_size=16, n_train=256, n_test=64, seed=seed,
+        noise=noise))
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = opt_lib.sgd(lr=5e-2, momentum=0.9)
+    step, loss_fn = train_lib.make_cnn_train_step(model, opt)
+    batches_np = data.batches("train", 32)
+    batches = lambda i: {k: jnp.asarray(v) for k, v in batches_np(i).items()}
+    masks0 = linearize.init_masks(model.mask_sites())
+    ostate = opt.init(params)
+    mdev = M.as_device(masks0)
+    for i in range(steps):
+        params, ostate, _, _ = step(params, ostate, mdev, batches(i))
+    return model, data, params, loss_fn, batches, masks0
+
+
+def soft_loss_fn(model):
+    def soft_loss(p, a, batch, soft):
+        logits = model.forward(p, a, batch["images"], soft=soft)
+        return train_lib.cross_entropy(logits, batch["labels"]), 0.0
+    return soft_loss
+
+
+def test_acc(model, params, masks, data, n=64):
+    b = {k: jnp.asarray(v) for k, v in data.eval_set(n).items()}
+    logits = model.forward(params, M.as_device(masks), b["images"])
+    return float(jnp.mean((jnp.argmax(logits, -1) == b["labels"])
+                          .astype(jnp.float32)) * 100)
+
+
+def train_acc_fn(model, params_ref, data, n=128):
+    b = {k: jnp.asarray(v) for k, v in data.train_eval_set(n).items()}
+
+    @jax.jit
+    def acc(params, masks):
+        logits = model.forward(params, masks, b["images"])
+        return jnp.mean((jnp.argmax(logits, -1) == b["labels"])
+                        .astype(jnp.float32)) * 100
+    return acc
+
+
+def run_snl_to(model, params, loss_fn, batches, masks0, budget, *,
+               epochs=5, lr=3e-2, finetune_steps=15, seed=0):
+    alphas = {k: jnp.ones(v.shape) for k, v in masks0.items()}
+    cfg = snl.SNLConfig(b_target=budget, lam0=5e-4, kappa=1.5, epochs=epochs,
+                        steps_per_epoch=5, lr=lr,
+                        finetune_steps=finetune_steps, seed=seed)
+    return snl.run_snl(params, alphas, loss_fn, batches, cfg)
+
+
+def run_bcd_from(model, data, params_holder, loss_fn, batches, masks_ref,
+                 b_target, *, drc=None, rt=10, adt=0.3, ft_steps=25):
+    b_ref = M.count(masks_ref)
+    drc = drc or max(1, (b_ref - b_target) // 8)
+    acc = train_acc_fn(model, None, data)
+
+    def eval_acc(m):
+        return float(acc(params_holder["params"], M.as_device(m)))
+
+    def ft(m):
+        params_holder["params"] = snl.finetune(
+            params_holder["params"], m, loss_fn, batches,
+            steps=ft_steps, lr=1e-2)
+
+    cfg = bcd.BCDConfig(b_target=b_target, drc=drc, rt=rt, adt=adt)
+    return bcd.run_bcd(masks_ref, cfg, eval_acc, finetune=ft,
+                       keep_snapshots=True)
+
+
+def timed(fn, *args, repeat=3, **kw):
+    fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeat * 1e6
+    return us, out
+
+
+def row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,2 @@
+from .base import (ArchConfig, Block, ShapeCell, SHAPES, ARCH_IDS,
+                   get_config, cell_applicable, input_specs, make_inputs)  # noqa

@@ -1,0 +1,132 @@
+"""AutoReP — Automatic ReLU Replacement (Peng et al., ICCV 2023), simplified.
+
+The second Selective baseline the paper composes with.  Differences from SNL:
+(1) eliminated ReLUs are replaced by a *learnable degree-2 polynomial*
+    g(x) = a·x² + b·x + c  (per-channel coefficients, initialized to identity,
+    so distribution-aware coefficients are learned jointly with θ);
+(2) the binary indicator m = 1[α > 0] is trained with a straight-through
+    estimator stabilized by a *hysteresis loop*: m flips 1→0 only when α < −h
+    and 0→1 only when α > +h, suppressing indicator oscillation;
+(3) the budget is soft-enforced by a penalty on the active fraction.
+
+Final masks are hard top-|B| selections over α, followed by finetune of
+(θ, poly) under fixed masks — exactly the checkpoint BCD starts from in the
+paper's Fig. 4 experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training import optimizer as opt_lib
+from . import masks as M
+
+
+@dataclasses.dataclass
+class AutoRepConfig:
+    b_target: int
+    hysteresis: float = 0.05
+    budget_weight: float = 1.0     # λ on the budget penalty
+    epochs: int = 30
+    steps_per_epoch: int = 20
+    lr: float = 1e-3
+    finetune_steps: int = 100
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class AutoRepResult:
+    params: object
+    poly: Dict[str, jnp.ndarray]
+    masks: M.MaskTree
+    alphas: Dict[str, np.ndarray]
+    budget_per_epoch: List[int]
+
+
+def _ste_indicator(alpha, m_prev, h):
+    """Hysteresis indicator with straight-through gradient."""
+    up = (alpha > h).astype(jnp.float32)
+    down = (alpha >= -h).astype(jnp.float32)
+    m = jnp.where(m_prev > 0.5, down, up)
+    # straight-through: d m / d alpha := 1 in backward
+    return m + alpha - jax.lax.stop_gradient(alpha)
+
+
+def run_autorep(
+    params,
+    alphas: Dict[str, jnp.ndarray],
+    poly: Dict[str, jnp.ndarray],
+    loss_fn: Callable,   # (params, masks, poly, batch, soft) -> (loss, acc)
+    batches: Callable[[int], object],
+    cfg: AutoRepConfig,
+    *,
+    verbose: bool = False,
+) -> AutoRepResult:
+    total = sum(int(np.prod(v.shape)) for v in alphas.values())
+    target_frac = cfg.b_target / total
+
+    opt = opt_lib.sgd(lr=cfg.lr, momentum=0.9,
+                      schedule=opt_lib.cosine(
+                          cfg.lr, cfg.epochs * cfg.steps_per_epoch))
+
+    def train_loss(trainable, m_prev, batch):
+        p, a, q = trainable
+        m = {k: _ste_indicator(a[k], m_prev[k], cfg.hysteresis) for k in a}
+        loss, _acc = loss_fn(p, m, q, batch, True)
+        frac = (sum(jnp.sum(v) for v in m.values()) / total)
+        budget_pen = jnp.abs(frac - target_frac)
+        return loss + cfg.budget_weight * budget_pen, m
+
+    @jax.jit
+    def step(trainable, m_prev, ostate, batch):
+        (_, m), grads = jax.value_and_grad(train_loss, has_aux=True)(
+            trainable, m_prev, batch)
+        updates, ostate = opt.update(grads, ostate, trainable)
+        trainable = opt_lib.apply_updates(trainable, updates)
+        m_hard = {k: jax.lax.stop_gradient((v > 0.5).astype(jnp.float32))
+                  for k, v in m.items()}
+        return trainable, m_hard, ostate
+
+    trainable = (params,
+                 {k: jnp.asarray(v) for k, v in alphas.items()},
+                 {k: jnp.asarray(v) for k, v in poly.items()})
+    m_prev = {k: jnp.ones_like(v) for k, v in trainable[1].items()}
+    ostate = opt.init(trainable)
+    budgets, it = [], 0
+    for epoch in range(cfg.epochs):
+        for _ in range(cfg.steps_per_epoch):
+            trainable, m_prev, ostate = step(trainable, m_prev, ostate,
+                                             batches(it))
+            it += 1
+        budget = M.count({k: np.asarray(v) for k, v in m_prev.items()})
+        budgets.append(budget)
+        if verbose:
+            print(f"[autorep] epoch={epoch} budget={budget}")
+
+    params, a, q = trainable
+    a_host = {k: np.asarray(v) for k, v in a.items()}
+    hard = M.threshold(a_host, cfg.b_target)
+
+    # Finetune (θ, poly) with fixed binary masks.
+    masks_dev = M.as_device(hard)
+    fopt = opt_lib.adamw(lr=3.5e-5,
+                         schedule=opt_lib.cosine(3.5e-5, cfg.finetune_steps))
+
+    @jax.jit
+    def fstep(pq, ostate, batch):
+        def l(pq):
+            loss, _ = loss_fn(pq[0], masks_dev, pq[1], batch, False)
+            return loss
+        grads = jax.grad(l)(pq)
+        updates, ostate = fopt.update(grads, ostate, pq)
+        return opt_lib.apply_updates(pq, updates), ostate
+
+    pq = (params, q)
+    fstate = fopt.init(pq)
+    for i in range(cfg.finetune_steps):
+        pq, fstate = fstep(pq, fstate, batches(it + i))
+    return AutoRepResult(pq[0], pq[1], hard, a_host, budgets)

@@ -1,0 +1,113 @@
+"""Block Coordinate Descent for Network Linearization (the paper's Alg. 1/2).
+
+Works directly in the discrete mask domain: every iterate is a binary mask with
+exactly-known ||m||_0 — no relaxation, no hard-threshold cliff.  The algorithm
+is model-agnostic: it consumes two callables,
+
+  eval_acc(mask_tree) -> float         train-subset accuracy with these masks
+  finetune(mask_tree) -> None          finetune θ in place (closure-owned)
+
+so the same driver runs the paper's ResNets and the LM-family backbones.
+Candidate evaluation never recompiles: masks are jit inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from . import masks as M
+
+
+@dataclasses.dataclass
+class BCDConfig:
+    b_target: int                 # target ReLU budget
+    drc: int = 100                # Delta ReLU Count per outer step
+    rt: int = 50                  # random trials per outer step
+    adt: float = 0.3              # accuracy degradation tolerance [%]
+    finetune_every_step: bool = True
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class BCDStepLog:
+    step: int
+    budget_before: int
+    budget_after: int
+    trials: int
+    found_early: bool
+    best_drop: float              # accepted block's accuracy drop [%]
+    acc_before: float
+    acc_after_finetune: Optional[float]
+    wall_s: float
+
+
+@dataclasses.dataclass
+class BCDResult:
+    masks: M.MaskTree
+    history: List[BCDStepLog]
+    mask_snapshots: List[M.MaskTree]  # for IoU / golden-set analysis
+
+
+def run_bcd(
+    masks: M.MaskTree,
+    cfg: BCDConfig,
+    eval_acc: Callable[[M.MaskTree], float],
+    finetune: Optional[Callable[[M.MaskTree], None]] = None,
+    *,
+    verbose: bool = False,
+    keep_snapshots: bool = False,
+) -> BCDResult:
+    """Run Alg. 2 until ||m||_0 == cfg.b_target.
+
+    Accuracies are in percent (0..100).  ΔAcc = acc(m) − acc(m⊙block).
+    """
+    rng = np.random.default_rng(cfg.seed)
+    masks = {k: np.array(v, dtype=np.float32) for k, v in masks.items()}
+    b_ref = M.count(masks)
+    if cfg.b_target >= b_ref:
+        return BCDResult(masks, [], [])
+    t_total = math.ceil((b_ref - cfg.b_target) / cfg.drc)
+    history: List[BCDStepLog] = []
+    snaps: List[M.MaskTree] = []
+
+    for t in range(t_total):
+        t0 = time.perf_counter()
+        budget = M.count(masks)
+        drc_t = min(cfg.drc, budget - cfg.b_target)
+        if drc_t <= 0:
+            break
+        acc_base = float(eval_acc(masks))
+        best_cand, best_drop, found = None, float("inf"), False
+        n = 0
+        while n < cfg.rt and not found:
+            cand = M.sample_removal_block(rng, masks, drc_t)
+            drop = acc_base - float(eval_acc(cand))
+            if drop < best_drop:
+                best_cand, best_drop = cand, drop
+            if drop < cfg.adt:
+                found = True
+            n += 1
+        masks = best_cand
+        acc_after = None
+        if finetune is not None and cfg.finetune_every_step:
+            finetune(masks)
+            acc_after = float(eval_acc(masks))
+        log = BCDStepLog(
+            step=t, budget_before=budget, budget_after=M.count(masks),
+            trials=n, found_early=found, best_drop=best_drop,
+            acc_before=acc_base, acc_after_finetune=acc_after,
+            wall_s=time.perf_counter() - t0)
+        history.append(log)
+        if keep_snapshots:
+            snaps.append({k: v.copy() for k, v in masks.items()})
+        if verbose:
+            print(f"[bcd] t={t} budget {log.budget_before}->{log.budget_after}"
+                  f" trials={n} early={found} drop={best_drop:.3f}%"
+                  f" acc={acc_base:.2f}->"
+                  f"{acc_after if acc_after is not None else float('nan'):.2f}")
+    assert M.count(masks) == cfg.b_target, (M.count(masks), cfg.b_target)
+    return BCDResult(masks, history, snaps)

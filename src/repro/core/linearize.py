@@ -1,0 +1,77 @@
+"""Mask ↔ model glue: declares *mask sites* and applies masked activations.
+
+A model exposes ``mask_sites() -> {name: MaskSite}``; the linearization engine
+builds the mask tree, and the model's forward applies ``apply_masked_act`` at
+each site.  This keeps the paper's algorithm (core.bcd / core.snl) fully
+model-agnostic: BCD only ever sees the mask tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from . import masks as M
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskSite:
+    """One maskable nonlinearity site.
+
+    shape: the mask shape (shared over batch / sequence).  CNNs use the full
+    (H, W, C) activation-site shape (paper's per-pixel masks); transformers use
+    per-channel (n_layers_in_stack, d_ff) for a scanned stack.
+    kind:  activation at the site ('relu' | 'gelu' | 'silu' | 'sqrelu').
+    replacement: 'identity' (Network Linearization) or 'poly2' (AutoReP).
+    """
+    shape: Tuple[int, ...]
+    kind: str = "relu"
+    replacement: str = "identity"
+
+
+def init_masks(sites: Dict[str, MaskSite]) -> M.MaskTree:
+    return M.full_masks({k: s.shape for k, s in sites.items()})
+
+
+def init_poly(sites: Dict[str, MaskSite]) -> Dict[str, jnp.ndarray]:
+    """AutoReP poly2 coefficients per site, initialized near identity:
+    g(x) = 0·x² + 1·x + 0."""
+    out = {}
+    for k, s in sites.items():
+        if s.replacement == "poly2":
+            p = jnp.zeros((3,) + s.shape, dtype=jnp.float32)
+            p = p.at[1].set(1.0)
+            out[k] = p
+    return out
+
+
+def apply_masked_act(x, mask, site: MaskSite, poly=None, soft: bool = False):
+    """Apply the (possibly soft, for SNL) masked activation at a site.
+
+    x: (batch..., *site.shape) — site shape must be the trailing dims.
+    soft=True keeps real-valued masks differentiable (SNL's relaxation);
+    hard masks route through the fused kernel wrapper.
+    """
+    from repro.kernels import ref
+    p = None
+    if poly is not None and (soft or site.replacement == "poly2"):
+        p = poly
+    if soft:
+        mask = jnp.clip(mask, 0.0, 1.0)
+    if soft or not ops._use_pallas():
+        # Direct broadcast application — NO reshape.  Flattening the site
+        # dims (e.g. an MoE (E, F) mask) merges a model-sharded axis into a
+        # mixed one and forces GSPMD to fully rematerialize the activation
+        # (EXPERIMENTS.md §Perf, mixtral hillclimb).  Pallas needs the 2D
+        # layout, but it only runs on TPU where the kernel owns the tiling.
+        y = ref._act(x, site.kind)
+        if p is None:
+            lin = x
+        else:
+            a, b, c = p[0], p[1], p[2]
+            lin = a * x * x + b * x + c
+        m = mask.astype(x.dtype)
+        return m * y + (1.0 - m) * lin
+    return ops.masked_act_sited(x, mask, kind=site.kind, poly=p)

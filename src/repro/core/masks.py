@@ -1,0 +1,122 @@
+"""ReLU/activation mask pytrees.
+
+A *mask tree* is a dict mapping a mask-site name (e.g. ``"layer3.relu2"`` for
+CNNs or ``"blocks.ffn"`` for a scanned transformer stack) to a float32 array of
+zeros/ones.  ``1.0`` keeps the nonlinearity at that coordinate, ``0.0``
+linearizes it (identity or poly2 replacement — see core.linearize).
+
+Masks are deliberately small (one scalar per activation *site*, shared across
+the batch, matching the paper's per-pixel masks) so they are replicated across
+the mesh and updated host-side between jitted evaluations.  All sampling /
+counting helpers here are numpy-based host code: BCD mutates masks a few times
+per outer iteration, never inside a jitted step.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from typing import Dict, Iterable, Tuple
+
+MaskTree = Dict[str, np.ndarray]
+
+
+def as_device(masks: MaskTree) -> Dict[str, jnp.ndarray]:
+    """Move a host mask tree onto device as float32 jnp arrays."""
+    return {k: jnp.asarray(v, dtype=jnp.float32) for k, v in masks.items()}
+
+
+def full_masks(shapes: Dict[str, Tuple[int, ...]]) -> MaskTree:
+    """All-ones masks (every nonlinearity kept) for the given site shapes."""
+    return {k: np.ones(s, dtype=np.float32) for k, s in shapes.items()}
+
+
+def count(masks: MaskTree) -> int:
+    """||m||_0 — the current ReLU budget."""
+    return int(sum(int(np.sum(v > 0.5)) for v in masks.values()))
+
+
+def total_size(masks: MaskTree) -> int:
+    return int(sum(v.size for v in masks.values()))
+
+
+def _flatten(masks: MaskTree) -> Tuple[np.ndarray, list]:
+    """Concatenate all masks into one flat vector + per-site layout info."""
+    keys = sorted(masks.keys())
+    flat = np.concatenate([masks[k].reshape(-1) for k in keys])
+    layout = []
+    off = 0
+    for k in keys:
+        n = masks[k].size
+        layout.append((k, off, n, masks[k].shape))
+        off += n
+    return flat, layout
+
+
+def _unflatten(flat: np.ndarray, layout: list) -> MaskTree:
+    out = {}
+    for k, off, n, shape in layout:
+        out[k] = flat[off:off + n].reshape(shape).astype(np.float32)
+    return out
+
+
+def active_indices(masks: MaskTree) -> Tuple[np.ndarray, list]:
+    flat, layout = _flatten(masks)
+    return np.nonzero(flat > 0.5)[0], layout
+
+
+def sample_removal_block(
+    rng: np.random.Generator, masks: MaskTree, drc: int
+) -> MaskTree:
+    """Sample a block of ``drc`` currently-active coordinates (Alg. 2 line 8).
+
+    Returns a *candidate* mask tree: ``masks`` with the sampled block zeroed.
+    If fewer than ``drc`` coordinates are active, zeroes all of them.
+    """
+    flat, layout = _flatten(masks)
+    active = np.nonzero(flat > 0.5)[0]
+    k = min(drc, active.size)
+    chosen = rng.choice(active, size=k, replace=False)
+    new_flat = flat.copy()
+    new_flat[chosen] = 0.0
+    return _unflatten(new_flat, layout)
+
+
+def remove_random(rng: np.random.Generator, masks: MaskTree, n: int) -> MaskTree:
+    """Uniform random removal (the naive baseline BCD is compared against)."""
+    return sample_removal_block(rng, masks, n)
+
+
+def intersection_over_union(m1: MaskTree, m2: MaskTree) -> float:
+    """Paper Fig. 6 IoU: ||m1 ⊙ m2||_0 / ||m1||_0 (m1 = smaller budget)."""
+    inter = sum(float(np.sum((a > 0.5) & (m2[k] > 0.5))) for k, a in m1.items())
+    denom = float(count(m1))
+    return inter / max(denom, 1.0)
+
+
+def is_subset(m_small: MaskTree, m_big: MaskTree) -> bool:
+    """True iff every active coordinate of m_small is active in m_big."""
+    for k, a in m_small.items():
+        if np.any((a > 0.5) & ~(m_big[k] > 0.5)):
+            return False
+    return True
+
+
+def per_site_counts(masks: MaskTree) -> Dict[str, int]:
+    """Paper Fig. 7 — ReLU distribution across layers/sites."""
+    return {k: int(np.sum(v > 0.5)) for k, v in sorted(masks.items())}
+
+
+def threshold(soft_masks: MaskTree, budget: int) -> MaskTree:
+    """Hard-threshold soft (real-valued) masks to exactly ``budget`` ones.
+
+    Keeps the ``budget`` largest coordinates globally — this is SNL's final
+    binarization step (the step the paper identifies as the accuracy cliff).
+    """
+    flat, layout = _flatten(soft_masks)
+    budget = min(budget, flat.size)
+    out = np.zeros_like(flat)
+    if budget > 0:
+        keep = np.argpartition(flat, -budget)[-budget:]
+        out[keep] = 1.0
+    return _unflatten(out, layout)

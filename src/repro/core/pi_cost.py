@@ -1,0 +1,57 @@
+"""Private-Inference cost model — why ReLU count is the latency bottleneck.
+
+DELPHI-style hybrid protocol accounting (Srinivasan et al., USENIX Sec'20):
+linear layers are evaluated under additive secret sharing with the heavy
+lifting moved to an offline phase; each *online* ReLU requires a garbled-
+circuit evaluation whose communication dominates.  Constants below follow the
+published per-ReLU figures (order-of-magnitude; configurable):
+
+  online  ≈ 2.0 KiB per ReLU  (GC evaluation + share reconstruction)
+  offline ≈ 17.5 KiB per ReLU (garbling + OT)
+
+Latency = comm / bandwidth + per-round RTTs + linear-layer share ops.
+This module turns a mask budget into the latency/bandwidth savings the paper
+claims PI gets from linearization.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PIProtocol:
+    name: str = "delphi"
+    online_bytes_per_relu: float = 2.0 * 1024
+    offline_bytes_per_relu: float = 17.5 * 1024
+    bandwidth_bytes_per_s: float = 1e9 / 8      # 1 Gb/s WAN-ish link
+    rtt_s: float = 0.010
+    rounds_per_layer: int = 2
+    linear_online_bytes_per_param: float = 0.0  # linear layers ~free online
+
+
+@dataclasses.dataclass(frozen=True)
+class PICost:
+    relus: int
+    online_bytes: float
+    offline_bytes: float
+    online_latency_s: float
+    total_bytes: float
+
+
+def cost(relu_count: int, n_nonlinear_layers: int,
+         proto: PIProtocol = PIProtocol(), linear_params: int = 0) -> PICost:
+    online = relu_count * proto.online_bytes_per_relu \
+        + linear_params * proto.linear_online_bytes_per_param
+    offline = relu_count * proto.offline_bytes_per_relu
+    latency = online / proto.bandwidth_bytes_per_s \
+        + n_nonlinear_layers * proto.rounds_per_layer * proto.rtt_s
+    return PICost(relu_count, online, offline, latency, online + offline)
+
+
+def saving(b_ref: int, b_target: int, n_layers: int,
+           proto: PIProtocol = PIProtocol()):
+    """(latency_ref, latency_target, speedup) for a linearization run."""
+    a = cost(b_ref, n_layers, proto)
+    b = cost(b_target, n_layers, proto)
+    return a.online_latency_s, b.online_latency_s, \
+        a.online_latency_s / max(b.online_latency_s, 1e-12)

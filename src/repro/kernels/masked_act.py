@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: fused masked activation (Network Linearization).
+
+The inner op of the paper — ``y = m·act(x) + (1−m)·g(x)`` — is elementwise but
+sits on the critical path of every linearized forward pass (BCD evaluates it
+RT times per outer step over the whole train subsample).  On TPU we tile
+(block_rows × block_cols) tiles of the flattened (rows, channels) activation
+into VMEM, broadcast the per-channel mask tile across rows inside the kernel,
+and fuse the replacement branch (identity or degree-2 polynomial) so the mask
+select never materializes in HBM.
+
+Lane alignment: block_cols is a multiple of 128 (VPU lane width); block_rows a
+multiple of 8 (f32 sublane).  Grid is (rows/block_rows, cols/block_cols).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def _act_tile(x, kind: str):
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    if kind == "gelu":
+        c = jnp.asarray(_SQRT_2_OVER_PI, x.dtype)
+        return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+    if kind == "silu":
+        return x * (1.0 / (1.0 + jnp.exp(-x)))
+    if kind == "sqrelu":
+        r = jnp.maximum(x, 0.0)
+        return r * r
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def _masked_act_kernel(x_ref, m_ref, o_ref, *, kind: str):
+    x = x_ref[...]
+    m = m_ref[...].astype(x.dtype)  # (1, block_cols) -> broadcast over rows
+    y = _act_tile(x, kind)
+    o_ref[...] = m * y + (1.0 - m) * x
+
+
+def _masked_act_poly_kernel(x_ref, m_ref, p_ref, o_ref, *, kind: str):
+    x = x_ref[...]
+    m = m_ref[...].astype(x.dtype)
+    p = p_ref[...].astype(x.dtype)  # (3, block_cols)
+    y = _act_tile(x, kind)
+    lin = p[0:1, :] * x * x + p[1:2, :] * x + p[2:3, :]
+    o_ref[...] = m * y + (1.0 - m) * lin
+
+
+def masked_act_2d(
+    x: jax.Array,
+    mask: jax.Array,
+    poly: jax.Array | None = None,
+    *,
+    kind: str = "relu",
+    block_rows: int = 256,
+    block_cols: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused masked activation over a 2D (rows, channels) array.
+
+    mask: (channels,) 0/1.  poly: optional (3, channels) a,b,c coefficients for
+    the replacement g(x)=a·x²+b·x+c (AutoReP mode); identity when None.
+    Rows/cols need not divide the block sizes — we clamp blocks to the array.
+    """
+    rows, cols = x.shape
+    br = min(block_rows, rows)
+    bc = min(block_cols, cols)
+    # Pad to block multiples (cheap; elementwise kernel).
+    pr = (-rows) % br
+    pc = (-cols) % bc
+    xp = jnp.pad(x, ((0, pr), (0, pc))) if (pr or pc) else x
+    mp = jnp.pad(mask, ((0, pc),)) if pc else mask
+    mp = mp.reshape(1, -1)
+    grid = (xp.shape[0] // br, xp.shape[1] // bc)
+
+    x_spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    m_spec = pl.BlockSpec((1, bc), lambda i, j: (0, j))
+    out_spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+
+    if poly is None:
+        fn = pl.pallas_call(
+            functools.partial(_masked_act_kernel, kind=kind),
+            grid=grid,
+            in_specs=[x_spec, m_spec],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+            interpret=interpret,
+        )
+        out = fn(xp, mp)
+    else:
+        pp = jnp.pad(poly, ((0, 0), (0, pc))) if pc else poly
+        p_spec = pl.BlockSpec((3, bc), lambda i, j: (0, j))
+        fn = pl.pallas_call(
+            functools.partial(_masked_act_poly_kernel, kind=kind),
+            grid=grid,
+            in_specs=[x_spec, m_spec, p_spec],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+            interpret=interpret,
+        )
+        out = fn(xp, mp, pp)
+    if pr or pc:
+        out = out[:rows, :cols]
+    return out

@@ -1,0 +1,72 @@
+"""Public jit'd entry points for the kernels.
+
+Dispatch policy: on TPU backends the Pallas kernels run compiled; elsewhere
+(this CPU container) callers get the pure-jnp oracle unless they explicitly ask
+for ``interpret=True`` (kernel-correctness tests do).  Model code calls these
+wrappers only — it never touches pallas directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .masked_act import masked_act_2d
+from .rwkv6_scan import rwkv6_scan as _rwkv6_pallas
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def masked_act(x, mask, *, kind: str = "relu", poly=None,
+               force_pallas: bool = False, interpret: bool = False):
+    """y = mask·act(x) + (1−mask)·g(x) over (..., C) with per-channel mask.
+
+    Accepts any leading shape; flattens to (rows, C) for the kernel.
+    """
+    if not (force_pallas or _use_pallas()):
+        return ref.masked_act_ref(x, mask, kind=kind, poly=poly)
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    out = masked_act_2d(x2, mask, poly, kind=kind,
+                        interpret=interpret or not _use_pallas())
+    return out.reshape(shape)
+
+
+def masked_act_sited(x, mask, *, kind: str = "relu", poly=None, **kw):
+    """Masked activation where the mask covers the full *site* shape.
+
+    For CNNs the paper's mask is per (H, W, C) location shared over batch:
+    x: (B, *site), mask: (*site).  Flattens site dims into the channel axis.
+    """
+    rows = int(x.size // mask.size)
+    x2 = x.reshape(rows, mask.size)
+    p2 = None if poly is None else poly.reshape(3, mask.size)
+    out = masked_act(x2, mask.reshape(-1), kind=kind, poly=p2, **kw)
+    return out.reshape(x.shape)
+
+
+def rwkv6(r, k, v, w, u, state, *, chunk: int = 32,
+          force_pallas: bool = False, interpret: bool = False):
+    """Chunked rwkv6 scan over (BH, T, K/V); falls back to a lax.scan oracle."""
+    if force_pallas or _use_pallas():
+        return _rwkv6_pallas(r, k, v, w, u, state, chunk=chunk,
+                             interpret=interpret or not _use_pallas())
+    return _rwkv6_scan_jnp(r, k, v, w, u, state)
+
+
+@jax.jit
+def _rwkv6_scan_jnp(r, k, v, w, u, state):
+    """Vectorized (over BH) chunk-free oracle using lax.scan on tokens."""
+    def head(r, k, v, w, u, s0):
+        def step(S, inp):
+            rt, kt, vt, wt = inp
+            y = rt @ S + (rt * (u * kt)).sum() * vt
+            S = wt[:, None] * S + kt[:, None] * vt[None, :]
+            return S, y
+        S, ys = jax.lax.scan(step, s0, (r, k, v, w))
+        return ys, S
+    return jax.vmap(head)(r, k, v, w, u, state)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _act(x, kind: str):
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    if kind == "gelu":
+        # tanh approximation — matches the kernel exactly.
+        c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+        return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+    if kind == "silu":
+        return x * (1.0 / (1.0 + jnp.exp(-x)))
+    if kind == "sqrelu":  # rwkv6 channel-mix: relu(x)^2
+        r = jnp.maximum(x, 0.0)
+        return r * r
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def masked_act_ref(x, mask, kind: str = "relu", poly=None):
+    """y = mask * act(x) + (1-mask) * g(x).
+
+    x:    (..., C) activations
+    mask: (C,) float 0/1 — per-channel keep mask (broadcast over leading dims)
+    poly: None -> g(x) = x (identity / Network Linearization)
+          (3, C) -> g(x) = a*x^2 + b*x + c   (AutoReP-style replacement)
+    """
+    act = _act(x, kind)
+    if poly is None:
+        lin = x
+    else:
+        a, b, c = poly[0], poly[1], poly[2]
+        lin = a * x * x + b * x + c
+    m = mask.astype(x.dtype)
+    return m * act + (1.0 - m) * lin
+
+
+def rwkv6_chunk_ref(r, k, v, w, u, state):
+    """One chunk of the RWKV-6 linear-attention recurrence (oracle).
+
+    Shapes (single head):
+      r, k, w : (T, K)     v: (T, V)     u: (K,)    state: (K, V)
+    Recurrence per token t:
+      y_t   = (u ⊙ k_t) (r_t · ·) v_t  + r_t @ S_t
+      S_t+1 = diag(w_t) S_t + k_t^T v_t
+    Returns (y: (T, V), new_state).
+    """
+    T = r.shape[0]
+    ys = []
+    S = state
+    for t in range(T):
+        rt, kt, vt, wt = r[t], k[t], v[t], w[t]
+        cur = (rt * (u * kt)).sum()[None] * vt  # bonus for current token
+        y = rt @ S + cur
+        S = wt[:, None] * S + kt[:, None] * vt[None, :]
+        ys.append(y)
+    return jnp.stack(ys), S

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: chunked RWKV-6 linear-attention scan.
+
+The attention-free hot loop of rwkv6 (and the long_500k decode path) is a
+token-serial recurrence  S_t = diag(w_t)·S_{t-1} + k_tᵀv_t,
+y_t = r_t·S_{t-1} + (r_t·(u⊙k_t))·v_t.  A CUDA port would run it one token per
+thread-block; on TPU we *chunk* it so the intra-chunk part becomes two dense
+matmuls on the MXU and only the chunk-boundary state is carried serially.
+
+With exclusive in-chunk decay cumprod P_t = Π_{s<t} w_s:
+  y  = tril_strict(R' K'ᵀ + diag(r·(u⊙k))) V + R' S₀
+  R' = r ⊙ P,   K'_s = k_s / (P_s·w_s)
+  S₁ = diag(P_end) S₀ + (k ⊙ P_end/(P·w))ᵀ V
+
+Grid is (batch·heads, T/chunk); the running state lives in a VMEM scratch that
+persists across the sequential chunk dimension of the grid.  f32 only — the
+1/P term limits safe chunk sizes (default 32), matching public rwkv6 kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                  y_ref, sout_ref, state, *, nchunks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        state[...] = s0_ref[0]
+
+    r = r_ref[0]  # (C, K)
+    k = k_ref[0]
+    v = v_ref[0]  # (C, V)
+    w = w_ref[0]
+    u = u_ref[0]  # (1, K)
+
+    S0 = state[...]
+    C = r.shape[0]
+    p_incl = jnp.cumprod(w, axis=0)           # P_t · w_t  (inclusive)
+    p_excl = p_incl / w                       # P_t        (exclusive)
+    r_p = r * p_excl
+    k_p = k / p_incl
+    scores = jnp.dot(r_p, k_p.T, preferred_element_type=jnp.float32)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    bonus = jnp.sum(r * (u * k), axis=-1)     # (C,)
+    scores = jnp.where(si < ti, scores, 0.0)
+    scores = scores + jnp.where(si == ti, bonus[:, None], 0.0)
+    y = jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    y = y + jnp.dot(r_p, S0, preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    p_end = p_incl[-1]                        # (K,)
+    k_end = k * (p_end / p_incl)
+    S1 = p_end[:, None] * S0 + jnp.dot(
+        k_end.T, v, preferred_element_type=jnp.float32)
+    state[...] = S1
+
+    @pl.when(j == nchunks - 1)
+    def _fin():
+        sout_ref[0] = S1.astype(sout_ref.dtype)
+
+
+def rwkv6_scan(r, k, v, w, u, state, *, chunk: int = 32,
+               interpret: bool = False):
+    """Chunked rwkv6 recurrence over (BH, T, K/V) tensors.
+
+    r,k,w: (BH,T,K)  v: (BH,T,V)  u: (BH,K)  state: (BH,K,V)
+    Returns y: (BH,T,V), new_state: (BH,K,V).  T must be divisible by chunk.
+    """
+    BH, T, K = r.shape
+    V = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nchunks = T // chunk
+    grid = (BH, nchunks)
+
+    seq = lambda i, j: (i, j, 0)
+    per_head = lambda i, j: (i, 0)
+    full_head = lambda i, j: (i, 0, 0)
+    y, sout = pl.pallas_call(
+        functools.partial(_rwkv6_kernel, nchunks=nchunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, K), seq),
+            pl.BlockSpec((1, chunk, K), seq),
+            pl.BlockSpec((1, chunk, V), seq),
+            pl.BlockSpec((1, chunk, K), seq),
+            pl.BlockSpec((1, 1, K), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, K, V), full_head),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, V), seq),
+            pl.BlockSpec((1, K, V), full_head),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, V), jnp.float32),
+            jax.ShapeDtypeStruct((BH, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u.reshape(BH, 1, K), state)
+    return y, sout

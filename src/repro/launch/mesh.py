@@ -1,0 +1,37 @@
+"""Production meshes.  Functions, not constants — importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before first init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e pod meshes: single pod (16,16) data×model (256 chips);
+    multi-pod (2,16,16) pod×data×model (512 chips).
+
+    On the host-platform dry-run there are 512 placeholder devices; the
+    single-pod mesh uses the first 256 (jax.make_mesh requires an exact
+    device count, so we fall back to an explicit subset when needed).
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    assert len(devs) >= n, f"need {n} devices, have {len(devs)}"
+    return Mesh(np.array(devs[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / smoke runs)."""
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = jax.devices()[: data * model]
+    return Mesh(np.array(devs).reshape(data, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

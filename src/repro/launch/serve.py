@@ -1,0 +1,79 @@
+"""Production serving launcher: batched prefill + decode over a mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6_3b --reduced \
+        --batch 4 --prompt-len 16 --gen 8 --mesh 1,1
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import linearize, masks as M
+from repro.models.lm import LM
+from repro.training import serve as serve_lib
+from .mesh import make_host_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm_1p6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--mesh", default="1,1")
+    ap.add_argument("--keep-frac", type=float, default=1.0,
+                    help="fraction of nonlinearities kept (linearization)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    d, m = (int(x) for x in args.mesh.split(","))
+    mesh = make_host_mesh(d, m)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    masks0 = linearize.init_masks(model.mask_sites())
+    if args.keep_frac < 1.0:
+        rng = np.random.default_rng(0)
+        masks0 = M.threshold(
+            {k: rng.random(v.shape).astype(np.float32)
+             for k, v in masks0.items()},
+            int(M.count(masks0) * args.keep_frac))
+    mdev = M.as_device(masks0)
+
+    B, P, G = args.batch, args.prompt_len, args.gen
+    max_len = P + G
+    scfg = serve_lib.ServeCfg(dp_axes=("data",), max_len=max_len, batch=B)
+    with mesh:
+        prefill = jax.jit(serve_lib.make_prefill(model))
+        decode = serve_lib.jit_decode_step(model, mesh, scfg) \
+            if mesh.size > 1 else jax.jit(serve_lib.make_decode_step(model))
+        rng = np.random.default_rng(1)
+        prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, P),
+                                           dtype=np.int32))
+        cache = model.init_cache(B, max_len)
+        t0 = time.perf_counter()
+        last, cache = prefill(params, mdev, prompts, cache)
+        tok = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+        toks = [tok]
+        for t in range(G - 1):
+            tok, cache = decode(params, mdev, tok, cache,
+                                jnp.asarray(P + t, jnp.int32))
+            toks.append(tok)
+        jax.block_until_ready(tok)
+        dt = time.perf_counter() - t0
+    gen = np.asarray(jnp.concatenate(toks, 1))
+    print("generated:", gen[:, :12])
+    print(f"{B} seqs x ({P} prefill + {G} decode) in {dt:.2f}s "
+          f"({B * G / dt:.1f} tok/s decode-equivalent)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

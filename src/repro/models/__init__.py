@@ -1,0 +1,1 @@
+from . import layers, moe, ssm, lm, resnet  # noqa: F401

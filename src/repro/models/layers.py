@@ -1,0 +1,176 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, gated FFN.
+
+All functions are pure: params are nested dicts of jnp arrays; mask trees ride
+alongside (core.linearize).  Attention is q-chunked (flash-style, full-row
+softmax per chunk) above a sequence threshold so 32k prefills never
+materialize (S, S) score tensors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linearize
+
+# ---------------------------------------------------------------- norms
+
+
+def rmsnorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    # variance reduce in f32, but scale applied in the stream dtype: keeps the
+    # full-tensor f32 copy out of the HLO (XLA hoists convert(saved_stack)
+    # out of the backward while-loop otherwise — 2× activation memory).
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * p["scale"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rope
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.log(theta) *
+                    jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]   # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    window: Optional[int] = None        # sliding-window size (None = full)
+    rope_theta: float = 1e4
+    q_chunk: int = 2048                 # chunk queries above this seq len
+
+
+def attn_init(key, c: AttnCfg, dtype=jnp.bfloat16):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, kvh, hd = c.d_model, c.n_heads, c.n_kv_heads, c.head_dim
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(kq, (d, h * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(kk, (d, kvh * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(kv, (d, kvh * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ko, (h * hd, d)) * (h * hd) ** -0.5
+               ).astype(dtype),
+    }
+    if c.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd)
+        p["k_norm"] = rmsnorm_init(hd)
+    return p
+
+
+def _attend(q, k, v, *, causal_offset, window, scale):
+    """q: (B,Sq,H,hd) k,v: (B,Sk,KV,hd). causal_offset = abs pos of q[0] - abs
+    pos of k[0] (so query i attends keys j with j <= i + causal_offset)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qh = q.reshape(B, Sq, KV, rep, hd)
+    scores = jnp.einsum("bqkrh,bskh->bkrqs", qh, k).astype(jnp.float32)
+    scores = scores * scale
+    qi = jnp.arange(Sq)[:, None] + causal_offset
+    kj = jnp.arange(k.shape[1])[None, :]
+    mask = kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attention(p, c: AttnCfg, x, positions, *, kv_cache=None, cache_len=None):
+    """Self-attention.  Training/prefill: kv_cache None -> causal over x.
+    Decode: kv_cache=(K,V) (B,Smax,KV,hd) updated at cache_len (static-shape
+    dynamic_update_slice); returns (out, new_cache)."""
+    B, S, d = x.shape
+    h, kvh, hd = c.n_heads, c.n_kv_heads, c.head_dim
+    q = (x @ p["wq"]).reshape(B, S, h, hd)
+    k = (x @ p["wk"]).reshape(B, S, kvh, hd)
+    v = (x @ p["wv"]).reshape(B, S, kvh, hd)
+    if c.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    q = rope(q, positions, c.rope_theta)
+    k = rope(k, positions, c.rope_theta)
+    scale = hd ** -0.5
+
+    if kv_cache is not None:
+        K, V = kv_cache
+        K = jax.lax.dynamic_update_slice(K, k.astype(K.dtype), (0, cache_len, 0, 0))
+        V = jax.lax.dynamic_update_slice(V, v.astype(V.dtype), (0, cache_len, 0, 0))
+        # mask out cache positions beyond cache_len + S
+        kj = jnp.arange(K.shape[1])
+        valid = kj < cache_len + S
+        out = _attend(q, jnp.where(valid[None, :, None, None], K, 0),
+                      jnp.where(valid[None, :, None, None], V, 0),
+                      causal_offset=cache_len, window=c.window, scale=scale)
+        # invalid keys masked via causal_offset anyway (kj <= i + cache_len)
+        out = out.reshape(B, S, h * hd)
+        return (out @ p["wo"]), (K, V)
+
+    if S <= c.q_chunk:
+        out = _attend(q, k, v, causal_offset=0, window=c.window, scale=scale)
+    else:
+        assert S % c.q_chunk == 0, (S, c.q_chunk)
+        nch = S // c.q_chunk
+        qs = q.reshape(B, nch, c.q_chunk, h, hd)
+
+        def chunk(i, q_i):
+            return _attend(q_i, k, v, causal_offset=i * c.q_chunk,
+                           window=c.window, scale=scale)
+        out = jax.lax.map(lambda args: chunk(*args),
+                          (jnp.arange(nch), qs.swapaxes(0, 1)))
+        out = out.swapaxes(0, 1).reshape(B, S, h, hd)
+    out = out.reshape(B, S, h * hd)
+    return out @ p["wo"], None
+
+
+# ---------------------------------------------------------------- gated FFN
+
+
+def ffn_init(key, d, f, *, gated=True, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = d ** -0.5
+    p = {"w_up": (jax.random.normal(k1, (d, f)) * s).astype(dtype),
+         "w_down": (jax.random.normal(k2, (f, d)) * f ** -0.5).astype(dtype)}
+    if gated:
+        p["w_gate"] = (jax.random.normal(k3, (d, f)) * s).astype(dtype)
+    return p
+
+
+def ffn(p, x, mask, site: linearize.MaskSite, *, poly=None, soft=False):
+    """Gated (SwiGLU-style) or plain FFN with the *masked* activation.
+
+    Masked semantics: act(h) at kept channels, identity (or poly2) at
+    linearized channels; for gated FFNs the gate branch activation is the
+    mask site (matching DESIGN §4).
+    """
+    h = x @ (p["w_gate"] if "w_gate" in p else p["w_up"])
+    a = linearize.apply_masked_act(h, mask, site, poly=poly, soft=soft)
+    if "w_gate" in p:
+        a = a * (x @ p["w_up"])
+    return a @ p["w_down"]

@@ -1,0 +1,437 @@
+"""Unified LM backbone for all assigned architectures.
+
+A model is head_blocks (unrolled) + a lax.scan over ``n_repeats`` copies of
+``cfg.pattern`` (stacked params ⇒ compact HLO, O(1) compile cost in depth) +
+a tail (pattern remainder, unrolled).  Block kinds: dense (attn+FFN), moe
+(attn+MoE), mamba (Mamba2), rwkv (RWKV-6 time+channel mix), attn_only
+(zamba2's shared attention block — params shared across repeats, caches not).
+
+Masks (core.linearize) attach to every block's elementwise nonlinearity and
+ride through the scan as stacked xs, so BCD candidate evaluation re-runs the
+same compiled forward with different mask values — no recompilation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, Block
+from repro.core import linearize
+from . import layers, moe as moe_lib, ssm
+
+# --------------------------------------------------------------- sub-configs
+
+
+def _attn_cfg(cfg: ArchConfig, blk: Block) -> layers.AttnCfg:
+    return layers.AttnCfg(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, qk_norm=cfg.qk_norm, window=blk.window,
+        rope_theta=blk.rope_theta)
+
+
+def _moe_cfg(cfg: ArchConfig) -> moe_lib.MoECfg:
+    return moe_lib.MoECfg(
+        d_model=cfg.d_model, n_experts=cfg.n_experts, top_k=cfg.top_k,
+        d_ff_expert=cfg.d_ff_expert,
+        n_shared=1 if cfg.n_shared_experts else 0,
+        d_ff_shared=cfg.d_ff_shared, capacity_factor=cfg.capacity_factor,
+        dispatch=cfg.moe_dispatch)
+
+
+def _mamba_cfg(cfg: ArchConfig) -> ssm.MambaCfg:
+    di = cfg.d_inner
+    return ssm.MambaCfg(d_model=cfg.d_model, d_inner=di,
+                        n_heads=di // cfg.mamba_head_dim,
+                        head_dim=cfg.mamba_head_dim, d_state=cfg.ssm_state)
+
+
+def _rwkv_cfg(cfg: ArchConfig) -> ssm.RWKVCfg:
+    return ssm.RWKVCfg(d_model=cfg.d_model, d_ff=cfg.d_ff,
+                       head_dim=cfg.rwkv_head_dim)
+
+
+def _sites_for(cfg: ArchConfig, blk: Block) -> Dict[str, linearize.MaskSite]:
+    rep = cfg.act_when_masked
+    if blk.kind == "dense":
+        return {"ffn": linearize.MaskSite((cfg.d_ff,), cfg.act, rep)}
+    if blk.kind == "moe":
+        out = {"moe": linearize.MaskSite(
+            (cfg.n_experts, cfg.d_ff_expert), cfg.act, rep)}
+        if cfg.n_shared_experts:
+            out["moe_shared"] = linearize.MaskSite(
+                (cfg.d_ff_shared,), cfg.act, rep)
+        return out
+    if blk.kind == "mamba":
+        return {"mamba": linearize.MaskSite((cfg.d_inner,), "silu", rep)}
+    if blk.kind == "rwkv":
+        return {"rwkv": linearize.MaskSite((cfg.d_ff,), "sqrelu", rep)}
+    return {}
+
+
+class LM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        # Set by the step factories (train/serve): PartitionSpec for the
+        # (B, S, D) activation stream.  GSPMD's fixpoint propagation drops the
+        # batch sharding across while-loop (scan) carries, so we re-assert it
+        # at the embed output and at every scan-body entry.
+        self.activation_spec: Optional[P] = None
+
+    def _constrain(self, x):
+        if self.activation_spec is not None:
+            return jax.lax.with_sharding_constraint(x, self.activation_spec)
+        return x
+
+    # ------------------------------------------------------------ init
+
+    def _layer_init(self, key, blk: Block):
+        cfg, dt = self.cfg, self.dtype
+        ks = jax.random.split(key, 2)
+        d = cfg.d_model
+        if blk.kind in ("dense", "moe", "attn_only"):
+            p = {"ln1": layers.rmsnorm_init(d),
+                 "attn": layers.attn_init(ks[0], _attn_cfg(cfg, blk), dt)}
+            if blk.kind == "dense":
+                p["ln2"] = layers.rmsnorm_init(d)
+                p["ffn"] = layers.ffn_init(ks[1], d, cfg.d_ff,
+                                           gated=cfg.gated_ffn, dtype=dt)
+            elif blk.kind == "moe":
+                p["ln2"] = layers.rmsnorm_init(d)
+                p["moe"] = moe_lib.moe_init(ks[1], _moe_cfg(cfg), dt)
+            return p
+        if blk.kind == "mamba":
+            return {"ln": layers.rmsnorm_init(d),
+                    "mamba": ssm.mamba_init(ks[0], _mamba_cfg(cfg), dt)}
+        if blk.kind == "rwkv":
+            return {"ln1": layers.rmsnorm_init(d),
+                    "ln2": layers.rmsnorm_init(d),
+                    "tmix": ssm.rwkv_init(ks[0], _rwkv_cfg(cfg), dt)}
+        raise ValueError(blk.kind)
+
+    def init(self, key):
+        cfg, dt = self.cfg, self.dtype
+        ke, kh, kst, kt = jax.random.split(key, 4)
+        params = {
+            "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model))
+                      * cfg.d_model ** -0.5).astype(dt),
+            "final_norm": layers.rmsnorm_init(cfg.d_model),
+            "head": [self._layer_init(jax.random.fold_in(kh, i), blk)
+                     for i, blk in enumerate(cfg.head_blocks)],
+            "tail": [self._layer_init(jax.random.fold_in(kt, i), blk)
+                     for i, blk in enumerate(cfg.tail)],
+        }
+        stack = {}
+        R = cfg.n_repeats
+        for pos, blk in enumerate(cfg.pattern):
+            kp = jax.random.fold_in(kst, pos)
+            if blk.shared:
+                stack[str(pos)] = self._layer_init(kp, blk)
+            else:
+                stack[str(pos)] = jax.vmap(
+                    lambda k, blk=blk: self._layer_init(k, blk)
+                )(jax.random.split(kp, R))
+        params["stack"] = stack
+        return params
+
+    # ------------------------------------------------------------ masks
+
+    def mask_sites(self) -> Dict[str, linearize.MaskSite]:
+        cfg = self.cfg
+        out = {}
+        for i, blk in enumerate(cfg.head_blocks):
+            for suf, site in _sites_for(cfg, blk).items():
+                out[f"h{i}.{suf}"] = site
+        for pos, blk in enumerate(cfg.pattern):
+            for suf, site in _sites_for(cfg, blk).items():
+                out[f"s{pos}.{suf}"] = dataclasses.replace(
+                    site, shape=(cfg.n_repeats,) + site.shape)
+        for i, blk in enumerate(cfg.tail):
+            for suf, site in _sites_for(cfg, blk).items():
+                out[f"t{i}.{suf}"] = site
+        return out
+
+    # unstacked site (per-layer) for use inside the scan body
+    def _site(self, blk: Block, suf: str) -> linearize.MaskSite:
+        return _sites_for(self.cfg, blk)[suf]
+
+    # ------------------------------------------------------------ blocks
+
+    def _layer_apply(self, blk: Block, p, x, msk, ply, soft, positions,
+                     cache, cache_len):
+        """One block.  msk/ply: dicts suffix->array (unstacked).  cache: dict
+        or None.  Returns (x, new_cache)."""
+        cfg = self.cfg
+        newc = {} if cache is not None else None
+        if blk.kind in ("dense", "moe", "attn_only"):
+            h = layers.rmsnorm(p["ln1"], x)
+            kv = None if cache is None else cache["kv"]
+            a, kv2 = layers.attention(p["attn"], _attn_cfg(cfg, blk), h,
+                                      positions, kv_cache=kv,
+                                      cache_len=cache_len)
+            x = x + a
+            if cache is not None:
+                newc["kv"] = kv2
+            if blk.kind == "dense":
+                h = layers.rmsnorm(p["ln2"], x)
+                x = x + layers.ffn(p["ffn"], h, msk["ffn"],
+                                   self._site(blk, "ffn"),
+                                   poly=ply.get("ffn"), soft=soft)
+            elif blk.kind == "moe":
+                h = layers.rmsnorm(p["ln2"], x)
+                mc = _moe_cfg(cfg)
+                x = x + moe_lib.moe_ffn(
+                    p["moe"], mc, h, msk["moe"], self._site(blk, "moe"),
+                    shared_mask=msk.get("moe_shared"),
+                    shared_site=(self._site(blk, "moe_shared")
+                                 if cfg.n_shared_experts else None),
+                    poly=ply.get("moe"), soft=soft,
+                    act_spec=self.activation_spec)
+            return x, newc
+        if blk.kind == "mamba":
+            h = layers.rmsnorm(p["ln"], x)
+            c = None if cache is None else (cache["ssm"], cache["conv"])
+            y, c2 = ssm.mamba_block(p["mamba"], _mamba_cfg(cfg), h,
+                                    msk["mamba"], self._site(blk, "mamba"),
+                                    poly=ply.get("mamba"), soft=soft, cache=c)
+            if cache is not None:
+                newc["ssm"], newc["conv"] = c2
+            return x + y, newc
+        if blk.kind == "rwkv":
+            rc = _rwkv_cfg(cfg)
+            h = layers.rmsnorm(p["ln1"], x)
+            c = None if cache is None else (cache["state"], cache["ptm"])
+            y, c2 = ssm.rwkv_time_mix(p["tmix"], rc, h, cache=c)
+            x = x + y
+            if cache is not None:
+                newc["state"], newc["ptm"] = c2
+            h = layers.rmsnorm(p["ln2"], x)
+            c = None if cache is None else cache["pcm"]
+            y, c2 = ssm.rwkv_channel_mix(p["tmix"], rc, h, msk["rwkv"],
+                                         self._site(blk, "rwkv"),
+                                         poly=ply.get("rwkv"), soft=soft,
+                                         cache=c)
+            if cache is not None:
+                newc["pcm"] = c2
+            return x + y, newc
+        raise ValueError(blk.kind)
+
+    # ------------------------------------------------------------ forward
+
+    def forward(self, params, masks, tokens, *, prefix_embeds=None,
+                poly=None, soft=False, cache=None, cache_len=0, remat=False,
+                return_hidden=False):
+        """Returns (logits (B,S,V), new_cache); with return_hidden=True the
+        first element is the final-norm hidden state (B,S,D) instead (the
+        caller owns the head matmul — e.g. chunked CE, §Perf)."""
+        cfg = self.cfg
+        poly = poly or {}
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        x = self._constrain(x)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(
+            (jnp.arange(S) + cache_len)[None, :], (B, S))
+
+        def msk_of(prefix):
+            return {k.split(".", 1)[1]: v for k, v in masks.items()
+                    if k.startswith(prefix + ".")}
+
+        def ply_of(prefix):
+            return {k.split(".", 1)[1]: v for k, v in poly.items()
+                    if k.startswith(prefix + ".")}
+
+        new_cache = {"head": [], "stack": {}, "tail": []} \
+            if cache is not None else None
+
+        for i, blk in enumerate(cfg.head_blocks):
+            c = None if cache is None else cache["head"][i]
+            x, nc = self._layer_apply(blk, params["head"][i], x,
+                                      msk_of(f"h{i}"), ply_of(f"h{i}"), soft,
+                                      positions, c, cache_len)
+            if cache is not None:
+                new_cache["head"].append(nc)
+
+        # ---- scanned stack
+        pattern = cfg.pattern
+        R = cfg.n_repeats
+        xs = {"params": {str(p): params["stack"][str(p)]
+                         for p, blk in enumerate(pattern) if not blk.shared},
+              "masks": {f"s{p}.{suf}": masks[f"s{p}.{suf}"]
+                        for p, blk in enumerate(pattern)
+                        for suf in _sites_for(cfg, blk)},
+              # stacked poly arrive as (3, R, ·) — scan slices dim 0, so
+              # move R first: (R, 3, ·)
+              "poly": {k: jnp.moveaxis(v, 1, 0)
+                       for k, v in poly.items() if k.startswith("s")}}
+        if cache is not None:
+            xs["cache"] = cache["stack"]
+
+        def body(x, sl):
+            x = self._constrain(x)
+            newcs = {}
+            for p, blk in enumerate(pattern):
+                lp = (params["stack"][str(p)] if blk.shared
+                      else sl["params"][str(p)])
+                msk = {k.split(".", 1)[1]: v for k, v in sl["masks"].items()
+                       if k.startswith(f"s{p}.")}
+                pl = {k.split(".", 1)[1]: v for k, v in sl["poly"].items()
+                      if k.startswith(f"s{p}.")}
+                c = sl["cache"][str(p)] if cache is not None else None
+                x, nc = self._layer_apply(blk, lp, x, msk, pl, soft,
+                                          positions, c, cache_len)
+                newcs[str(p)] = nc
+            return x, (newcs if cache is not None else None)
+
+        G = self.cfg.remat_group
+        if remat and cache is None and G > 1 and R % G == 0:
+            # Hierarchical remat: outer scan over R/G groups saves only
+            # group-boundary activations (G× less stacked-carry memory);
+            # the group forward is recomputed (with per-layer inner remat)
+            # during backward.  See EXPERIMENTS.md §Perf.
+            xsG = jax.tree.map(
+                lambda a: a.reshape((R // G, G) + a.shape[1:]), xs)
+            inner = jax.checkpoint(body)
+
+            def group_body(x, slG):
+                for g in range(G):
+                    x, _ = inner(x, jax.tree.map(lambda a: a[g], slG))
+                return x, None
+
+            x, scanned_cache = jax.lax.scan(jax.checkpoint(group_body), x,
+                                            xsG)
+        else:
+            body_fn = jax.checkpoint(body) if remat else body
+            x, scanned_cache = jax.lax.scan(body_fn, x, xs)
+        if cache is not None:
+            new_cache["stack"] = scanned_cache
+
+        for i, blk in enumerate(cfg.tail):
+            c = None if cache is None else cache["tail"][i]
+            x, nc = self._layer_apply(blk, params["tail"][i], x,
+                                      msk_of(f"t{i}"), ply_of(f"t{i}"), soft,
+                                      positions, c, cache_len)
+            if cache is not None:
+                new_cache["tail"].append(nc)
+
+        x = layers.rmsnorm(params["final_norm"], x)
+        if return_hidden:
+            return x, new_cache
+        logits = x @ params["embed"].T.astype(x.dtype)
+        return logits, new_cache
+
+    # ------------------------------------------------------------ cache
+
+    def _layer_cache(self, blk: Block, B: int, max_len: int):
+        cfg, dt = self.cfg, self.dtype
+        if blk.kind in ("dense", "moe", "attn_only"):
+            kv_shape = (B, max_len, cfg.n_kv_heads, cfg.head_dim)
+            return {"kv": (jnp.zeros(kv_shape, dt), jnp.zeros(kv_shape, dt))}
+        if blk.kind == "mamba":
+            mc = _mamba_cfg(cfg)
+            return {"ssm": jnp.zeros((B, mc.n_heads, mc.d_state, mc.head_dim),
+                                     jnp.float32),
+                    "conv": jnp.zeros((B, mc.d_conv - 1, mc.d_inner), dt)}
+        if blk.kind == "rwkv":
+            rc = _rwkv_cfg(cfg)
+            return {"state": jnp.zeros((B, rc.n_heads, rc.head_dim,
+                                        rc.head_dim), jnp.float32),
+                    "ptm": jnp.zeros((B, cfg.d_model), dt),
+                    "pcm": jnp.zeros((B, cfg.d_model), dt)}
+        raise ValueError(blk.kind)
+
+    def init_cache(self, B: int, max_len: int):
+        cfg = self.cfg
+        R = cfg.n_repeats
+        stack = {}
+        for pos, blk in enumerate(cfg.pattern):
+            one = self._layer_cache(blk, B, max_len)
+            stack[str(pos)] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (R,) + a.shape), one)
+        return {"head": [self._layer_cache(b, B, max_len)
+                         for b in cfg.head_blocks],
+                "stack": stack,
+                "tail": [self._layer_cache(b, B, max_len)
+                         for b in cfg.tail]}
+
+
+# =================================================================== specs
+
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "w_ck", "w_cr", "w_r", "w_k",
+        "w_v", "w_g", "w_w", "w_z", "w_x"}    # (..., in, out): TP on out
+_ROW = {"wo", "w_down", "w_out", "w_o", "w_cv"}  # (..., in, out): TP on in
+_FSDP_ONLY = {"router", "w_bcdt"}
+
+
+def _leaf_spec(name: str, shape, data: int, model: int,
+               fsdp: bool = True) -> P:
+    nd = len(shape)
+
+    def ok(dim_idx, axis_size):
+        return shape[dim_idx] % axis_size == 0
+
+    if name == "embed":
+        return P("model" if ok(0, model) else None, None)
+    if name in _COL:
+        sp = ["data" if fsdp and ok(nd - 2, data) else None,
+              "model" if ok(nd - 1, model) else None]
+    elif name in _ROW:
+        sp = ["model" if ok(nd - 2, model) else None,
+              "data" if fsdp and ok(nd - 1, data) else None]
+    elif name in _FSDP_ONLY:
+        sp = ["data" if fsdp and ok(nd - 2, data) else None, None]
+    elif name == "conv":
+        sp = [None, "model" if ok(nd - 1, model) else None]
+    else:
+        return P()
+    return P(*([None] * (nd - 2) + sp))
+
+
+def param_specs(params_shape, data: int, model: int, fsdp: bool = True):
+    """PartitionSpec tree mirroring the params tree (rule-based on leaf name).
+
+    data/model: mesh axis sizes (for divisibility checks).  fsdp=False turns
+    off the ZeRO-3 'data'-axis weight sharding (pure TP baseline).
+    """
+    def f(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        return _leaf_spec(name, leaf.shape, data, model, fsdp)
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def cache_specs(cache_shape, dp_axes: Tuple[str, ...], B: int, data: int,
+                model: int, shard_seq: bool = False):
+    """Sharding for decode caches.  KV caches: batch over dp axes (or the
+    sequence axis over 'data' when B == 1, long_500k), heads/state over
+    'model' when divisible."""
+    def f(path, leaf):
+        nd = len(leaf.shape)
+        if nd >= 3:  # kv (B,S,KV,hd) | ssm (B,nh,N,hd) | state (B,H,hd,hd)
+            batch_ok = B % (data) == 0 and B >= data
+            sp = [dp_axes if batch_ok and leaf.shape[0] % data == 0 else None]
+            if nd == 4 and leaf.shape[1] > 4096:      # kv cache: (B,S,KV,hd)
+                sp.append("data" if (shard_seq and not batch_ok and
+                                     leaf.shape[1] % data == 0) else None)
+                sp.append("model" if leaf.shape[2] % model == 0 else None)
+                sp.append(None if leaf.shape[2] % model == 0 else
+                          ("model" if leaf.shape[3] % model == 0 else None))
+            else:
+                sp.append("model" if leaf.shape[1] % model == 0 else None)
+                sp += [None] * (nd - 2)
+            return P(*sp)
+        if nd == 2:   # prev-token (B,d)
+            return P(dp_axes if leaf.shape[0] % data == 0 and B >= data
+                     else None,
+                     "model" if leaf.shape[1] % model == 0 else None)
+        return P()
+    return jax.tree_util.tree_map_with_path(f, cache_shape)

@@ -1,0 +1,189 @@
+"""Mixture-of-Experts FFN with sort-based (dropping) dispatch.
+
+Dispatch is done *per batch row* (vmap over B): top-k routing, argsort by
+expert id, capacity clip, gather → (E, C, d) → batched expert einsums →
+scatter-add back.  Because the sort runs over the (unsharded) sequence axis
+and batch is the data-parallel axis, GSPMD keeps all dispatch local to each
+data shard; expert weights are tensor-parallel over 'model' (d_ff split), so
+no quadratic one-hot dispatch matmuls and no token all-to-alls — FLOPs stay
+≈ top_k/E-proportional (MODEL_FLOPS ratio stays honest).
+
+Covers mixtral (8e top-2) and deepseek-moe (2 shared + 64e top-6,
+fine-grained d_ff).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linearize
+from . import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0            # deepseek: always-on shared experts
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    # 'scatter': d-wide scatter dispatch (baseline; GSPMD replicates the
+    #            scatter operands — see EXPERIMENTS.md §Perf).
+    # 'gather':  d-wide ops are gathers only; scatters touch int32 index
+    #            vectors (tiny).  GSPMD partitions gathers cleanly.
+    dispatch: str = "scatter"
+
+
+def moe_init(key, c: MoECfg, dtype=jnp.bfloat16):
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    d, e, f = c.d_model, c.n_experts, c.d_ff_expert
+    s = d ** -0.5
+    p = {
+        "router": (jax.random.normal(kr, (d, e)) * s).astype(jnp.float32),
+        "w_gate": (jax.random.normal(kg, (e, d, f)) * s).astype(dtype),
+        "w_up": (jax.random.normal(ku, (e, d, f)) * s).astype(dtype),
+        "w_down": (jax.random.normal(kd, (e, f, d)) * f ** -0.5).astype(dtype),
+    }
+    if c.n_shared:
+        p["shared"] = layers.ffn_init(ks, d, c.d_ff_shared, gated=True,
+                                      dtype=dtype)
+    return p
+
+
+def _capacity(c: MoECfg, seq: int) -> int:
+    cap = int(seq * c.top_k * c.capacity_factor / c.n_experts) + 1
+    if seq == 1:        # decode: exact capacity — a token routes to at most
+        return 1        # one slot per expert (§Perf: the rounded-up 8 slots
+                        # per expert cost 8x dispatch traffic per step)
+    return max(8, -(-cap // 8) * 8)  # round up to multiple of 8
+
+
+def _dispatch_row(x, logits, c: MoECfg, C: int):
+    """x: (S, d), logits: (S, E) -> gathered (E*C, d), slot bookkeeping."""
+    S = x.shape[0]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, eidx = jax.lax.top_k(probs, c.top_k)          # (S, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    flat_e = eidx.reshape(-1)                            # (S*k,)
+    flat_t = jnp.repeat(jnp.arange(S), c.top_k)
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    # position within expert along the sorted order
+    onehot = jax.nn.one_hot(se, c.n_experts, dtype=jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0), se[:, None],
+                              axis=1)[:, 0] - 1
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, c.n_experts * C)  # overflow slot
+    xg = jnp.zeros((c.n_experts * C + 1, x.shape[1]), x.dtype)
+    xg = xg.at[slot].set(jnp.where(keep[:, None], x[st], 0))
+    return xg[:-1], (st, sg, slot, keep)
+
+
+def _combine_row(y_slots, book, S, d):
+    st, sg, slot, keep = book
+    pad = jnp.zeros((1, d), y_slots.dtype)
+    ys = jnp.concatenate([y_slots, pad], axis=0)[slot]
+    w = (sg * keep).astype(ys.dtype)[:, None]
+    out = jnp.zeros((S, d), y_slots.dtype)
+    return out.at[st].add(ys * w)
+
+
+def _route(logits, c: MoECfg, C: int):
+    """Shared routing bookkeeping — only small int/float vectors, no d-wide
+    tensors.  Returns per-(token,k) slot ids and per-slot source tokens."""
+    S = logits.shape[0]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, eidx = jax.lax.top_k(probs, c.top_k)              # (S, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    flat_e = eidx.reshape(-1)                                # (S*k,)
+    order = jnp.argsort(flat_e)
+    se = flat_e[order]
+    st = jnp.repeat(jnp.arange(S), c.top_k)[order]
+    onehot = jax.nn.one_hot(se, c.n_experts, dtype=jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0), se[:, None],
+                              axis=1)[:, 0] - 1
+    keep = pos < C
+    slot_sorted = jnp.where(keep, se * C + pos, c.n_experts * C)
+    # per-slot source token (int32 scatter over E*C+1 — tiny)
+    slot_src = jnp.full((c.n_experts * C + 1,), S, jnp.int32)
+    slot_src = slot_src.at[slot_sorted].set(st.astype(jnp.int32))
+    # per-(token,k) slot id, unsorted (int32 scatter over S*k — tiny)
+    inv = jnp.zeros((S * c.top_k,), jnp.int32).at[order].set(
+        slot_sorted.astype(jnp.int32))
+    slot_tk = inv.reshape(S, c.top_k)
+    return gates, slot_src, slot_tk
+
+
+def moe_ffn(p, c: MoECfg, x, mask, site: linearize.MaskSite,
+            shared_mask=None, shared_site=None, *, poly=None, soft=False,
+            act_spec=None):
+    """x: (B, S, d).  mask: (E, F) per-expert channel masks.  act_spec: the
+    model's (B,S,D) PartitionSpec — its batch axes are re-asserted on the
+    (B,E,C,·) expert tensors (GSPMD drops batch sharding through the
+    dispatch gathers otherwise — §Perf, mixtral)."""
+    B, S, d = x.shape
+    C = _capacity(c, S)
+    bspec = act_spec[0] if act_spec is not None else None
+
+    def keep_batch(t, last=None):
+        if act_spec is None:
+            return t
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(
+            t, P(bspec, *([None] * (t.ndim - 2) + [last])))
+    logits = x.astype(jnp.float32) @ p["router"]
+
+    def experts(xe):
+        h = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+        # masked activation per expert: flatten (E, C, F) with (E, F) mask
+        a = linearize.apply_masked_act(
+            h.transpose(1, 0, 2), mask, site, poly=poly, soft=soft
+        ).transpose(1, 0, 2)
+        a = a * jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+        return jnp.einsum("ecf,efd->ecd", a, p["w_down"])
+
+    def row_scatter(xr, lr):
+        xg, book = _dispatch_row(xr, lr, c, C)
+        ye = experts(xg.reshape(c.n_experts, C, d))
+        return _combine_row(ye.reshape(-1, d), book, S, d)
+
+    def batched_gather(x, logits):
+        """Batched (vmap-free) gather dispatch: d-wide ops are batched
+        take_along_axis gathers, which GSPMD partitions along the batch axis
+        without replication (a vmapped per-row gather does not — §Perf)."""
+        gates, slot_src, slot_tk = jax.vmap(lambda lr: _route(lr, c, C))(
+            logits)
+        xpad = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+        xe = jnp.take_along_axis(
+            xpad, slot_src[:, :-1, None].astype(jnp.int32), axis=1)
+        xe = keep_batch(xe.reshape(B, c.n_experts, C, d))
+        h = keep_batch(jnp.einsum("becd,edf->becf", xe, p["w_gate"]),
+                       "model")
+        a = linearize.apply_masked_act(
+            h.transpose(0, 2, 1, 3), mask, site, poly=poly, soft=soft
+        ).transpose(0, 2, 1, 3)
+        a = a * jnp.einsum("becd,edf->becf", xe, p["w_up"])
+        ye = jnp.einsum("becf,efd->becd", a, p["w_down"]).reshape(B, -1, d)
+        ye = keep_batch(ye)
+        ypad = jnp.concatenate([ye, jnp.zeros((B, 1, d), ye.dtype)], axis=1)
+        idx = jnp.minimum(slot_tk, c.n_experts * C).reshape(B, -1)
+        ytk = jnp.take_along_axis(ypad, idx[..., None], axis=1)
+        ytk = ytk.reshape(B, S, c.top_k, d)
+        valid = (slot_tk < c.n_experts * C).astype(ytk.dtype)
+        w = gates.astype(ytk.dtype) * valid
+        return jnp.einsum("bskd,bsk->bsd", ytk, w)
+
+    if c.dispatch == "gather":
+        y = batched_gather(x, logits)
+    else:
+        y = jax.vmap(row_scatter)(x, logits)
+    if "shared" in p:
+        y = y + layers.ffn(p["shared"], x, shared_mask, shared_site,
+                           poly=None, soft=soft)
+    return y.astype(x.dtype)

@@ -1,0 +1,178 @@
+"""The paper's backbones: CIFAR-style ResNet18 and WideResNet-22-8.
+
+Every ReLU is a mask site with the *full per-pixel activation shape*
+(H, W, C), shared across the batch — exactly the paper's mask granularity
+(ResNet18 @32×32 ≈ 557K ReLUs; the paper's Table 1 says 570K — the delta is
+the counting convention for the stem ReLU, documented in EXPERIMENTS.md).
+
+BatchNorm uses batch statistics in both train and eval (synthetic-data
+reproduction; see DESIGN §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linearize
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout)) * (2.0 / fan) ** 0.5
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _bn(p, x, eps=1e-5):
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    n_classes: int
+    image_size: int
+    # (channels, n_blocks, stride) per stage
+    stages: Tuple[Tuple[int, int, int], ...]
+    stem_channels: int
+    wide: bool = False          # WRN pre-activation blocks
+
+    @staticmethod
+    def resnet18(n_classes=10, image_size=32):
+        return CNNConfig("resnet18", n_classes, image_size,
+                         ((64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2)),
+                         stem_channels=64)
+
+    @staticmethod
+    def wrn22_8(n_classes=10, image_size=32):
+        return CNNConfig("wrn22_8", n_classes, image_size,
+                         ((128, 3, 1), (256, 3, 2), (512, 3, 2)),
+                         stem_channels=16, wide=True)
+
+
+class CNN:
+    """Masked-ReLU CNN.  API mirrors models.lm.LM where it matters."""
+
+    def __init__(self, cfg: CNNConfig):
+        self.cfg = cfg
+        self._site_shapes = self._compute_site_shapes()
+
+    # ---------------------------------------------------------- structure
+
+    def _block_plan(self):
+        """Yields (stage, block, cin, cout, stride, hw) tuples."""
+        cfg = self.cfg
+        hw = cfg.image_size
+        cin = cfg.stem_channels
+        for si, (cout, n, stride) in enumerate(cfg.stages):
+            for bi in range(n):
+                s = stride if bi == 0 else 1
+                hw_out = hw // s
+                yield si, bi, cin, cout, s, hw_out
+                cin, hw = cout, hw_out
+
+    def _compute_site_shapes(self):
+        cfg = self.cfg
+        shapes: Dict[str, Tuple[int, ...]] = {}
+        if not cfg.wide:
+            shapes["stem.relu"] = (cfg.image_size, cfg.image_size,
+                                   cfg.stem_channels)
+        for si, bi, cin, cout, s, hw in self._block_plan():
+            if cfg.wide:
+                hw_in = hw * s
+                shapes[f"g{si}b{bi}.relu1"] = (hw_in, hw_in, cin)
+                shapes[f"g{si}b{bi}.relu2"] = (hw, hw, cout)
+            else:
+                shapes[f"g{si}b{bi}.relu1"] = (hw, hw, cout)
+                shapes[f"g{si}b{bi}.relu2"] = (hw, hw, cout)
+        if cfg.wide:
+            hw_f = cfg.image_size // 4
+            shapes["final.relu"] = (hw_f, hw_f, cfg.stages[-1][0])
+        return shapes
+
+    def mask_sites(self) -> Dict[str, linearize.MaskSite]:
+        return {k: linearize.MaskSite(v, "relu")
+                for k, v in self._site_shapes.items()}
+
+    def relu_count(self) -> int:
+        return sum(int(jnp.prod(jnp.asarray(s)))
+                   for s in self._site_shapes.values())
+
+    # ---------------------------------------------------------- params
+
+    def init(self, key):
+        cfg = self.cfg
+        p = {"stem": {"conv": _conv_init(jax.random.fold_in(key, 0), 3, 3, 3,
+                                         cfg.stem_channels),
+                      "bn": _bn_init(cfg.stem_channels)}}
+        for si, bi, cin, cout, s, hw in self._block_plan():
+            k = jax.random.fold_in(key, 100 + si * 10 + bi)
+            blk = {"conv1": _conv_init(jax.random.fold_in(k, 1), 3, 3, cin,
+                                       cout),
+                   "bn1": _bn_init(cin if cfg.wide else cout),
+                   "conv2": _conv_init(jax.random.fold_in(k, 2), 3, 3, cout,
+                                       cout),
+                   "bn2": _bn_init(cout)}
+            if s != 1 or cin != cout:
+                blk["proj"] = _conv_init(jax.random.fold_in(k, 3), 1, 1, cin,
+                                         cout)
+            p[f"g{si}b{bi}"] = blk
+        cfinal = cfg.stages[-1][0]
+        if cfg.wide:
+            p["final_bn"] = _bn_init(cfinal)
+        p["fc"] = {"w": jax.random.normal(jax.random.fold_in(key, 7),
+                                          (cfinal, cfg.n_classes))
+                   * cfinal ** -0.5,
+                   "b": jnp.zeros((cfg.n_classes,))}
+        return p
+
+    # ---------------------------------------------------------- forward
+
+    def _relu(self, x, masks, name, poly, soft):
+        site = linearize.MaskSite(self._site_shapes[name], "relu")
+        return linearize.apply_masked_act(
+            x, masks[name], site,
+            poly=None if poly is None else poly.get(name), soft=soft)
+
+    def forward(self, params, masks, images, *, poly=None, soft=False):
+        cfg = self.cfg
+        x = images
+        if cfg.wide:
+            x = _conv(x, params["stem"]["conv"])
+            for si, bi, cin, cout, s, hw in self._block_plan():
+                blk = params[f"g{si}b{bi}"]
+                h = self._relu(_bn(blk["bn1"], x), masks,
+                               f"g{si}b{bi}.relu1", poly, soft)
+                y = _conv(h, blk["conv1"], s)
+                y = self._relu(_bn(blk["bn2"], y), masks,
+                               f"g{si}b{bi}.relu2", poly, soft)
+                y = _conv(y, blk["conv2"])
+                sc = _conv(h, blk["proj"], s) if "proj" in blk else x
+                x = y + sc
+            x = self._relu(_bn(params["final_bn"], x), masks, "final.relu",
+                           poly, soft)
+        else:
+            x = _bn(params["stem"]["bn"], _conv(x, params["stem"]["conv"]))
+            x = self._relu(x, masks, "stem.relu", poly, soft)
+            for si, bi, cin, cout, s, hw in self._block_plan():
+                blk = params[f"g{si}b{bi}"]
+                y = self._relu(_bn(blk["bn1"], _conv(x, blk["conv1"], s)),
+                               masks, f"g{si}b{bi}.relu1", poly, soft)
+                y = _bn(blk["bn2"], _conv(y, blk["conv2"]))
+                sc = _conv(x, blk["proj"], s) if "proj" in blk else x
+                x = self._relu(y + sc, masks, f"g{si}b{bi}.relu2", poly, soft)
+        x = jnp.mean(x, axis=(1, 2))
+        return x @ params["fc"]["w"] + params["fc"]["b"]

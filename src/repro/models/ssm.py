@@ -1,0 +1,257 @@
+"""State-space / linear-attention blocks: Mamba2 (SSD) and RWKV-6 (Finch).
+
+Both are expressed as *chunked linear attention* — the TPU-native adaptation
+of the token-serial CUDA recurrences (DESIGN §3): intra-chunk work is dense
+einsums on the MXU, only chunk-boundary states are carried by lax.scan.
+The decode path is the exact O(1)-state recurrence (long_500k cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linearize
+from . import layers
+
+
+def linattn_chunked(r, k, v, w, u, s0, *, chunk: int, decay_first=False):
+    """Generalized decayed linear attention, chunked.
+
+    decay_first=False (RWKV convention):
+      y_t = r_t·S_{t-1} + (r·(u⊙k))·v_t ;  S_t = diag(w_t)·S_{t-1} + k_tᵀ v_t
+    decay_first=True (Mamba2/SSD convention):
+      S_t = diag(w_t)·S_{t-1} + k_tᵀ v_t ;  y_t = r_t·S_t        (u ignored)
+    r,k,w: (B,H,T,K)  v: (B,H,T,Vd)  u: (H,K) or None  s0: (B,H,K,Vd).
+    Returns y (B,H,T,Vd), S_end.  T % chunk == 0.
+    """
+    B, H, T, K = r.shape
+    Vd = v.shape[-1]
+    n = T // chunk
+    rc = r.reshape(B, H, n, chunk, K)
+    kc = k.reshape(B, H, n, chunk, K)
+    vc = v.reshape(B, H, n, chunk, Vd)
+    wc = w.reshape(B, H, n, chunk, K)
+
+    ti = jnp.arange(chunk)[:, None]
+    si = jnp.arange(chunk)[None, :]
+    tri = (si <= ti) if decay_first else (si < ti)
+
+    def step(S, xs):
+        rj, kj, vj, wj = xs  # (B,H,chunk,·)
+        p_incl = jnp.cumprod(wj, axis=2)
+        r_p = rj * (p_incl if decay_first else p_incl / wj)
+        k_p = kj / p_incl
+        scores = jnp.einsum("bhik,bhjk->bhij", r_p, k_p)
+        scores = jnp.where(tri[None, None], scores, 0.0)
+        if u is not None and not decay_first:
+            bonus = jnp.einsum("bhik,hk,bhik->bhi", rj, u, kj)
+            scores = scores + bonus[..., None] * jnp.eye(chunk)[None, None]
+        y = jnp.einsum("bhij,bhjv->bhiv", scores, vj)
+        y = y + jnp.einsum("bhik,bhkv->bhiv", r_p, S)
+        p_end = p_incl[:, :, -1]
+        k_end = kj * (p_end[:, :, None, :] / p_incl)
+        S1 = p_end[..., None] * S + jnp.einsum("bhjk,bhjv->bhkv", k_end, vj)
+        return S1, y
+
+    xs = (rc.transpose(2, 0, 1, 3, 4), kc.transpose(2, 0, 1, 3, 4),
+          vc.transpose(2, 0, 1, 3, 4), wc.transpose(2, 0, 1, 3, 4))
+    S_end, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, T, Vd)
+    return y.astype(r.dtype), S_end
+
+
+def linattn_step(r, k, v, w, u, S, decay_first=False):
+    """Single-token decode: shapes r,k,w (B,H,K), v (B,H,Vd), S (B,H,K,Vd)."""
+    if decay_first:
+        S = w[..., None] * S + k[..., None] * v[..., None, :]
+        return jnp.einsum("bhk,bhkv->bhv", r, S), S
+    y = jnp.einsum("bhk,bhkv->bhv", r, S)
+    if u is not None:
+        y = y + jnp.einsum("bhk,hk,bhk->bh", r, u, k)[..., None] * v
+    S = w[..., None] * S + k[..., None] * v[..., None, :]
+    return y, S
+
+
+# ================================================================= Mamba2
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaCfg:
+    d_model: int
+    d_inner: int        # typically 2·d_model
+    n_heads: int        # d_inner / head_dim
+    head_dim: int = 64
+    d_state: int = 64
+    d_conv: int = 4
+    chunk: int = 64
+
+
+def mamba_init(key, c: MambaCfg, dtype=jnp.bfloat16):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, di, nh, N = c.d_model, c.d_inner, c.n_heads, c.d_state
+    s = d ** -0.5
+    return {
+        # separate z/x projections: a fused (d, 2·di) weight's output gets
+        # SLICED at di, which crosses the model-shard boundary and makes
+        # GSPMD insert per-layer reshard collective-permutes (§Perf, zamba2)
+        "w_z": (jax.random.normal(k1, (d, di)) * s).astype(dtype),
+        "w_x": (jax.random.normal(jax.random.fold_in(k1, 1), (d, di))
+                * s).astype(dtype),
+        "conv": (jax.random.normal(k2, (c.d_conv, di)) * 0.1).astype(dtype),
+        "w_bcdt": (jax.random.normal(k3, (d, 2 * N + nh)) * s).astype(dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        # decay a_t = exp(-exp(A_log)·dt): init near 1 (≈0.99/token) — the
+        # chunked form divides by the in-chunk decay cumprod, so aggressive
+        # decay (A_log=0 ⇒ a≈0.5) overflows f32 within a 64-chunk.
+        "A_log": jnp.full((nh,), -4.0, jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "w_out": (jax.random.normal(k4, (di, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def _causal_conv(xin, conv, state=None):
+    """Depthwise causal conv over seq.  xin: (B,S,di); conv: (dc, di).
+    state: (B, dc-1, di) trailing inputs from previous steps (decode)."""
+    dc = conv.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(xin[:, : dc - 1])
+    else:
+        pad = state.astype(xin.dtype)
+    xp = jnp.concatenate([pad, xin], axis=1)
+    out = sum(xp[:, i:i + xin.shape[1]] * conv[i][None, None]
+              for i in range(dc))
+    new_state = xp[:, -(dc - 1):]
+    return out, new_state
+
+
+def mamba_block(p, c: MambaCfg, x, mask, site, *, poly=None, soft=False,
+                cache=None):
+    """x: (B,S,d).  cache: None | (ssm_state (B,nh,N,hd), conv_state).
+    Returns (y, new_cache)."""
+    B, S, d = x.shape
+    di, nh, hd, N = c.d_inner, c.n_heads, c.head_dim, c.d_state
+    z = x @ p["w_z"]
+    xin = x @ p["w_x"]
+    xin, conv_state = _causal_conv(
+        xin, p["conv"], None if cache is None else cache[1])
+    xin = jax.nn.silu(xin)
+    bcdt = x @ p["w_bcdt"]
+    b, cc, dt = bcdt[..., :N], bcdt[..., N:2 * N], bcdt[..., 2 * N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (B,S,nh)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)                          # (B,S,nh)
+    v = xin.reshape(B, S, nh, hd).transpose(0, 2, 1, 3)             # (B,nh,S,hd)
+    kk = (b[..., None, :] * dt[..., None]).transpose(0, 2, 1, 3)    # (B,nh,S,N)
+    rr = jnp.broadcast_to(cc[..., None, :], (B, S, nh, N)
+                          ).transpose(0, 2, 1, 3)
+    ww = jnp.broadcast_to(a[..., None], (B, S, nh, N)).transpose(0, 2, 1, 3)
+    kk = kk.astype(jnp.float32)
+    rr = rr.astype(jnp.float32)
+    s0 = (jnp.zeros((B, nh, N, hd), jnp.float32) if cache is None
+          else cache[0])
+    if S == 1 and cache is not None:
+        y1, S1 = linattn_step(rr[:, :, 0], kk[:, :, 0], v[:, :, 0].astype(
+            jnp.float32), ww[:, :, 0], None, s0, decay_first=True)
+        y = y1[:, :, None]
+    else:
+        y, S1 = linattn_chunked(rr, kk, v.astype(jnp.float32), ww, None, s0,
+                                chunk=min(c.chunk, S), decay_first=True)
+    y = y + p["D"][None, :, None, None] * v.astype(y.dtype)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, di).astype(x.dtype)
+    # masked gate: the block's maskable nonlinearity (DESIGN §4)
+    gate = linearize.apply_masked_act(z, mask, site, poly=poly, soft=soft)
+    y = y * gate
+    out = y @ p["w_out"]
+    new_cache = None if cache is None else (S1, conv_state)
+    return out, new_cache
+
+
+# ================================================================= RWKV-6
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVCfg:
+    d_model: int
+    d_ff: int
+    head_dim: int = 64
+    chunk: int = 32
+
+    @property
+    def n_heads(self):
+        return self.d_model // self.head_dim
+
+
+def rwkv_init(key, c: RWKVCfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 8)
+    d, f, H, hd = c.d_model, c.d_ff, c.n_heads, c.head_dim
+    s = d ** -0.5
+    proj = lambda k, m, n, sc: (jax.random.normal(k, (m, n)) * sc).astype(dtype)
+    return {
+        "mu": jnp.full((5, d), 0.5, jnp.float32),      # token-shift lerp r,k,v,w,g
+        "w_r": proj(ks[0], d, d, s), "w_k": proj(ks[1], d, d, s),
+        "w_v": proj(ks[2], d, d, s), "w_g": proj(ks[3], d, d, s),
+        "w_w": proj(ks[4], d, d, s * 0.1),
+        "w_bias": jnp.full((d,), -2.0, jnp.float32),
+        "u": (jax.random.normal(ks[5], (H, hd)) * 0.3).astype(jnp.float32),
+        "w_o": proj(ks[6], d, d, s),
+        "ln_x": layers.rmsnorm_init(hd),
+        "mu_c": jnp.full((2, d), 0.5, jnp.float32),    # channel-mix shift
+        "w_ck": proj(ks[7], d, f, s),
+        "w_cv": (jax.random.normal(jax.random.fold_in(key, 99), (f, d))
+                 * f ** -0.5).astype(dtype),
+        "w_cr": proj(jax.random.fold_in(key, 98), d, d, s),
+    }
+
+
+def _shift(x, prev):
+    """Token shift: returns x_{t-1} with x_{-1} = prev (B,d) (zeros if None)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, 0])
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def rwkv_time_mix(p, c: RWKVCfg, x, *, cache=None):
+    """cache: None | (state (B,H,hd,hd) f32, prev_x (B,d)).  -> (y, cache)."""
+    B, S, d = x.shape
+    H, hd = c.n_heads, c.head_dim
+    prev = None if cache is None else cache[1]
+    xs = _shift(x, prev)
+    mix = lambda i: (p["mu"][i] * x + (1 - p["mu"][i]) * xs).astype(x.dtype)
+    r = (mix(0) @ p["w_r"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (mix(1) @ p["w_k"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    v = (mix(2) @ p["w_v"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    wdec = jnp.exp(-jnp.exp((mix(3) @ p["w_w"]).astype(jnp.float32)
+                            + p["w_bias"]))
+    wdec = wdec.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(mix(4) @ p["w_g"])
+    s0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if cache is None
+          else cache[0])
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    if S == 1 and cache is not None:
+        y1, S1 = linattn_step(rf[:, :, 0], kf[:, :, 0], vf[:, :, 0],
+                              wdec[:, :, 0], p["u"], s0)
+        y = y1[:, :, None]
+    else:
+        y, S1 = linattn_chunked(rf, kf, vf, wdec, p["u"], s0,
+                                chunk=min(c.chunk, S))
+    y = layers.rmsnorm(p["ln_x"], y)                    # per-head norm
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, d).astype(x.dtype)
+    y = (y * g) @ p["w_o"]
+    new_cache = None if cache is None else (S1, x[:, -1])
+    return y, new_cache
+
+
+def rwkv_channel_mix(p, c: RWKVCfg, x, mask, site, *, poly=None, soft=False,
+                     cache=None):
+    """Channel-mix with the sqrelu mask site.  cache: prev_x (B,d) | None."""
+    prev = cache
+    xs = _shift(x, prev)
+    xk = (p["mu_c"][0] * x + (1 - p["mu_c"][0]) * xs).astype(x.dtype)
+    xr = (p["mu_c"][1] * x + (1 - p["mu_c"][1]) * xs).astype(x.dtype)
+    h = xk @ p["w_ck"]
+    a = linearize.apply_masked_act(h, mask, site, poly=poly, soft=soft)
+    y = (a @ p["w_cv"]) * jax.nn.sigmoid(xr @ p["w_cr"])
+    new_cache = None if cache is None else x[:, -1]
+    return y, new_cache

@@ -1,0 +1,1 @@
+from . import optimizer, train, serve, checkpoint, ft, pp  # noqa: F401

@@ -1,0 +1,111 @@
+"""Minimal optax-free optimizers: SGD(+momentum) and AdamW, cosine schedule.
+
+API (optax-like):
+    opt = sgd(lr=1e-3, momentum=0.9, schedule=cosine(1e-3, steps))
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine(base_lr: float, total_steps: int, min_lr: float = 0.0):
+    """Cosine annealing (Loshchilov & Hutter) — the paper's finetune schedule."""
+    def sched(step):
+        t = jnp.minimum(step, total_steps) / max(total_steps, 1)
+        return min_lr + 0.5 * (base_lr - min_lr) * (1 + jnp.cos(jnp.pi * t))
+    return sched
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr)
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: object        # momentum / first moment (pytree or None-like zeros)
+    nu: object        # second moment (AdamW only; zeros tree for SGD)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable   # (grads, state, params) -> (updates, new_state)
+
+
+def _zeros_like_tree(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def sgd(lr: float = 1e-3, momentum: float = 0.9,
+        schedule: Optional[Callable] = None,
+        weight_decay: float = 0.0, grad_clip: Optional[float] = None):
+    sched = schedule or constant(lr)
+
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), _zeros_like_tree(params),
+                        jnp.zeros(()))
+
+    def update(grads, state, params):
+        grads = _clip(grads, grad_clip)
+        lr_t = sched(state.step)
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+        def upd(m, p):
+            u = -lr_t * m
+            if weight_decay:
+                u = u - lr_t * weight_decay * p
+            return u.astype(p.dtype)
+        updates = jax.tree.map(upd, mu, params)
+        return updates, OptState(state.step + 1, mu, state.nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float = 3.5e-5, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          schedule: Optional[Callable] = None,
+          grad_clip: Optional[float] = None):
+    sched = schedule or constant(lr)
+
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), _zeros_like_tree(params),
+                        _zeros_like_tree(params))
+
+    def update(grads, state, params):
+        grads = _clip(grads, grad_clip)
+        step = state.step + 1
+        lr_t = sched(state.step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) *
+                          jnp.square(g.astype(n.dtype)), state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        def upd(m, n, p):
+            u = -lr_t * (m / bc1) / (jnp.sqrt(n / bc2) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p
+            return u.astype(p.dtype)
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, OptState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def _clip(grads, max_norm):
+    if not max_norm:
+        return grads
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)

@@ -1,0 +1,51 @@
+"""Optional pipeline parallelism: GPipe-style microbatch schedule.
+
+The canonical skew schedule expressed as a scan over clock ticks with a
+(n_stages, microbatch, ...) rolling buffer:
+
+    tick t: shift microbatch t into stage 0, run ALL stages in parallel
+            (vmap over the stacked stage axis), emit stage S-1's output.
+
+``jax.vmap(body)`` over the stage axis is exactly what a 'stage' mesh axis
+shards: placing the leading stage dimension of ``stage_params`` / the state
+buffer on a mesh axis turns the vmap into per-device stage execution and the
+roll into a ``collective_permute`` — the standard JAX pipelining recipe.
+Bubble fraction is (S-1)/(M+S-1); the dry-run meshes use DP×TP×FSDP instead
+because ≤32 B params on 512 chips needs no PP (DESIGN §5) — this module is
+the substrate for when depth × scale does.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def gpipe_forward(body: Callable, stage_params, micro_inputs):
+    """Run ``micro_inputs`` through a pipeline of homogeneous stages.
+
+    body:          (stage_param_tree, x) -> y   (one stage's forward)
+    stage_params:  pytree with leading stage axis S on every leaf
+    micro_inputs:  (M, micro_batch, ...) — M microbatches
+    Returns (M, micro_batch, ...) outputs, equivalent to applying the S
+    stages sequentially to each microbatch.
+    """
+    S = jax.tree.leaves(stage_params)[0].shape[0]
+    M = micro_inputs.shape[0]
+    state = jnp.zeros((S,) + micro_inputs.shape[1:], micro_inputs.dtype)
+
+    def tick(state, t):
+        inp = micro_inputs[jnp.clip(t, 0, M - 1)]
+        inp = jnp.where(t < M, inp, jnp.zeros_like(inp))
+        shifted = jnp.concatenate([inp[None], state[:-1]], axis=0)
+        new_state = jax.vmap(body)(stage_params, shifted)
+        return new_state, new_state[-1]
+
+    _, ys = jax.lax.scan(tick, state, jnp.arange(M + S - 1))
+    return ys[S - 1:]
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    """Idle fraction of the GPipe schedule — the classic (S-1)/(M+S-1)."""
+    return (n_stages - 1) / (n_micro + n_stages - 1)

@@ -1,0 +1,141 @@
+"""Serving: batched prefill + single-token decode with sharded caches.
+
+``decode_32k`` / ``long_500k`` cells lower ``serve_step`` — one new token
+against a KV cache (or SSM state) of the cell's seq_len.  Caches are jit
+inputs AND outputs with identical shardings (state-passing style), batch over
+DP axes; for long_500k (B=1) the KV-cache *sequence* axis shards over 'data'
+(sequence parallelism — DESIGN §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import lm as lm_lib
+
+
+@dataclasses.dataclass
+class ServeCfg:
+    dp_axes: Tuple[str, ...] = ("data",)
+    max_len: int = 32768
+    batch: int = 128
+    greedy: bool = True
+
+
+def make_prefill(model: lm_lib.LM):
+    def prefill(params, masks, tokens, cache, prefix_embeds=None):
+        logits, cache = model.forward(params, masks, tokens,
+                                      prefix_embeds=prefix_embeds,
+                                      cache=cache, cache_len=0)
+        return logits[:, -1], cache
+    return prefill
+
+
+def make_decode_step(model: lm_lib.LM):
+    def decode_step(params, masks, token, cache, cache_len):
+        """token (B,1) -> (next_token (B,1), cache)."""
+        logits, cache = model.forward(params, masks, token, cache=cache,
+                                      cache_len=cache_len)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return nxt, cache
+    return decode_step
+
+
+def serve_shardings(model: lm_lib.LM, mesh: Mesh, cfg: ServeCfg):
+    """(param_shardings, cache_shardings) for jit in/out_shardings."""
+    data = mesh.shape["data"]
+    model_ax = mesh.shape["model"]
+    dp_size = 1
+    for a in cfg.dp_axes:
+        dp_size *= mesh.shape[a]
+    pshapes = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    pspec = lm_lib.param_specs(pshapes, data, model_ax, fsdp=False)
+    cshapes = jax.eval_shape(
+        lambda: model.init_cache(cfg.batch, cfg.max_len))
+    cspec = _cache_specs(cshapes, cfg.dp_axes, dp_size, cfg.batch, data,
+                         model_ax)
+    to_sh = lambda t: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), t,
+        is_leaf=lambda x: isinstance(x, P))
+    return to_sh(pspec), to_sh(cspec)
+
+
+def _cache_specs(cache_shape, dp_axes, dp_size: int, B: int, data: int,
+                 model_ax: int):
+    """KV (B,S,KV,hd): batch over dp if divisible, else seq over 'data'
+    (B==1 long-context); heads (or head_dim) over 'model' when divisible.
+    SSM/RWKV states: batch over dp, heads over 'model'."""
+    batch_ok = B % dp_size == 0 and B >= dp_size
+
+    def f(path, leaf):
+        # stack entries carry a leading repeats dim — spec it None
+        stacked = any(getattr(p, "key", None) == "stack" for p in path)
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        nd = len(shape)
+        bspec = dp_axes if batch_ok else None
+        if nd == 4 and shape[1] >= 1024:               # KV cache (B,S,KV,hd)
+            seq = None if batch_ok else "data"
+            kv_ok = shape[2] % model_ax == 0
+            sp = P(bspec, seq, "model" if kv_ok else None,
+                   "model" if (not kv_ok and shape[3] % model_ax == 0)
+                   else None)
+        elif nd == 4:                                  # ssm/rwkv state
+            sp = P(bspec, "model" if shape[1] % model_ax == 0 else None,
+                   None, None)
+        elif nd == 3:                                  # conv state (B,dc-1,di)
+            sp = P(bspec, None,
+                   "model" if shape[2] % model_ax == 0 else None)
+        elif nd == 2:                                  # prev-token (B,d)
+            sp = P(bspec, "model" if shape[1] % model_ax == 0 else None)
+        else:
+            sp = P()
+        return P(None, *sp) if stacked else sp
+    return jax.tree_util.tree_map_with_path(f, cache_shape)
+
+
+def _set_act_spec(model, mesh, cfg):
+    dp = _dp(mesh, cfg.dp_axes)
+    b = cfg.dp_axes if (cfg.batch % dp == 0 and cfg.batch >= dp) else None
+    model.activation_spec = P(b, None, None)
+    return b
+
+
+def jit_prefill(model: lm_lib.LM, mesh: Mesh, cfg: ServeCfg,
+                with_prefix: bool = False):
+    _set_act_spec(model, mesh, cfg)
+    psh, csh = serve_shardings(model, mesh, cfg)
+    prefill = make_prefill(model)
+    bsp = cfg.dp_axes if (cfg.batch % _dp(mesh, cfg.dp_axes) == 0
+                          and cfg.batch >= _dp(mesh, cfg.dp_axes)) else None
+    tok_sh = NamedSharding(mesh, P(bsp, None))
+    ins = [psh, NamedSharding(mesh, P()), tok_sh, csh]
+    if with_prefix:
+        ins.append(tok_sh)          # (B, P, D): batch-sharded prefix
+    return jax.jit(prefill, in_shardings=tuple(ins),
+                   out_shardings=(tok_sh, csh), donate_argnums=(3,))
+
+
+def jit_decode_step(model: lm_lib.LM, mesh: Mesh, cfg: ServeCfg):
+    _set_act_spec(model, mesh, cfg)
+    psh, csh = serve_shardings(model, mesh, cfg)
+    step = make_decode_step(model)
+    tok_sh = NamedSharding(
+        mesh, P(cfg.dp_axes if cfg.batch % max(
+            1, _dp(mesh, cfg.dp_axes)) == 0 and cfg.batch >= _dp(
+                mesh, cfg.dp_axes) else None, None))
+    return jax.jit(
+        step,
+        in_shardings=(psh, NamedSharding(mesh, P()), tok_sh, csh, None),
+        out_shardings=(tok_sh, csh),
+        donate_argnums=(3,))
+
+
+def _dp(mesh, dp_axes):
+    n = 1
+    for a in dp_axes:
+        n *= mesh.shape[a]
+    return n

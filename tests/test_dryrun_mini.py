@@ -1,0 +1,99 @@
+"""Dry-run machinery on a small forced-device mesh (subprocess — XLA device
+count must be set before jax init).  The full 512-device × 80-cell sweep runs
+via ``python -m repro.launch.dryrun`` (results in reports/dryrun)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import dataclasses, json, sys
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.configs import get_config, ShapeCell, input_specs
+from repro.models.lm import LM
+from repro.training import optimizer as opt_lib, train as train_lib
+from repro.analysis import roofline as rl
+
+mesh = Mesh(np.array(jax.devices()).reshape(4, 4), ("data", "model"))
+cfg = dataclasses.replace(
+    get_config(sys.argv[1]), n_layers=None, d_model=512, n_heads=8,
+    n_kv_heads=4, head_dim=64, d_ff=1024, vocab=2048)
+cfg = dataclasses.replace(cfg, n_layers=len(cfg.head_blocks) + 2*len(cfg.pattern) + 0)
+if cfg.n_experts:
+    cfg = dataclasses.replace(cfg, n_experts=8, top_k=2, d_ff_expert=256,
+                              d_ff_shared=256 if cfg.n_shared_experts else 0)
+if cfg.ssm_state:
+    cfg = dataclasses.replace(cfg, ssm_state=16)
+model = LM(cfg)
+shape = ShapeCell("mini", 256, 16, "train")
+opt = opt_lib.adamw(lr=1e-4)
+tcfg = train_lib.TrainStepCfg(remat=True, dp_axes=("data",))
+with mesh:
+    step = train_lib.jit_train_step(model, opt, mesh, tcfg)
+    state_sds = jax.eval_shape(lambda: train_lib.make_state(model, opt, jax.random.PRNGKey(0)))
+    m_sds = {k: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+             for k, s in model.mask_sites().items()}
+    lowered = step.lower(state_sds, input_specs(cfg, shape), m_sds)
+    compiled = lowered.compile()
+ca = compiled.cost_analysis()
+st = rl.parse_collectives(compiled.as_text(), 16, loop_trip_count=cfg.n_repeats)
+out = {"flops": float(ca.get("flops", 0)),
+       "collective_bytes": st.bytes_moved_global,
+       "counts": st.counts,
+       "mem": compiled.memory_analysis().temp_size_in_bytes}
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.parametrize("arch", ["stablelm_1p6b", "mixtral_8x22b",
+                                  "zamba2_2p7b"])
+def test_mini_dryrun_lowers_compiles_and_analyzes(arch):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    p = subprocess.run([sys.executable, "-c", _SCRIPT, arch], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert p.returncode == 0, p.stderr[-2000:]
+    line = [l for l in p.stdout.splitlines() if l.startswith("RESULT ")][0]
+    out = json.loads(line.split(" ", 1)[1])
+    assert out["flops"] > 0
+    assert out["collective_bytes"] > 0      # sharded step must communicate
+    assert out["mem"] > 0
+
+
+def test_production_mesh_shapes():
+    script = (
+        "import os; "
+        "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=512'; "
+        "from repro.launch.mesh import make_production_mesh; "
+        "m1 = make_production_mesh(); m2 = make_production_mesh(multi_pod=True); "
+        "assert m1.shape == {'data': 16, 'model': 16}, m1.shape; "
+        "assert m2.shape == {'pod': 2, 'data': 16, 'model': 16}, m2.shape; "
+        "assert m1.size == 256 and m2.size == 512; print('MESH OK')")
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    p = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "MESH OK" in p.stdout
+
+
+def test_sweep_results_if_present():
+    """If the full sweep has run, every non-skipped cell must be error-free
+    and applicable cells must cover all 10 archs × 4 shapes × 2 meshes."""
+    d = os.path.join(ROOT, "reports", "dryrun")
+    if not os.path.isdir(d) or len(os.listdir(d)) < 80:
+        pytest.skip("full sweep not run in this environment")
+    base = [f for f in os.listdir(d)
+            if f.endswith(".json") and f.count(".") == 3]
+    recs = [json.load(open(os.path.join(d, f))) for f in base]
+    errs = [r for r in recs if "error" in r]
+    assert not errs, [e["arch"] + ":" + e.get("shape", "") for e in errs]
+    ok = [r for r in recs if "skipped" not in r]
+    for r in ok:
+        assert r["roofline_fraction"] > 0
+        assert r["t_compute_s"] > 0

@@ -1,0 +1,107 @@
+"""Per-kernel correctness: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes / dtypes / activation kinds, plus hypothesis properties."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.masked_act import masked_act_2d
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+KINDS = ["relu", "gelu", "silu", "sqrelu"]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("shape", [(8, 128), (37, 200), (128, 512), (3, 64)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_masked_act_matches_oracle(kind, shape, dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=shape).astype(dtype))
+    m = jnp.asarray((rng.random(shape[1]) > 0.5).astype(np.float32))
+    want = ref.masked_act_ref(x, m, kind=kind)
+    got = masked_act_2d(x, m, kind=kind, interpret=True,
+                        block_rows=16, block_cols=128)
+    tol = 1e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("kind", ["relu", "gelu"])
+def test_masked_act_poly_matches_oracle(kind):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(33, 130)).astype(np.float32))
+    m = jnp.asarray((rng.random(130) > 0.3).astype(np.float32))
+    poly = jnp.asarray(rng.normal(size=(3, 130)).astype(np.float32) * 0.1)
+    want = ref.masked_act_ref(x, m, kind=kind, poly=poly)
+    got = masked_act_2d(x, m, poly, kind=kind, interpret=True,
+                        block_rows=8, block_cols=128)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(rows=st.integers(1, 64), cols=st.integers(1, 300),
+       frac=st.floats(0, 1), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_masked_act_mask_semantics(rows, cols, frac, seed):
+    """mask==1 ⇒ act(x); mask==0 ⇒ x (identity replacement) — exactly."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32))
+    m = jnp.asarray((rng.random(cols) < frac).astype(np.float32))
+    y = np.asarray(ref.masked_act_ref(x, m, kind="relu"))
+    xn = np.asarray(x)
+    keep = np.asarray(m) > 0.5
+    np.testing.assert_allclose(y[:, keep], np.maximum(xn[:, keep], 0))
+    np.testing.assert_allclose(y[:, ~keep], xn[:, ~keep])
+
+
+def test_full_mask_is_pure_activation_and_zero_mask_is_identity():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(16, 128)).astype(np.float32))
+    ones = jnp.ones((128,))
+    zeros = jnp.zeros((128,))
+    got = masked_act_2d(x, ones, kind="silu", interpret=True)
+    np.testing.assert_allclose(got, jax.nn.silu(x), rtol=1e-6, atol=1e-6)
+    got = masked_act_2d(x, zeros, kind="silu", interpret=True)
+    np.testing.assert_allclose(got, x, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("T,K,V,chunk", [(32, 8, 8, 8), (64, 16, 32, 16),
+                                         (64, 8, 16, 32)])
+def test_rwkv6_pallas_vs_scan(T, K, V, chunk):
+    rng = np.random.default_rng(3)
+    BH = 4
+    r = jnp.asarray(rng.normal(size=(BH, T, K)).astype(np.float32)) * 0.5
+    k = jnp.asarray(rng.normal(size=(BH, T, K)).astype(np.float32)) * 0.5
+    v = jnp.asarray(rng.normal(size=(BH, T, V)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.7, 0.999, size=(BH, T, K)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(BH, K)).astype(np.float32)) * 0.3
+    s0 = jnp.asarray(rng.normal(size=(BH, K, V)).astype(np.float32)) * 0.1
+    y_ref, s_ref = ops._rwkv6_scan_jnp(r, k, v, w, u, s0)
+    y_pl, s_pl = rwkv6_scan(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(y_pl, y_ref, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(s_pl, s_ref, rtol=3e-4, atol=3e-4)
+
+
+def test_rwkv6_scan_oracle_vs_python_loop():
+    rng = np.random.default_rng(4)
+    T, K, V = 24, 4, 8
+    r, k = (jnp.asarray(rng.normal(size=(1, T, K)).astype(np.float32))
+            for _ in range(2))
+    v = jnp.asarray(rng.normal(size=(1, T, V)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.8, 1, size=(1, T, K)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(1, K)).astype(np.float32))
+    s0 = jnp.zeros((1, K, V))
+    y1, s1 = ref.rwkv6_chunk_ref(r[0], k[0], v[0], w[0], u[0], s0[0])
+    y2, s2 = ops._rwkv6_scan_jnp(r, k, v, w, u, s0)
+    np.testing.assert_allclose(y2[0], y1, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(s2[0], s1, rtol=2e-5, atol=2e-5)
+
+
+def test_ops_dispatch_cpu_uses_ref():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(4, 8, 16)).astype(np.float32))
+    m = jnp.asarray(np.ones(16, np.float32))
+    out = ops.masked_act(x, m, kind="gelu")
+    np.testing.assert_allclose(out, ref.masked_act_ref(x, m, kind="gelu"))

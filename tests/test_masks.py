@@ -1,0 +1,69 @@
+"""Property tests for the mask-tree algebra (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks as M
+
+
+def _tree(seed, n_sites=3, max_dim=40):
+    rng = np.random.default_rng(seed)
+    return {f"s{i}": (rng.random(rng.integers(1, max_dim, size=2))
+                      > 0.3).astype(np.float32)
+            for i in range(n_sites)}
+
+
+@given(seed=st.integers(0, 10**6), drc=st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_sample_removal_block_invariants(seed, drc):
+    masks = _tree(seed)
+    before = M.count(masks)
+    rng = np.random.default_rng(seed + 1)
+    cand = M.sample_removal_block(rng, masks, drc)
+    after = M.count(cand)
+    assert after == before - min(drc, before)       # removes exactly drc
+    assert M.is_subset(cand, masks)                 # eliminate-only
+    assert M.count(masks) == before                 # input untouched
+
+
+@given(seed=st.integers(0, 10**6), budget=st.integers(0, 500))
+@settings(max_examples=30, deadline=None)
+def test_threshold_exact_budget(seed, budget):
+    rng = np.random.default_rng(seed)
+    soft = {f"s{i}": rng.random((7, 11)).astype(np.float32)
+            for i in range(3)}
+    hard = M.threshold(soft, budget)
+    assert M.count(hard) == min(budget, M.total_size(soft))
+    # keeps the largest coordinates
+    flat_soft = np.concatenate([soft[k].reshape(-1) for k in sorted(soft)])
+    flat_hard = np.concatenate([hard[k].reshape(-1) for k in sorted(hard)])
+    if 0 < budget < flat_soft.size:
+        kept_min = flat_soft[flat_hard > 0.5].min()
+        dropped_max = flat_soft[flat_hard < 0.5].max()
+        assert kept_min >= dropped_max - 1e-7
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(max_examples=20, deadline=None)
+def test_iou_subset_is_one(seed):
+    masks = _tree(seed)
+    rng = np.random.default_rng(seed)
+    sub = M.sample_removal_block(rng, masks, 5)
+    assert M.intersection_over_union(sub, masks) == 1.0
+    assert M.is_subset(sub, masks)
+
+
+def test_flatten_roundtrip():
+    masks = _tree(0)
+    flat, layout = M._flatten(masks)
+    back = M._unflatten(flat, layout)
+    for k in masks:
+        np.testing.assert_array_equal(masks[k], back[k])
+
+
+def test_per_site_counts_and_distribution():
+    masks = {"a": np.ones((4, 4), np.float32),
+             "b": np.zeros((3,), np.float32)}
+    assert M.per_site_counts(masks) == {"a": 16, "b": 0}
+    from repro.core import analysis
+    dist = analysis.layer_distribution(masks)
+    assert dist == {"a": (16, 16), "b": (0, 3)}

@@ -1,0 +1,68 @@
+"""Paper backbones: ReLU counts (Table 1 convention) + training sanity."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import linearize, masks as M
+from repro.data import ImageDatasetCfg, SyntheticImages
+from repro.models.resnet import CNN, CNNConfig
+from repro.training import optimizer as opt_lib, train as train_lib
+
+
+def test_relu_counts_match_paper_table1_convention():
+    """Paper Table 1: ResNet18@32 = 570K, WRN22-8@32 = 1359K.  Our counting
+    convention (every post-BN ReLU site) lands within 2.5% — the deltas are
+    documented in EXPERIMENTS.md."""
+    r18 = CNN(CNNConfig.resnet18(10, 32)).relu_count()
+    wrn = CNN(CNNConfig.wrn22_8(10, 32)).relu_count()
+    assert abs(r18 - 570_000) / 570_000 < 0.025, r18
+    assert abs(wrn - 1_359_000) / 1_359_000 < 0.025, wrn
+    r18_64 = CNN(CNNConfig.resnet18(200, 64)).relu_count()
+    assert r18_64 == 4 * r18                      # conv scaling, 64x64
+
+
+def test_mask_sites_cover_every_relu():
+    m = CNN(CNNConfig.resnet18(10, 32))
+    sites = m.mask_sites()
+    assert sum(int(np.prod(s.shape)) for s in sites.values()) \
+        == m.relu_count()
+    # per-pixel masks: site shapes are (H, W, C)
+    assert all(len(s.shape) == 3 for s in sites.values())
+
+
+@pytest.mark.parametrize("make", [CNNConfig.resnet18, CNNConfig.wrn22_8])
+def test_cnn_trains_on_synthetic(make):
+    cfg = make(4, 16)   # tiny images for speed; structure identical
+    model = CNN(cfg)
+    data = SyntheticImages(ImageDatasetCfg(n_classes=4, image_size=16,
+                                           n_train=128, n_test=32))
+    params = model.init(jax.random.PRNGKey(0))
+    opt = opt_lib.sgd(lr=2e-2, momentum=0.9)
+    step, _ = train_lib.make_cnn_train_step(model, opt)
+    masks = M.as_device(linearize.init_masks(model.mask_sites()))
+    batches = data.batches("train", 16)
+    ostate = opt.init(params)
+    losses = []
+    for i in range(30):
+        b = {k: jnp.asarray(v) for k, v in batches(i).items()}
+        params, ostate, loss, acc = step(params, ostate, masks, b)
+        losses.append(float(loss))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])   # learning happens
+
+
+def test_masked_forward_differs_but_stays_finite():
+    cfg = CNNConfig.resnet18(10, 16)
+    model = CNN(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    masks0 = linearize.init_masks(model.mask_sites())
+    rng = np.random.default_rng(0)
+    half = M.threshold({k: rng.random(v.shape).astype(np.float32)
+                        for k, v in masks0.items()},
+                       M.count(masks0) // 2)
+    x = jnp.asarray(rng.normal(size=(2, 16, 16, 3)), jnp.float32)
+    l_full = model.forward(params, M.as_device(masks0), x)
+    l_half = model.forward(params, M.as_device(half), x)
+    assert bool(jnp.isfinite(l_half).all())
+    assert not np.allclose(np.asarray(l_full), np.asarray(l_half))

@@ -1,0 +1,110 @@
+"""Selective baselines (SNL / AutoReP) — behaviour on a tiny masked CNN."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import autorep, linearize, masks as M, snl
+from repro.data import ImageDatasetCfg, SyntheticImages
+from repro.models.resnet import CNN, CNNConfig
+from repro.training import train as train_lib, optimizer as opt_lib
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = CNNConfig("tiny", 4, 16, ((8, 1, 1), (16, 1, 2)), stem_channels=8)
+    model = CNN(cfg)
+    data = SyntheticImages(ImageDatasetCfg(n_classes=4, image_size=16,
+                                           n_train=256, n_test=64))
+    params = model.init(jax.random.PRNGKey(0))
+    _, loss_fn = train_lib.make_cnn_train_step(
+        model, opt_lib.sgd(lr=1e-2))
+    batches_np = data.batches("train", 32)
+    batches = lambda i: {k: jnp.asarray(v) for k, v in batches_np(i).items()}
+    return model, data, params, loss_fn, batches
+
+
+def test_snl_reaches_budget_and_masks_binary(setup):
+    model, data, params, loss_fn, batches = setup
+    sites = model.mask_sites()
+    alphas = {k: jnp.ones(s.shape) for k, s in sites.items()}
+    total = sum(int(np.prod(s.shape)) for s in sites.values())
+    target = total // 2
+
+    def soft_loss(p, a, batch, soft):
+        logits = model.forward(p, a, batch["images"], soft=soft)
+        loss = train_lib.cross_entropy(logits, batch["labels"])
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"])
+                       .astype(jnp.float32)) * 100
+        return loss, acc
+
+    cfg = snl.SNLConfig(b_target=target, lam0=5e-4, kappa=1.5,
+                        epochs=6, steps_per_epoch=5, lr=5e-2,
+                        finetune_steps=10)
+    res = snl.run_snl(params, alphas, soft_loss, batches, cfg)
+    assert M.count(res.masks) == target               # exact after threshold
+    for v in res.masks.values():
+        assert set(np.unique(v)).issubset({0.0, 1.0})  # binary
+    assert len(res.budget_per_epoch) >= 1
+    # λ grows when sparsification stalls
+    assert res.lam_per_epoch[-1] >= res.lam_per_epoch[0]
+    # snapshots recorded for the IoU (Fig. 6) analysis
+    assert len(res.snapshots) == len(res.budget_per_epoch)
+
+
+def test_autorep_reaches_budget_with_poly_replacement(setup):
+    model, data, params, loss_fn, batches = setup
+    sites = {k: linearize.MaskSite(s.shape, "relu", "poly2")
+             for k, s in model.mask_sites().items()}
+    alphas = {k: jnp.full(s.shape, 0.5) for k, s in sites.items()}
+    poly = linearize.init_poly(sites)
+    assert poly  # poly2 coefficients exist
+    total = sum(int(np.prod(s.shape)) for s in sites.values())
+    target = total // 2
+
+    def loss3(p, m, q, batch, soft):
+        logits = model.forward(p, m, batch["images"], poly=q, soft=soft)
+        loss = train_lib.cross_entropy(logits, batch["labels"])
+        return loss, 0.0
+
+    cfg = autorep.AutoRepConfig(b_target=target, epochs=4, steps_per_epoch=5,
+                                lr=5e-2, finetune_steps=8)
+    res = autorep.run_autorep(params, alphas, poly, loss3, batches, cfg)
+    assert M.count(res.masks) == target
+    # poly coefficients were trained (moved off identity init)
+    moved = sum(float(jnp.sum(jnp.abs(res.poly[k][0]))) for k in res.poly)
+    assert np.isfinite(moved)
+
+
+def test_hysteresis_indicator():
+    a = jnp.asarray([0.2, -0.2, 0.01, -0.01])
+    m_prev = jnp.asarray([1.0, 1.0, 0.0, 1.0])
+    m = autorep._ste_indicator(a, m_prev, h=0.05)
+    got = np.asarray(jax.lax.stop_gradient(m))
+    # >h -> 1; <-h -> 0; in the hysteresis band -> keep previous
+    np.testing.assert_array_equal(got, [1.0, 0.0, 0.0, 1.0])
+
+
+def test_snl_finetune_improves_thresholded_model(setup):
+    """The paper's motivation: hard thresholding costs accuracy; finetuning
+    recovers (some of) it."""
+    model, data, params, loss_fn, batches = setup
+    sites = model.mask_sites()
+    rng = np.random.default_rng(0)
+    soft = {k: rng.random(s.shape).astype(np.float32)
+            for k, s in sites.items()}
+    total = sum(int(np.prod(s.shape)) for s in sites.values())
+    hard = M.threshold(soft, total // 3)
+    eval_batch = {k: jnp.asarray(v)
+                  for k, v in data.train_eval_set(128).items()}
+
+    def acc_of(p):
+        logits = model.forward(p, M.as_device(hard), eval_batch["images"])
+        return float(jnp.mean((jnp.argmax(logits, -1) ==
+                               eval_batch["labels"]).astype(jnp.float32)))
+    before = acc_of(params)
+    p2 = snl.finetune(params, hard,
+                      lambda p, m, b, soft: loss_fn(p, m, b, soft),
+                      batches, steps=30, lr=3e-2)
+    after = acc_of(p2)
+    assert after >= before - 1e-9

