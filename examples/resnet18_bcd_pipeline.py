@@ -2,17 +2,21 @@
 vs SNL(B_target) head-to-head (Fig. 1 / Table 3 protocol, synthetic CIFAR).
 
     PYTHONPATH=src python examples/resnet18_bcd_pipeline.py \
-        [--image-size 16] [--ref-frac 0.6] [--target-frac 0.4] [--full]
+        [--image-size 16] [--ref-frac 0.6] [--target-frac 0.4] [--full] \
+        [--engine batched] [--chunk-size 8]
 
 --full uses the real ResNet18 geometry at 32x32 (slow on CPU); the default
-uses a reduced stage plan with the same code path.
+uses a reduced stage plan with the same code path.  --engine selects the BCD
+candidate-evaluation backend (core.engine): 'sequential' is the reference,
+'batched' vmaps candidate chunks into one jitted call, 'sharded' additionally
+lays the candidate axis out across all local devices.
 """
 import argparse
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import bcd, linearize, masks as M
+from repro.core import bcd, engine, linearize, masks as M
 from repro.core.snl import SNLConfig, finetune, run_snl
 from repro.data import ImageDatasetCfg, SyntheticImages
 from repro.models.resnet import CNN, CNNConfig
@@ -25,6 +29,9 @@ def main():
     ap.add_argument("--ref-frac", type=float, default=0.6)
     ap.add_argument("--target-frac", type=float, default=0.4)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--engine", default="batched",
+                    choices=["sequential", "batched", "sharded"])
+    ap.add_argument("--chunk-size", type=int, default=8)
     args = ap.parse_args()
 
     if args.full:
@@ -76,24 +83,36 @@ def main():
                                 finetune_steps=15))
     acc_snl = test_acc(res_snl.params, res_snl.masks)
 
-    print("== BCD from B_ref to B_target (ours)")
-    eval_b = {k: jnp.asarray(v) for k, v in data.train_eval_set(128).items()}
+    print(f"== BCD from B_ref to B_target (ours, engine={args.engine})")
+    eval_b = data.train_eval_set(128)
 
-    @jax.jit
-    def train_acc(p, m):
-        logits = model.forward(p, m, eval_b["images"])
-        return jnp.mean((jnp.argmax(logits, -1) == eval_b["labels"])
-                        .astype(jnp.float32)) * 100
-
+    # The candidate engine: params are evaluator *context* (a jit input)
+    # because finetuning rewrites them between outer steps.
     holder = {"params": res_ref.params}
-    res_bcd = bcd.run_bcd(
-        res_ref.masks,
-        bcd.BCDConfig(b_target=b_target,
-                      drc=max(1, (b_ref - b_target) // 5), rt=6, adt=0.3),
-        lambda m: float(train_acc(holder["params"], M.as_device(m))),
-        finetune=lambda m: holder.update(params=finetune(
-            holder["params"], m, sloss, batches, steps=12, lr=1e-2)),
-        verbose=True)
+    bcd_cfg = bcd.BCDConfig(
+        b_target=b_target, drc=max(1, (b_ref - b_target) // 5), rt=6,
+        adt=0.3, chunk_size=args.chunk_size)
+    eval_fn_p = model.make_param_eval_fn(eval_b)
+    acc_jit = jax.jit(eval_fn_p)
+    eval_acc = lambda m: float(acc_jit(M.as_device(m), holder["params"]))
+    if args.engine == "sequential":
+        evaluator = engine.make_evaluator("sequential", eval_acc=eval_acc)
+    else:
+        evaluator = engine.make_evaluator(
+            args.engine, eval_fn=eval_fn_p,
+            # don't let ragged-chunk padding exceed RT (sharded may still
+            # round up to the device count; extras are sliced off)
+            pad_to=min(bcd_cfg.chunk_size, bcd_cfg.rt),
+            context=holder["params"])
+
+    def ft(m):
+        holder["params"] = finetune(holder["params"], m, sloss, batches,
+                                    steps=12, lr=1e-2)
+        if args.engine != "sequential":
+            evaluator.set_context(holder["params"])
+
+    res_bcd = bcd.run_bcd(res_ref.masks, bcd_cfg, eval_acc, finetune=ft,
+                          evaluator=evaluator, verbose=True)
     acc_bcd = test_acc(holder["params"], res_bcd.masks)
 
     print(f"\n=== results at B_target={b_target} ===")

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import bcd, linearize, masks as M
+from repro.core import bcd, engine, linearize, masks as M
 from repro.data import MarkovTokens
 from repro.models.lm import LM
 from repro.training import checkpoint, ft
@@ -90,19 +90,24 @@ def main():
     eval_b = {k: jnp.asarray(v)
               for k, v in mt.batch(16, args.seq, 10**6).items()}
 
-    @jax.jit
-    def token_acc(m):
+    def token_acc_fn(m):
         logits, _ = model.forward(state["params"], m, eval_b["tokens"])
         return jnp.mean((jnp.argmax(logits, -1) == eval_b["labels"])
                         .astype(jnp.float32)) * 100
 
+    token_acc = jax.jit(token_acc_fn)
     masks_h = linearize.init_masks(model.mask_sites())
     total = M.count(masks_h)
+    # Candidate trials go through the batched engine: one vmapped jitted
+    # call per chunk of candidate mask trees (masks ride the scanned stack
+    # as jit inputs — no recompilation across candidates).
     res = bcd.run_bcd(
         masks_h,
         bcd.BCDConfig(b_target=total // 2, drc=max(1, total // 10), rt=4,
-                      adt=0.5, finetune_every_step=False),
-        lambda m: float(token_acc(M.as_device(m))), verbose=True)
+                      adt=0.5, finetune_every_step=False, chunk_size=4),
+        lambda m: float(token_acc(M.as_device(m))),
+        evaluator=engine.BatchedEvaluator(token_acc_fn, pad_to=4),
+        verbose=True)
     print(f"BCD: kept {M.count(res.masks)}/{total} FFN nonlinearities; "
           f"token acc {float(token_acc(M.as_device(res.masks))):.1f}%")
 

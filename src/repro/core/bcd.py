@@ -30,6 +30,24 @@ class BCDConfig:
     adt: float = 0.3              # accuracy degradation tolerance [%]
     finetune_every_step: bool = True
     seed: int = 0
+    chunk_size: int = 8           # candidates per evaluator call
+
+    def validate(self) -> None:
+        """Raise ValueError on configs that cannot run (Alg. 2 needs at
+        least one trial per step to pick a block from)."""
+        if self.b_target < 0:
+            raise ValueError(f"b_target must be >= 0, got {self.b_target}")
+        if self.drc <= 0:
+            raise ValueError(f"drc must be > 0, got {self.drc}")
+        if self.rt <= 0:
+            raise ValueError(
+                f"rt must be > 0, got {self.rt}: every outer step needs at "
+                "least one candidate trial to select a removal block")
+        if self.chunk_size <= 0:
+            raise ValueError(
+                f"chunk_size must be > 0, got {self.chunk_size}")
+        if not math.isfinite(self.adt):
+            raise ValueError(f"adt must be finite, got {self.adt}")
 
 
 @dataclasses.dataclass
@@ -52,19 +70,76 @@ class BCDResult:
     mask_snapshots: List[M.MaskTree]  # for IoU / golden-set analysis
 
 
+def _select_block(
+    masks: M.MaskTree,
+    cfg: BCDConfig,
+    rng: np.random.Generator,
+    evaluator,
+    drc_t: int,
+    acc_base: float,
+):
+    """One outer step's trial loop: sample RT candidate blocks, evaluate in
+    chunks of ``cfg.chunk_size``, return the accepted candidate.
+
+    Selection is backend-independent: candidates are scanned in sampling
+    order; the *first* candidate with drop < adt wins (ADT early exit —
+    later chunks are never evaluated); otherwise the first-occurrence argmin
+    over all RT.  The rng always burns exactly RT draws per step so early
+    exit does not desynchronize subsequent steps across backends.
+
+    Returns (candidate_tree, best_idx, best_drop, trials_evaluated, found).
+    """
+    indices = M.sample_removal_indices(rng, masks, drc_t, cfg.rt)
+    flat, layout = M._flatten(masks)     # once per step, not per chunk
+    # Backends may cap the chunk (SequentialEvaluator wants 1 so the ADT
+    # exit never pays for unevaluated chunk-mates); selection is invariant.
+    chunk_size = min(
+        cfg.chunk_size,
+        getattr(evaluator, "preferred_chunk", None) or cfg.chunk_size)
+    best_idx, best_drop, found, n_done = -1, float("inf"), False, 0
+    for start in range(0, cfg.rt, chunk_size):
+        stop = min(start + chunk_size, cfg.rt)
+        chunk = M.materialize_from_flat(flat, layout, indices[start:stop])
+        drops = acc_base - evaluator.evaluate(chunk)
+        for j, drop in enumerate(np.asarray(drops, dtype=np.float64)):
+            n_done += 1
+            if drop < best_drop:
+                best_idx, best_drop = start + j, float(drop)
+            if drop < cfg.adt:
+                found = True
+                break
+        if found:
+            break
+    if best_idx < 0:
+        raise RuntimeError(
+            "BCD trial loop produced no candidate: evaluator returned "
+            f"{n_done} results for rt={cfg.rt} trials")
+    cand = M.materialize_from_flat(flat, layout,
+                                   indices[best_idx:best_idx + 1])
+    return M.index_stacked(cand, 0), best_idx, best_drop, n_done, found
+
+
 def run_bcd(
     masks: M.MaskTree,
     cfg: BCDConfig,
     eval_acc: Callable[[M.MaskTree], float],
     finetune: Optional[Callable[[M.MaskTree], None]] = None,
     *,
+    evaluator=None,
     verbose: bool = False,
     keep_snapshots: bool = False,
 ) -> BCDResult:
     """Run Alg. 2 until ||m||_0 == cfg.b_target.
 
     Accuracies are in percent (0..100).  ΔAcc = acc(m) − acc(m⊙block).
+    ``evaluator`` is a core.engine.CandidateEvaluator for the trial loop
+    (defaults to SequentialEvaluator over ``eval_acc``); ``eval_acc`` is
+    always used for the per-step base / post-finetune accuracies.
     """
+    cfg.validate()
+    if evaluator is None:
+        from . import engine
+        evaluator = engine.SequentialEvaluator(eval_acc)
     rng = np.random.default_rng(cfg.seed)
     masks = {k: np.array(v, dtype=np.float32) for k, v in masks.items()}
     b_ref = M.count(masks)
@@ -81,17 +156,8 @@ def run_bcd(
         if drc_t <= 0:
             break
         acc_base = float(eval_acc(masks))
-        best_cand, best_drop, found = None, float("inf"), False
-        n = 0
-        while n < cfg.rt and not found:
-            cand = M.sample_removal_block(rng, masks, drc_t)
-            drop = acc_base - float(eval_acc(cand))
-            if drop < best_drop:
-                best_cand, best_drop = cand, drop
-            if drop < cfg.adt:
-                found = True
-            n += 1
-        masks = best_cand
+        masks, _, best_drop, n, found = _select_block(
+            masks, cfg, rng, evaluator, drc_t, acc_base)
         acc_after = None
         if finetune is not None and cfg.finetune_every_step:
             finetune(masks)
@@ -108,6 +174,13 @@ def run_bcd(
             print(f"[bcd] t={t} budget {log.budget_before}->{log.budget_after}"
                   f" trials={n} early={found} drop={best_drop:.3f}%"
                   f" acc={acc_base:.2f}->"
-                  f"{acc_after if acc_after is not None else float('nan'):.2f}")
-    assert M.count(masks) == cfg.b_target, (M.count(masks), cfg.b_target)
+                  f"{acc_after if acc_after is not None else float('nan'):.2f}"
+                  f" [{getattr(evaluator, 'name', '?')}]")
+    final = M.count(masks)
+    if final != cfg.b_target:
+        raise RuntimeError(
+            f"BCD terminated at budget {final}, target {cfg.b_target} "
+            f"(b_ref={b_ref}, drc={cfg.drc}, steps run={len(history)}/"
+            f"{t_total}) — the schedule did not reach the target; check "
+            "drc/b_target against the initial mask count")
     return BCDResult(masks, history, snaps)

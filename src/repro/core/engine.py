@@ -1,0 +1,180 @@
+"""Candidate-evaluation engine for BCD (Alg. 2's hot path).
+
+One BCD outer step evaluates up to RT candidate mask trees; the engine decides
+*how*.  All backends implement the :class:`CandidateEvaluator` protocol —
+``evaluate(stacked_tree) -> (n,) accuracies`` — and are interchangeable from
+``run_bcd``'s point of view:
+
+``SequentialEvaluator``
+    The reference: one jitted forward per candidate, host loop.  Exactly the
+    seed repo's behavior, kept for equivalence testing and tiny configs where
+    vmap compile time dominates.
+
+``BatchedEvaluator``
+    Stacks the candidate axis through ``jax.vmap`` and evaluates a whole chunk
+    in a single jitted call.  Masks stay jit *inputs* (no recompile across
+    chunks); ragged final chunks are padded to the chunk size so the jit cache
+    holds exactly one entry per (chunk, shapes) signature.
+
+``ShardedEvaluator``
+    BatchedEvaluator plus ``jax.sharding``: the candidate axis is laid out
+    across every device of a mesh (``launch.mesh``), so RT trials cost
+    RT / n_devices forward passes of wall-clock.  Falls back gracefully to a
+    1-device mesh (where it equals BatchedEvaluator).
+
+Backends must rank candidates identically: ``run_bcd`` breaks ties by first
+occurrence, and all backends evaluate candidates in sampling order, so for a
+given seed/config every backend selects the same block (tested in
+``tests/test_bcd_parallel.py``).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Protocol, runtime_checkable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import masks as M
+
+# eval_fn: traceable (device mask tree) -> scalar accuracy in percent.
+EvalFn = Callable[[dict], jnp.ndarray]
+
+
+@runtime_checkable
+class CandidateEvaluator(Protocol):
+    """Evaluates a *stacked* candidate mask tree -> per-candidate accuracy."""
+
+    name: str
+    # Chunk size the backend wants from run_bcd's trial loop; None defers to
+    # cfg.chunk_size.  Chunking never changes selection (rng burns RT draws
+    # per step regardless), so this is a pure performance hint.
+    preferred_chunk: Optional[int]
+
+    def evaluate(self, stacked: M.MaskTree) -> np.ndarray:
+        """stacked: {site: (n, *shape)} -> float64 (n,) accuracies [%]."""
+        ...
+
+
+class SequentialEvaluator:
+    """Reference backend: unstack and evaluate one candidate at a time."""
+
+    name = "sequential"
+    # One candidate per chunk: evaluating a whole chunk before checking the
+    # ADT exit would waste up to chunk-1 forwards on this host-loop backend.
+    preferred_chunk = 1
+
+    def __init__(self, eval_acc: Callable[[M.MaskTree], float]):
+        self._eval_acc = eval_acc
+
+    def evaluate(self, stacked: M.MaskTree) -> np.ndarray:
+        n = M.stacked_len(stacked)
+        return np.array([float(self._eval_acc(M.index_stacked(stacked, i)))
+                         for i in range(n)], dtype=np.float64)
+
+
+class BatchedEvaluator:
+    """vmap-over-masks backend: one jitted call per chunk of candidates."""
+
+    name = "batched"
+    preferred_chunk = None
+
+    def __init__(self, eval_fn: EvalFn, *, pad_to: Optional[int] = None,
+                 context=None):
+        """eval_fn: traceable single-tree accuracy (device arrays in/out).
+        pad_to: pad ragged candidate axes up to this size (use the BCD
+        chunk_size) so jit sees one leading-dim signature.
+        context: optional pytree (e.g. model params) passed to eval_fn as a
+        second argument and mapped over with in_axes=None.  It is a jit
+        *input*, not a closure constant — callers that finetune params
+        between outer steps update it via :meth:`set_context` and the
+        compiled executable picks up the new values without retracing."""
+        self._has_ctx = context is not None
+        self.context = context
+        if self._has_ctx:
+            self._vmapped = jax.jit(jax.vmap(eval_fn, in_axes=(0, None)))
+        else:
+            self._vmapped = jax.jit(jax.vmap(eval_fn))
+        self._pad_to = pad_to
+
+    def set_context(self, context) -> None:
+        """Swap the auxiliary context (same treedef/shapes: no recompile)."""
+        if not self._has_ctx:
+            raise ValueError("evaluator was built without a context")
+        self.context = context
+
+    def _device_batch(self, stacked: M.MaskTree):
+        return {k: jnp.asarray(v, dtype=jnp.float32)
+                for k, v in stacked.items()}
+
+    def evaluate(self, stacked: M.MaskTree) -> np.ndarray:
+        n = M.stacked_len(stacked)
+        if self._pad_to is not None and n < self._pad_to:
+            stacked = M.pad_stacked(stacked, self._pad_to)
+        batch = self._device_batch(stacked)
+        accs = self._vmapped(batch, self.context) if self._has_ctx \
+            else self._vmapped(batch)
+        return np.asarray(accs, dtype=np.float64)[:n]
+
+
+class ShardedEvaluator(BatchedEvaluator):
+    """Batched backend with the candidate axis sharded across a mesh.
+
+    Every mesh axis contributes to the candidate sharding (a pure
+    candidate-parallel layout); candidate counts are padded up to the device
+    count so the leading axis always divides evenly.
+    """
+
+    name = "sharded"
+
+    def __init__(self, eval_fn: EvalFn, mesh, *, pad_to: Optional[int] = None,
+                 context=None):
+        super().__init__(eval_fn, pad_to=pad_to, context=context)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        self._mesh = mesh
+        self._n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        self._sharding = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+
+    def _device_batch(self, stacked: M.MaskTree):
+        n = M.stacked_len(stacked)
+        pad = -n % self._n_dev
+        if pad:
+            stacked = M.pad_stacked(stacked, n + pad)
+        return {k: jax.device_put(np.asarray(v, dtype=np.float32),
+                                  self._sharding)
+                for k, v in stacked.items()}
+
+
+def make_evaluator(
+    backend: str,
+    *,
+    eval_acc: Optional[Callable[[M.MaskTree], float]] = None,
+    eval_fn: Optional[EvalFn] = None,
+    mesh=None,
+    pad_to: Optional[int] = None,
+    context=None,
+) -> CandidateEvaluator:
+    """Factory: ``backend`` in {'sequential', 'batched', 'sharded'}.
+
+    sequential needs ``eval_acc`` (host callable); batched/sharded need
+    ``eval_fn`` (traceable); sharded defaults to a mesh over all local
+    devices when ``mesh`` is None.
+    """
+    if backend == "sequential":
+        if eval_acc is None:
+            raise ValueError("sequential backend needs eval_acc")
+        return SequentialEvaluator(eval_acc)
+    if backend == "batched":
+        if eval_fn is None:
+            raise ValueError("batched backend needs a traceable eval_fn")
+        return BatchedEvaluator(eval_fn, pad_to=pad_to, context=context)
+    if backend == "sharded":
+        if eval_fn is None:
+            raise ValueError("sharded backend needs a traceable eval_fn")
+        if mesh is None:
+            from repro.launch import mesh as mesh_lib
+            mesh = mesh_lib.make_candidate_mesh()
+        return ShardedEvaluator(eval_fn, mesh, pad_to=pad_to,
+                                context=context)
+    raise ValueError(f"unknown evaluator backend {backend!r}; expected "
+                     "'sequential' | 'batched' | 'sharded'")

@@ -82,6 +82,126 @@ def sample_removal_block(
     return _unflatten(new_flat, layout)
 
 
+# ------------------------------------------------------------ stacked trees
+#
+# A *stacked* mask tree carries ``n`` candidate trees along a leading axis:
+# ``{site: (n, *site_shape)}``.  The batched/sharded evaluators (core.engine)
+# consume stacked trees whole — one jitted vmap call evaluates all n
+# candidates — so every helper here must index/slice consistently across
+# sites.  Sampling is split into *index* sampling (tiny: (n, drc) ints) and
+# *materialization* (per-chunk, so RT full-size candidate trees never live in
+# host memory at once).
+
+
+def sample_removal_indices(
+    rng: np.random.Generator, masks: MaskTree, drc: int, n: int
+) -> np.ndarray:
+    """Sample ``n`` independent removal blocks as flat-coordinate indices.
+
+    Row ``i`` is bit-identical to the ``rng.choice`` draw the ``i``-th
+    sequential :func:`sample_removal_block` call would make from the same
+    generator state — the engine relies on this for backend equivalence.
+    Returns an (n, k) int array, k = min(drc, #active).
+    """
+    active, _ = active_indices(masks)
+    k = min(drc, active.size)
+    return np.stack([rng.choice(active, size=k, replace=False)
+                     for _ in range(n)]) if n else \
+        np.zeros((0, k), dtype=np.int64)
+
+
+def materialize_from_flat(flat: np.ndarray, layout: list,
+                          indices: np.ndarray) -> MaskTree:
+    """Stacked candidate tree from a pre-flattened base mask.
+
+    The hot path: BCD flattens the base tree once per outer step and
+    materializes each chunk from (flat, layout) without re-concatenating
+    the whole tree per chunk."""
+    n = indices.shape[0]
+    stacked = np.broadcast_to(flat, (n, flat.size)).copy()
+    np.put_along_axis(stacked, indices, 0.0, axis=1)
+    return unflatten_stacked(stacked, layout)
+
+
+def materialize_candidates(masks: MaskTree, indices: np.ndarray) -> MaskTree:
+    """Build the stacked candidate tree for (n, k) removal ``indices``."""
+    flat, layout = _flatten(masks)
+    return materialize_from_flat(flat, layout, indices)
+
+
+def sample_removal_blocks(
+    rng: np.random.Generator, masks: MaskTree, drc: int, n: int
+) -> MaskTree:
+    """Vectorized :func:`sample_removal_block`: ``n`` candidates, stacked.
+
+    Candidate ``i`` equals the tree ``i`` sequential calls would produce
+    (same rng draw order), so backends that pre-sample match backends that
+    sample lazily."""
+    return materialize_candidates(
+        masks, sample_removal_indices(rng, masks, drc, n))
+
+
+def unflatten_stacked(stacked_flat: np.ndarray, layout: list) -> MaskTree:
+    """(n, total) flat candidates -> stacked tree {site: (n, *shape)}."""
+    n = stacked_flat.shape[0]
+    out = {}
+    for k, off, sz, shape in layout:
+        out[k] = stacked_flat[:, off:off + sz].reshape((n,) + tuple(shape)) \
+            .astype(np.float32)
+    return out
+
+
+def flatten_stacked(stacked: MaskTree) -> Tuple[np.ndarray, list]:
+    """Inverse of :func:`unflatten_stacked` (layout shapes are per-site)."""
+    keys = sorted(stacked.keys())
+    n = next(iter(stacked.values())).shape[0]
+    flat = np.concatenate([stacked[k].reshape(n, -1) for k in keys], axis=1)
+    layout, off = [], 0
+    for k in keys:
+        sz = int(np.prod(stacked[k].shape[1:], dtype=np.int64))
+        layout.append((k, off, sz, stacked[k].shape[1:]))
+        off += sz
+    return flat, layout
+
+
+def stack_trees(trees: Iterable[MaskTree]) -> MaskTree:
+    """Stack individual mask trees along a new leading candidate axis."""
+    trees = list(trees)
+    return {k: np.stack([t[k] for t in trees]) for k in trees[0]}
+
+
+def stacked_len(stacked: MaskTree) -> int:
+    return int(next(iter(stacked.values())).shape[0])
+
+
+def index_stacked(stacked: MaskTree, i: int) -> MaskTree:
+    """Candidate ``i`` of a stacked tree, as an ordinary mask tree."""
+    return {k: np.asarray(v[i], dtype=np.float32)
+            for k, v in stacked.items()}
+
+
+def slice_stacked(stacked: MaskTree, start: int, stop: int) -> MaskTree:
+    return {k: v[start:stop] for k, v in stacked.items()}
+
+
+def pad_stacked(stacked: MaskTree, n: int) -> MaskTree:
+    """Pad the candidate axis to ``n`` by repeating the last candidate
+    (keeps jit cache keys stable across ragged final chunks)."""
+    have = stacked_len(stacked)
+    if have >= n:
+        return stacked
+    return {k: np.concatenate(
+        [v, np.broadcast_to(v[-1:], (n - have,) + v.shape[1:])])
+        for k, v in stacked.items()}
+
+
+def stacked_counts(stacked: MaskTree) -> np.ndarray:
+    """Per-candidate ||m||_0 over a stacked tree — vectorized ``count``."""
+    n = stacked_len(stacked)
+    return sum(np.sum(v.reshape(n, -1) > 0.5, axis=1) for v in
+               stacked.values()).astype(np.int64)
+
+
 def remove_random(rng: np.random.Generator, masks: MaskTree, n: int) -> MaskTree:
     """Uniform random removal (the naive baseline BCD is compared against)."""
     return sample_removal_block(rng, masks, n)

@@ -108,3 +108,89 @@ def masked_act_2d(
     if pr or pc:
         out = out[:rows, :cols]
     return out
+
+
+# ------------------------------------------------------------ batched masks
+#
+# BCD's batched candidate engine evaluates a *stack* of N mask candidates in
+# one call: x is (N, rows, cols) (the same activations replicated or
+# per-candidate), mask is (N, cols) — one mask row per candidate.  We add a
+# leading candidate grid dimension with block size 1: each (b, i, j) program
+# owns one (block_rows × block_cols) tile of candidate b, and the mask tile
+# (1, 1, block_cols) broadcasts over rows exactly like the 2D kernel.  Poly
+# coefficients are per-site, not per-candidate, so they are shared across b.
+
+
+def _masked_act_kernel_b(x_ref, m_ref, o_ref, *, kind: str):
+    x = x_ref[...]                       # (1, br, bc)
+    m = m_ref[...].astype(x.dtype)       # (1, 1, bc)
+    y = _act_tile(x, kind)
+    o_ref[...] = m * y + (1.0 - m) * x
+
+
+def _masked_act_poly_kernel_b(x_ref, m_ref, p_ref, o_ref, *, kind: str):
+    x = x_ref[...]                       # (1, br, bc)
+    m = m_ref[...].astype(x.dtype)       # (1, 1, bc)
+    p = p_ref[...].astype(x.dtype)       # (1, 3, bc) — candidate-shared
+    y = _act_tile(x, kind)
+    lin = p[:, 0:1, :] * x * x + p[:, 1:2, :] * x + p[:, 2:3, :]
+    o_ref[...] = m * y + (1.0 - m) * lin
+
+
+def masked_act_2d_batched(
+    x: jax.Array,
+    mask: jax.Array,
+    poly: jax.Array | None = None,
+    *,
+    kind: str = "relu",
+    block_rows: int = 256,
+    block_cols: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused masked activation over N stacked candidates.
+
+    x: (N, rows, cols); mask: (N, cols) — candidate b uses mask row b.
+    poly: optional (3, cols), shared across candidates (AutoReP replacement
+    coefficients belong to the site, not the candidate).
+    """
+    n, rows, cols = x.shape
+    assert mask.shape == (n, cols), (mask.shape, x.shape)
+    br = min(block_rows, rows)
+    bc = min(block_cols, cols)
+    pr = (-rows) % br
+    pc = (-cols) % bc
+    xp = jnp.pad(x, ((0, 0), (0, pr), (0, pc))) if (pr or pc) else x
+    mp = jnp.pad(mask, ((0, 0), (0, pc))) if pc else mask
+    mp = mp.reshape(n, 1, -1)
+    grid = (n, xp.shape[1] // br, xp.shape[2] // bc)
+
+    x_spec = pl.BlockSpec((1, br, bc), lambda b, i, j: (b, i, j))
+    m_spec = pl.BlockSpec((1, 1, bc), lambda b, i, j: (b, 0, j))
+    out_spec = pl.BlockSpec((1, br, bc), lambda b, i, j: (b, i, j))
+
+    if poly is None:
+        fn = pl.pallas_call(
+            functools.partial(_masked_act_kernel_b, kind=kind),
+            grid=grid,
+            in_specs=[x_spec, m_spec],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+            interpret=interpret,
+        )
+        out = fn(xp, mp)
+    else:
+        pp = jnp.pad(poly, ((0, 0), (0, pc))) if pc else poly
+        pp = pp.reshape(1, 3, -1)
+        p_spec = pl.BlockSpec((1, 3, bc), lambda b, i, j: (0, 0, j))
+        fn = pl.pallas_call(
+            functools.partial(_masked_act_poly_kernel_b, kind=kind),
+            grid=grid,
+            in_specs=[x_spec, m_spec, p_spec],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+            interpret=interpret,
+        )
+        out = fn(xp, mp, pp)
+    if pr or pc:
+        out = out[:, :rows, :cols]
+    return out

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .masked_act import masked_act_2d
+from .masked_act import masked_act_2d, masked_act_2d_batched
 from .rwkv6_scan import rwkv6_scan as _rwkv6_pallas
 
 
@@ -46,6 +46,42 @@ def masked_act_sited(x, mask, *, kind: str = "relu", poly=None, **kw):
     x2 = x.reshape(rows, mask.size)
     p2 = None if poly is None else poly.reshape(3, mask.size)
     out = masked_act(x2, mask.reshape(-1), kind=kind, poly=p2, **kw)
+    return out.reshape(x.shape)
+
+
+def masked_act_batched(x, masks, *, kind: str = "relu", poly=None,
+                       force_pallas: bool = False, interpret: bool = False):
+    """Stacked-candidate masked activation (BCD's batched trial engine).
+
+    x: (N, ..., C) — leading axis is the candidate axis; masks: (N, C), one
+    per-channel mask row per candidate.  poly: optional (3, C), shared across
+    candidates.  Flattens the middle dims to rows for the batched kernel.
+    """
+    n = masks.shape[0]
+    assert x.shape[0] == n, (x.shape, masks.shape)
+    if not (force_pallas or _use_pallas()):
+        m = masks.reshape((n,) + (1,) * (x.ndim - 2) + (masks.shape[-1],))
+        return ref.masked_act_ref(x, m, kind=kind, poly=poly)
+    shape = x.shape
+    x3 = x.reshape(n, -1, shape[-1])
+    out = masked_act_2d_batched(x3, masks, poly, kind=kind,
+                                interpret=interpret or not _use_pallas())
+    return out.reshape(shape)
+
+
+def masked_act_sited_batched(x, masks, *, kind: str = "relu", poly=None,
+                             **kw):
+    """Batched :func:`masked_act_sited`: stacked site masks.
+
+    x: (N, B, *site) activations per candidate; masks: (N, *site) — flattens
+    site dims into the channel axis, candidates stay the leading axis.
+    """
+    n = masks.shape[0]
+    site_size = int(masks.size // n)
+    x3 = x.reshape(n, -1, site_size)
+    p2 = None if poly is None else poly.reshape(3, site_size)
+    out = masked_act_batched(x3, masks.reshape(n, site_size), kind=kind,
+                             poly=p2, **kw)
     return out.reshape(x.shape)
 
 

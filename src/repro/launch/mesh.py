@@ -33,5 +33,20 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return Mesh(np.array(devs).reshape(data, model), ("data", "model"))
 
 
+def make_candidate_mesh(n_devices: int | None = None):
+    """1-D mesh over local devices for BCD candidate-parallel evaluation.
+
+    The candidate axis of a stacked mask tree shards over ``"cand"``
+    (core.engine.ShardedEvaluator); params/data replicate.  Works on any
+    device count including 1 (degenerates to the batched evaluator).
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    assert n <= len(devs), f"need {n} devices, have {len(devs)}"
+    return Mesh(np.array(devs[:n]), ("cand",))
+
+
 def dp_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

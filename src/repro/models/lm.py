@@ -326,6 +326,36 @@ class LM:
         logits = x @ params["embed"].T.astype(x.dtype)
         return logits, new_cache
 
+    # ------------------------------------------------------- eval closures
+    #
+    # Same contract as models.resnet.CNN: a traceable single-mask-tree
+    # closure for the batched/sharded BCD candidate engines (vmapped over
+    # the candidate axis) and a host-callable wrapper for sequential use.
+    # The metric is next-token accuracy [%] on a fixed token batch — masks
+    # ride through the scanned stack as jit inputs, so candidate evaluation
+    # never recompiles.
+
+    def make_param_eval_fn(self, batch):
+        """Traceable ``(mask_tree, params) -> accuracy[%]`` — params as an
+        evaluator context (jit input), for finetuning-between-steps runs."""
+        tokens = jnp.asarray(batch["tokens"])
+
+        def eval_fn(masks, params):
+            logits, _ = self.forward(params, masks, tokens[:, :-1])
+            pred = jnp.argmax(logits, -1)
+            return jnp.mean((pred == tokens[:, 1:])
+                            .astype(jnp.float32)) * 100.0
+        return eval_fn
+
+    def make_eval_fn(self, params, batch):
+        fn = self.make_param_eval_fn(batch)
+        return lambda masks: fn(masks, params)
+
+    def make_eval_acc(self, params, batch):
+        from repro.core import masks as M
+        fn = jax.jit(self.make_eval_fn(params, batch))
+        return lambda masks: float(fn(M.as_device(masks)))
+
     # ------------------------------------------------------------ cache
 
     def _layer_cache(self, blk: Block, B: int, max_len: int):

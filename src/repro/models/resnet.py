@@ -16,7 +16,7 @@ from typing import Dict, List, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import linearize
+from repro.core import linearize, masks as M
 
 
 def _conv(x, w, stride=1):
@@ -176,3 +176,37 @@ class CNN:
                 x = self._relu(y + sc, masks, f"g{si}b{bi}.relu2", poly, soft)
         x = jnp.mean(x, axis=(1, 2))
         return x @ params["fc"]["w"] + params["fc"]["b"]
+
+    # ------------------------------------------------------- eval closures
+    #
+    # BCD's candidate-evaluation engine (core.engine) needs two views of
+    # "accuracy under a mask tree": a *traceable* single-tree closure that
+    # the batched/sharded backends can vmap over the candidate axis, and a
+    # plain host callable for the sequential reference / per-step base accs.
+
+    def make_param_eval_fn(self, batch):
+        """Traceable ``(mask_tree, params) -> accuracy[%]`` — for evaluator
+        backends whose params change between BCD outer steps (finetuning):
+        params ride as a jit input / evaluator context, never a baked
+        closure constant."""
+        images = jnp.asarray(batch["images"])
+        labels = jnp.asarray(batch["labels"])
+
+        def eval_fn(masks, params):
+            logits = self.forward(params, masks, images)
+            return jnp.mean((jnp.argmax(logits, -1) == labels)
+                            .astype(jnp.float32)) * 100.0
+        return eval_fn
+
+    def make_eval_fn(self, params, batch):
+        """Traceable ``mask_tree -> accuracy[%]`` closure over a fixed
+        (params, batch).  Masks are traced inputs — safe under jit/vmap,
+        never recompiles across candidates."""
+        fn = self.make_param_eval_fn(batch)
+        return lambda masks: fn(masks, params)
+
+    def make_eval_acc(self, params, batch):
+        """Host callable ``mask_tree -> float`` (jitted single-candidate
+        path) — what ``run_bcd``'s eval_acc argument expects."""
+        fn = jax.jit(self.make_eval_fn(params, batch))
+        return lambda masks: float(fn(M.as_device(masks)))

@@ -1,0 +1,279 @@
+"""Candidate-evaluation engine: backend equivalence + chunk semantics.
+
+The contract under test (core.engine / core.bcd._select_block): for the same
+seed and config, every backend — sequential reference, vmapped batched,
+mesh-sharded — selects bit-identical blocks, because (a) candidate sampling
+burns exactly RT rng draws per outer step regardless of backend/chunking,
+(b) candidates are scanned in sampling order with first-occurrence argmin
+tie-breaking, and (c) the ADT early exit accepts the first candidate below
+tolerance and never looks past its chunk.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bcd, engine, linearize, masks as M
+from repro.data import ImageDatasetCfg, SyntheticImages
+from repro.launch import mesh as mesh_lib
+from repro.models.resnet import CNN, CNNConfig
+from repro.training import optimizer as opt_lib, train as train_lib
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = CNNConfig("tiny", 4, 16, ((8, 1, 1), (16, 1, 2)), stem_channels=8)
+    model = CNN(cfg)
+    data = SyntheticImages(ImageDatasetCfg(n_classes=4, image_size=16,
+                                           n_train=256, n_test=64))
+    params = model.init(jax.random.PRNGKey(0))
+    step, _ = train_lib.make_cnn_train_step(
+        model, opt_lib.sgd(lr=5e-2, momentum=0.9))
+    opt = opt_lib.sgd(lr=5e-2, momentum=0.9)
+    ostate = opt.init(params)
+    batches = data.batches("train", 32)
+    masks0 = linearize.init_masks(model.mask_sites())
+    mdev = M.as_device(masks0)
+    for i in range(40):
+        params, ostate, _, _ = step(params, ostate, mdev,
+                                    {k: jnp.asarray(v)
+                                     for k, v in batches(i).items()})
+    batch = data.train_eval_set(128)
+    return model, params, batch, masks0
+
+
+def _run(model, params, batch, masks0, evaluator, chunk_size=4):
+    total = M.count(masks0)
+    cfg = bcd.BCDConfig(b_target=total - 3 * 16, drc=16, rt=8, adt=0.5,
+                        finetune_every_step=False, seed=3,
+                        chunk_size=chunk_size)
+    eval_acc = model.make_eval_acc(params, batch)
+    return bcd.run_bcd(masks0, cfg, eval_acc, evaluator=evaluator)
+
+
+def _assert_same_result(a, b):
+    for k in a.masks:
+        np.testing.assert_array_equal(a.masks[k], b.masks[k])
+    assert len(a.history) == len(b.history)
+    for ha, hb in zip(a.history, b.history):
+        assert (ha.trials, ha.found_early) == (hb.trials, hb.found_early)
+        assert ha.best_drop == pytest.approx(hb.best_drop, abs=1e-4)
+        assert (ha.budget_before, ha.budget_after) == \
+            (hb.budget_before, hb.budget_after)
+
+
+def test_batched_matches_sequential_bitwise(setup):
+    model, params, batch, masks0 = setup
+    seq = _run(model, params, batch, masks0,
+               engine.SequentialEvaluator(model.make_eval_acc(params, batch)))
+    bat = _run(model, params, batch, masks0,
+               engine.BatchedEvaluator(model.make_eval_fn(params, batch),
+                                       pad_to=4))
+    _assert_same_result(seq, bat)
+
+
+def test_sharded_matches_sequential_bitwise(setup):
+    model, params, batch, masks0 = setup
+    seq = _run(model, params, batch, masks0,
+               engine.SequentialEvaluator(model.make_eval_acc(params, batch)))
+    shd = _run(model, params, batch, masks0,
+               engine.ShardedEvaluator(model.make_eval_fn(params, batch),
+                                       mesh_lib.make_candidate_mesh(),
+                                       pad_to=4))
+    _assert_same_result(seq, shd)
+
+
+def test_chunk_size_does_not_change_selection(setup):
+    """rng burns RT draws per step regardless of chunking, so chunk_size is
+    a pure performance knob: selections are identical."""
+    model, params, batch, masks0 = setup
+    ev = engine.BatchedEvaluator(model.make_eval_fn(params, batch))
+    a = _run(model, params, batch, masks0, ev, chunk_size=1)
+    b = _run(model, params, batch, masks0, ev, chunk_size=8)
+    for k in a.masks:
+        np.testing.assert_array_equal(a.masks[k], b.masks[k])
+
+
+def test_evaluator_accs_agree(setup):
+    """Raw per-candidate accuracies: vmapped batch == sequential loop."""
+    model, params, batch, masks0 = setup
+    stacked = M.sample_removal_blocks(
+        np.random.default_rng(0), masks0, 16, 6)
+    seq = engine.SequentialEvaluator(model.make_eval_acc(params, batch))
+    bat = engine.BatchedEvaluator(model.make_eval_fn(params, batch))
+    np.testing.assert_allclose(bat.evaluate(stacked), seq.evaluate(stacked),
+                               atol=1e-4)
+
+
+def test_lm_eval_closures_batched_matches_sequential():
+    """The LM path: masks ride the scanned stack as stacked xs; vmapping the
+    candidate axis over the scan must agree with the sequential loop."""
+    from repro.configs import get_config
+    from repro.models.lm import LM
+    cfg = get_config("stablelm_1p6b").reduced()
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": np.asarray(
+        rng.integers(0, cfg.vocab, (2, 33), dtype=np.int32))}
+    masks0 = linearize.init_masks(model.mask_sites())
+    stacked = M.sample_removal_blocks(
+        np.random.default_rng(1), masks0, 16, 5)
+    seq = engine.SequentialEvaluator(model.make_eval_acc(params, batch))
+    bat = engine.BatchedEvaluator(model.make_eval_fn(params, batch),
+                                  pad_to=3)
+    np.testing.assert_allclose(bat.evaluate(stacked), seq.evaluate(stacked),
+                               atol=1e-4)
+
+
+def test_context_swap_is_visible_without_retrace():
+    """Params ride as evaluator *context* (a jit input): set_context must
+    change results — a closure-captured param tree would silently go stale
+    after finetuning."""
+    eval_fn = lambda masks, scale: scale * jnp.sum(masks["s"])
+    ev = engine.BatchedEvaluator(eval_fn, context=jnp.asarray(1.0))
+    stacked = M.sample_removal_blocks(
+        np.random.default_rng(0), {"s": np.ones((8,), np.float32)}, 2, 3)
+    before = ev.evaluate(stacked)
+    np.testing.assert_allclose(before, [6.0, 6.0, 6.0])
+    ev.set_context(jnp.asarray(2.0))
+    np.testing.assert_allclose(ev.evaluate(stacked), 2 * before)
+    with pytest.raises(ValueError):
+        engine.BatchedEvaluator(lambda m: jnp.sum(m["s"])).set_context(1.0)
+
+
+_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax
+from repro.core import engine, linearize, masks as M
+from repro.data import ImageDatasetCfg, SyntheticImages
+from repro.launch import mesh as mesh_lib
+from repro.models.resnet import CNN, CNNConfig
+
+model = CNN(CNNConfig("tiny", 4, 8, ((4, 1, 1),), stem_channels=4))
+data = SyntheticImages(ImageDatasetCfg(n_classes=4, image_size=8,
+                                       n_train=64, n_test=32))
+params = model.init(jax.random.PRNGKey(0))
+batch = data.train_eval_set(16)
+masks0 = linearize.init_masks(model.mask_sites())
+stacked = M.sample_removal_blocks(np.random.default_rng(0), masks0, 8, 6)
+mesh = mesh_lib.make_candidate_mesh()
+assert len(mesh.devices.reshape(-1)) == 4, mesh
+seq = engine.SequentialEvaluator(model.make_eval_acc(params, batch))
+shd = engine.ShardedEvaluator(model.make_eval_fn(params, batch), mesh)
+np.testing.assert_allclose(shd.evaluate(stacked), seq.evaluate(stacked),
+                           atol=1e-4)
+print("SHARDED_OK")
+"""
+
+
+def test_sharded_on_forced_multi_device_mesh():
+    """Real candidate-axis sharding: 4 forced host devices, padding 6
+    candidates up to 8 — results identical to the sequential reference."""
+    import os
+    import subprocess
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDED_OK" in out.stdout
+
+
+# ------------------------------------------------- chunked ADT semantics
+
+
+class _ScriptedEvaluator:
+    """Returns scripted accuracies in candidate order; records chunk sizes."""
+
+    name = "scripted"
+
+    def __init__(self, accs):
+        self._accs = list(accs)
+        self._next = 0
+        self.chunks = []
+
+    def evaluate(self, stacked):
+        n = M.stacked_len(stacked)
+        self.chunks.append(n)
+        out = self._accs[self._next:self._next + n]
+        self._next += n
+        return np.asarray(out, dtype=np.float64)
+
+
+def _tiny_masks(n=24):
+    return {"s": np.ones((n,), np.float32)}
+
+
+def test_early_exit_stops_at_first_chunk_with_hit():
+    """Candidate drops: [1.0, 0.9 | 0.8, 0.1 | ...] with adt=0.3 — the
+    second chunk contains the first sub-ADT drop; the third chunk must never
+    be evaluated, and the winner is candidate index 3 (trials=4)."""
+    masks = _tiny_masks()
+    cfg = bcd.BCDConfig(b_target=M.count(masks) - 4, drc=4, rt=6, adt=0.3,
+                        chunk_size=2, seed=0)
+    acc_base = 90.0
+    ev = _ScriptedEvaluator(acc_base - np.array([1.0, 0.9, 0.8, 0.1,
+                                                 0.0, 0.0]))
+    rng = np.random.default_rng(cfg.seed)
+    cand, idx, drop, trials, found = bcd._select_block(
+        masks, cfg, rng, ev, 4, acc_base)
+    assert ev.chunks == [2, 2]                  # third chunk never evaluated
+    assert (idx, trials, found) == (3, 4, True)
+    assert drop == pytest.approx(0.1)
+    # the returned tree is candidate 3 of the same sampling stream
+    want = M.index_stacked(M.sample_removal_blocks(
+        np.random.default_rng(cfg.seed), masks, 4, cfg.rt), 3)
+    for k in want:
+        np.testing.assert_array_equal(cand[k], want[k])
+
+
+def test_no_early_exit_takes_first_occurrence_argmin():
+    masks = _tiny_masks()
+    cfg = bcd.BCDConfig(b_target=M.count(masks) - 4, drc=4, rt=6, adt=-1.0,
+                        chunk_size=4, seed=0)
+    drops = np.array([1.0, 0.7, 0.9, 0.7, 0.8, 0.7])   # tie at 0.7
+    ev = _ScriptedEvaluator(90.0 - drops)
+    _, idx, drop, trials, found = bcd._select_block(
+        masks, cfg, np.random.default_rng(0), ev, 4, 90.0)
+    assert ev.chunks == [4, 2]                  # all chunks evaluated
+    assert (idx, trials, found) == (1, 6, False)
+    assert drop == pytest.approx(0.7)
+
+
+# ------------------------------------------------------------- hardening
+
+
+def test_invalid_configs_raise_upfront():
+    masks = _tiny_masks()
+    eval_acc = lambda m: 90.0
+    for bad in (dict(rt=0), dict(drc=0), dict(chunk_size=0),
+                dict(b_target=-1), dict(adt=float("nan"))):
+        kw = {"b_target": 8, "drc": 4, "rt": 4, **bad}
+        cfg = bcd.BCDConfig(**kw)
+        with pytest.raises(ValueError):
+            bcd.run_bcd(masks, cfg, eval_acc)
+
+
+def test_target_at_or_above_start_is_noop():
+    masks = _tiny_masks()
+    cfg = bcd.BCDConfig(b_target=M.count(masks), drc=4, rt=4)
+    res = bcd.run_bcd(masks, cfg, lambda m: 90.0)
+    assert res.history == [] and M.count(res.masks) == M.count(masks)
+
+
+def test_make_evaluator_factory_validates():
+    with pytest.raises(ValueError):
+        engine.make_evaluator("sequential")
+    with pytest.raises(ValueError):
+        engine.make_evaluator("batched")
+    with pytest.raises(ValueError):
+        engine.make_evaluator("nope", eval_acc=lambda m: 0.0)
+    ev = engine.make_evaluator("sequential", eval_acc=lambda m: 42.0)
+    accs = ev.evaluate(M.sample_removal_blocks(
+        np.random.default_rng(0), _tiny_masks(), 2, 3))
+    np.testing.assert_array_equal(accs, [42.0, 42.0, 42.0])

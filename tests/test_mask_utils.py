@@ -1,0 +1,125 @@
+"""Deterministic coverage for the mask-tree utilities (no hypothesis).
+
+Hand-built trees pin down threshold's exact-budget/tie-breaking behavior,
+IoU / is_subset semantics, and the stacked-tree helpers the candidate engine
+is built on (round-trips through _flatten/_unflatten layouts).
+"""
+import numpy as np
+import pytest
+
+from repro.core import masks as M
+
+
+def _tree():
+    return {"a": np.array([[1, 0], [1, 1]], np.float32),
+            "b": np.array([1, 0, 1], np.float32)}
+
+
+# ------------------------------------------------------------- threshold
+
+
+def test_threshold_exact_budget_and_largest_kept():
+    soft = {"a": np.array([0.9, 0.1, 0.5], np.float32),
+            "b": np.array([0.8, 0.3], np.float32)}
+    hard = M.threshold(soft, 3)
+    assert M.count(hard) == 3
+    assert hard["a"].tolist() == [1.0, 0.0, 1.0]   # 0.9, 0.5 kept
+    assert hard["b"].tolist() == [1.0, 0.0]        # 0.8 kept
+
+
+def test_threshold_budget_zero_and_overfull():
+    soft = {"a": np.array([0.2, 0.7], np.float32)}
+    assert M.count(M.threshold(soft, 0)) == 0
+    full = M.threshold(soft, 99)                   # clamped to total size
+    assert M.count(full) == 2
+
+
+def test_threshold_tie_breaking_keeps_exact_budget():
+    """All-equal scores: budget must still be exact (argpartition picks an
+    arbitrary but valid subset — the cliff the paper cares about is the
+    count, not which tied coordinate survives)."""
+    soft = {"a": np.full((5,), 0.5, np.float32),
+            "b": np.full((4,), 0.5, np.float32)}
+    for budget in (0, 1, 4, 9):
+        assert M.count(M.threshold(soft, budget)) == budget
+
+
+# ------------------------------------------------------- IoU / is_subset
+
+
+def test_iou_and_subset_hand_built():
+    small = {"a": np.array([[1, 0], [0, 0]], np.float32),
+             "b": np.array([0, 0, 1], np.float32)}
+    big = _tree()
+    assert M.is_subset(small, big)
+    assert not M.is_subset(big, small)
+    assert M.intersection_over_union(small, big) == 1.0
+    # big ∩ small = 2 active of big's 5 actives
+    assert M.intersection_over_union(big, small) == pytest.approx(2 / 5)
+
+
+def test_iou_empty_small_tree_is_zero_not_nan():
+    empty = {"a": np.zeros((2, 2), np.float32),
+             "b": np.zeros((3,), np.float32)}
+    assert M.intersection_over_union(empty, _tree()) == 0.0
+    assert M.is_subset(empty, _tree())
+
+
+# ------------------------------------------------------- stacked helpers
+
+
+def test_stack_and_index_roundtrip():
+    trees = [_tree() for _ in range(3)]
+    trees[1]["a"][0, 0] = 0.0
+    stacked = M.stack_trees(trees)
+    assert M.stacked_len(stacked) == 3
+    for i, t in enumerate(trees):
+        got = M.index_stacked(stacked, i)
+        for k in t:
+            np.testing.assert_array_equal(got[k], t[k])
+
+
+def test_stacked_flatten_roundtrip_matches_single_layout():
+    """flatten_stacked/unflatten_stacked agree with the single-tree
+    _flatten/_unflatten layout (site order, offsets, shapes)."""
+    trees = [_tree(), _tree()]
+    stacked = M.stack_trees(trees)
+    flat2, layout2 = M.flatten_stacked(stacked)
+    flat1, layout1 = M._flatten(trees[0])
+    np.testing.assert_array_equal(flat2[0], flat1)
+    assert [(k, off, n) for k, off, n, _ in layout2] == \
+        [(k, off, n) for k, off, n, _ in layout1]
+    back = M.unflatten_stacked(flat2, layout2)
+    for k in trees[0]:
+        np.testing.assert_array_equal(back[k], stacked[k])
+    # and each row unflattens to the original tree via the 1-tree path
+    single = M._unflatten(flat2[1], layout1)
+    for k in trees[1]:
+        np.testing.assert_array_equal(single[k], trees[1][k])
+
+
+def test_slice_pad_and_counts():
+    masks = _tree()                                # 5 active of 7
+    stacked = M.sample_removal_blocks(
+        np.random.default_rng(0), masks, 2, 5)
+    np.testing.assert_array_equal(M.stacked_counts(stacked),
+                                  np.full(5, M.count(masks) - 2))
+    sl = M.slice_stacked(stacked, 1, 3)
+    assert M.stacked_len(sl) == 2
+    padded = M.pad_stacked(sl, 4)
+    assert M.stacked_len(padded) == 4
+    for k in padded:                               # pad repeats the last row
+        np.testing.assert_array_equal(padded[k][2], sl[k][1])
+        np.testing.assert_array_equal(padded[k][3], sl[k][1])
+
+
+def test_materialize_candidates_zeroes_exactly_the_indices():
+    masks = _tree()
+    flat, layout = M._flatten(masks)
+    active = np.nonzero(flat > 0.5)[0]
+    idx = np.stack([active[:2], active[-2:]])
+    stacked = M.materialize_candidates(masks, idx)
+    for i in range(2):
+        row = M.flatten_stacked(M.slice_stacked(stacked, i, i + 1))[0][0]
+        removed = np.nonzero((flat > 0.5) & ~(row > 0.5))[0]
+        np.testing.assert_array_equal(np.sort(removed), np.sort(idx[i]))
