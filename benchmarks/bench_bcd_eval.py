@@ -1,13 +1,21 @@
-"""Candidate-evaluation engine throughput: sequential vs batched vs sharded.
+"""Candidate-evaluation engine throughput: sequential vs batched vs sharded
+vs pipelined.
 
 Measures candidates/sec for each core.engine backend on the mini ResNet
 config — the number that bounds BCD wall-clock (Alg. 2 evaluates up to RT
-candidates per outer step).  Emits the repo's CSV row format plus a
+candidates per outer step).  The timed loop reproduces ``run_bcd``'s real
+trial loop: chunk mask trees are *materialized from removal indices inside
+the loop* and driven through ``engine.evaluate_prefetched``, so the
+pipelined backend's overlap of chunk k+1's host materialization + transfer
+with chunk k's compute shows up in the number (the chunk-serial backends pay
+those phases back-to-back).  Emits the repo's CSV row format plus a
 machine-readable ``BENCH_bcd_eval.json`` so future PRs can track the
-candidates/sec trajectory.
+candidates/sec trajectory (CI gates on it — see
+benchmarks/check_bench_regression.py).
 
     PYTHONPATH=src python -m benchmarks.bench_bcd_eval \
-        [--rt 32] [--chunk-size 8] [--repeats 3] [--out BENCH_bcd_eval.json]
+        [--rt 32] [--chunk-size 8] [--prefetch 2] [--repeats 3] \
+        [--out BENCH_bcd_eval.json]
 """
 from __future__ import annotations
 
@@ -36,16 +44,27 @@ def build_pipeline(image_size=16, eval_batch=128):
     return model, params, batch, masks0
 
 
-def time_backend(evaluator, stacked, chunk_size, repeats):
-    """Evaluate all candidates in chunks; return (cands/sec, us/cand)."""
-    n = M.stacked_len(stacked)
-    chunks = [M.slice_stacked(stacked, s, min(s + chunk_size, n))
-              for s in range(0, n, chunk_size)]
-    evaluator.evaluate(chunks[0])            # warmup: compile + cache
+def time_backend(evaluator, masks0, indices, chunk_size, repeats,
+                 warmup=True):
+    """Drive the real trial loop (materialize per chunk, prefetch-aware);
+    return (cands/sec, us/cand).  warmup=False skips the untimed
+    compile-and-cache sweep (the evaluator was already warmed)."""
+    # Match _select_block's chunk policy so the benchmark pays the same
+    # per-chunk materialization cost the real loop pays.
+    chunk_size = engine.effective_chunk(evaluator, chunk_size)
+    flat, layout = M._flatten(masks0)
+    n = indices.shape[0]
+
+    def sweep():
+        chunks = M.materialize_chunks(flat, layout, indices, chunk_size)
+        for accs in engine.evaluate_prefetched(evaluator, chunks):
+            pass
+
+    if warmup:
+        sweep()                              # warmup: compile + cache
     t0 = time.perf_counter()
     for _ in range(repeats):
-        for c in chunks:
-            evaluator.evaluate(c)
+        sweep()
     dt = time.perf_counter() - t0
     total = n * repeats
     return total / dt, dt / total * 1e6
@@ -56,13 +75,20 @@ def main():
     # Defaults target the regime BCD actually runs in: a small train-subset
     # eval batch (the paper scores candidates on a subsample, not the full
     # set), where per-candidate dispatch/transfer/sync overhead is the
-    # bottleneck the batched engine exists to amortize.
-    # chunk-size defaults to rt (one vmapped call per backend sweep) —
-    # maximal amortization, i.e. what BCD runs when the ADT early exit is
-    # disabled; pass a smaller chunk to measure the early-exit trade-off.
+    # bottleneck the batched engine exists to amortize.  chunk-size defaults
+    # to 8 (several chunks per RT sweep) so the pipelined backend has chunk
+    # boundaries to overlap across; pass --chunk-size == --rt for the
+    # one-call-per-sweep operating point.
     ap.add_argument("--rt", type=int, default=32)
-    ap.add_argument("--chunk-size", type=int, default=32)
+    ap.add_argument("--chunk-size", type=int, default=8)
+    ap.add_argument("--prefetch", type=int, default=2)
     ap.add_argument("--repeats", type=int, default=5)
+    # Trials interleave across backends and each backend reports its MEDIAN
+    # trial: on shared/noisy hosts (CI, this 2-core container) a single
+    # measurement can swing ±30%, and a best-of would bias the committed
+    # baseline to its upper envelope — making the CI regression gate fire
+    # on ordinary noise.
+    ap.add_argument("--trials", type=int, default=3)
     ap.add_argument("--drc", type=int, default=64)
     ap.add_argument("--eval-batch", type=int, default=4)
     ap.add_argument("--out", default="BENCH_bcd_eval.json")
@@ -70,7 +96,7 @@ def main():
 
     model, params, batch, masks0 = build_pipeline(
         eval_batch=args.eval_batch)
-    stacked = M.sample_removal_blocks(
+    indices = M.sample_removal_indices(
         np.random.default_rng(0), masks0, args.drc, args.rt)
     # Don't let ragged-chunk padding exceed RT: with rt < chunk_size the
     # batched backend would evaluate padding candidates that can never
@@ -84,35 +110,49 @@ def main():
         "batched": engine.BatchedEvaluator(eval_fn, pad_to=chunk),
         "sharded": engine.ShardedEvaluator(
             eval_fn, mesh_lib.make_candidate_mesh(), pad_to=chunk),
+        "pipelined": engine.PipelinedEvaluator(
+            eval_fn, pad_to=chunk, prefetch=args.prefetch),
     }
 
+    trials = {name: [] for name in backends}
+    for trial in range(max(1, args.trials)):
+        for name, ev in backends.items():
+            cps, _ = time_backend(ev, masks0, indices, chunk, args.repeats,
+                                  warmup=(trial == 0))
+            trials[name].append(cps)
     results = {}
-    for name, ev in backends.items():
-        cps, us = time_backend(ev, stacked, chunk, args.repeats)
+    for name, cands in trials.items():
+        cps = float(np.median(cands))
         results[name] = {"cands_per_s": round(cps, 2),
-                         "us_per_cand": round(us, 2)}
-        print(f"bcd_eval_{name},{us:.1f},{cps:.1f}")
+                         "us_per_cand": round(1e6 / cps, 2)}
+        print(f"bcd_eval_{name},{1e6 / cps:.1f},{cps:.1f}")
 
-    speedup = (results["batched"]["cands_per_s"]
-               / results["sequential"]["cands_per_s"])
+    def speedup(a, b):
+        return round(results[a]["cands_per_s"] / results[b]["cands_per_s"], 2)
+
     report = {
         "bench": "bcd_eval",
         "config": {"rt": args.rt, "chunk_size": chunk,
+                   "prefetch": args.prefetch,
                    "drc": args.drc, "repeats": args.repeats,
+                   "trials": args.trials,
                    "eval_batch": args.eval_batch,
                    "model": model.cfg.name,
                    "n_devices": jax.device_count(),
                    "backend": jax.default_backend()},
         "backends": results,
-        "speedup_batched_vs_sequential": round(speedup, 2),
-        "speedup_sharded_vs_sequential": round(
-            results["sharded"]["cands_per_s"]
-            / results["sequential"]["cands_per_s"], 2),
+        "speedup_batched_vs_sequential": speedup("batched", "sequential"),
+        "speedup_sharded_vs_sequential": speedup("sharded", "sequential"),
+        "speedup_pipelined_vs_sequential": speedup("pipelined", "sequential"),
+        "speedup_pipelined_vs_batched": speedup("pipelined", "batched"),
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
-    print(f"batched vs sequential: {speedup:.2f}x  -> {args.out}")
+    print(f"batched vs sequential: "
+          f"{report['speedup_batched_vs_sequential']:.2f}x; "
+          f"pipelined vs batched: "
+          f"{report['speedup_pipelined_vs_batched']:.2f}x  -> {args.out}")
     return report
 
 

@@ -1,0 +1,125 @@
+"""Gate candidates/sec against the committed benchmark baseline.
+
+Compares a fresh ``bench_bcd_eval`` report against the repo's committed
+``BENCH_bcd_eval.json`` and exits non-zero when any backend's candidates/sec
+dropped by more than ``--tolerance`` (default 30%).  Backends present in only
+one of the two reports are reported but never fail the gate (so adding a
+backend does not require a lockstep baseline refresh).  Faster-than-baseline
+results print a note suggesting a refresh.
+
+    PYTHONPATH=src python -m benchmarks.check_bench_regression \
+        BENCH_bcd_eval.json BENCH_new.json [--tolerance 0.30]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Config keys that define the benchmark's operating point: two reports are
+# only comparable when all of these match.  Timing-precision knobs
+# (repeats, trials) and host identity deliberately excluded — but note the
+# committed baseline must come from hardware comparable to where the gate
+# runs; refresh it from the CI artifact if the fleet changes.
+OPERATING_POINT_KEYS = ("rt", "chunk_size", "prefetch", "drc", "eval_batch",
+                        "model", "n_devices", "backend")
+
+
+def config_mismatches(baseline: dict, fresh: dict) -> list:
+    """Operating-point keys whose values differ between the two reports."""
+    base_c = baseline.get("config", {})
+    new_c = fresh.get("config", {})
+    return [f"{k}: baseline={base_c.get(k)!r} fresh={new_c.get(k)!r}"
+            for k in OPERATING_POINT_KEYS
+            if base_c.get(k) != new_c.get(k)]
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float,
+            relative_to: str | None = None):
+    """Returns (failures, lines): failed backend names + a report line per
+    backend common to both reports.
+
+    relative_to: normalize every backend's candidates/sec by the named
+    backend *within the same report* before comparing.  Self-normalizing
+    across hosts (a slower CI runner scales all backends alike), at the
+    cost of missing a slowdown that hits the reference backend equally —
+    pair with an occasional same-host absolute check.
+    """
+    base_b = baseline.get("backends", {})
+    new_b = fresh.get("backends", {})
+
+    def rate(backends, name):
+        v = float(backends[name]["cands_per_s"])
+        if relative_to:
+            v /= float(backends[relative_to]["cands_per_s"])
+        return v
+
+    unit = f"x {relative_to}" if relative_to else "cands/s"
+    failures, lines = [], []
+    for name in sorted(set(base_b) | set(new_b)):
+        if name not in base_b or name not in new_b:
+            lines.append(f"  {name}: only in "
+                         f"{'baseline' if name in base_b else 'fresh run'} "
+                         "(skipped)")
+            continue
+        old, new = rate(base_b, name), rate(new_b, name)
+        ratio = new / old if old > 0 else float("inf")
+        status = "OK"
+        if ratio < 1.0 - tolerance:
+            status = "REGRESSION"
+            failures.append(name)
+        elif ratio > 1.0 + tolerance:
+            status = "faster (consider refreshing the baseline)"
+        lines.append(f"  {name}: {old:.2f} -> {new:.2f} {unit} "
+                     f"({ratio:.2f}x)  {status}")
+    return failures, lines
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_bcd_eval.json")
+    ap.add_argument("fresh", help="freshly produced report to check")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional candidates/sec drop (0.30 = "
+                         "fail below 70%% of baseline)")
+    ap.add_argument("--relative-to", default=None,
+                    help="normalize by this backend's candidates/sec within "
+                         "each report (hardware-robust cross-backend ratio "
+                         "gate; e.g. 'sequential')")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    mismatches = config_mismatches(baseline, fresh)
+    if mismatches:
+        print("FAIL: reports are not comparable — operating-point config "
+              "differs:")
+        for m in mismatches:
+            print(f"  {m}")
+        print("Re-run the benchmark with the baseline's flags (or refresh "
+              "the baseline).")
+        return 2
+    if args.relative_to:
+        for which, rep in (("baseline", baseline), ("fresh", fresh)):
+            if args.relative_to not in rep.get("backends", {}):
+                print(f"FAIL: --relative-to backend {args.relative_to!r} "
+                      f"missing from the {which} report")
+                return 2
+    failures, lines = compare(baseline, fresh, args.tolerance,
+                              args.relative_to)
+    mode = f"relative to {args.relative_to}" if args.relative_to \
+        else "absolute"
+    print(f"bench_bcd_eval regression check "
+          f"({mode}, tolerance {args.tolerance:.0%}):")
+    for line in lines:
+        print(line)
+    if failures:
+        print(f"FAIL: candidates/sec regression in {', '.join(failures)}")
+        return 1
+    print("PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,13 +3,16 @@ vs SNL(B_target) head-to-head (Fig. 1 / Table 3 protocol, synthetic CIFAR).
 
     PYTHONPATH=src python examples/resnet18_bcd_pipeline.py \
         [--image-size 16] [--ref-frac 0.6] [--target-frac 0.4] [--full] \
-        [--engine batched] [--chunk-size 8]
+        [--engine batched] [--chunk-size 8] [--prefetch 2]
 
 --full uses the real ResNet18 geometry at 32x32 (slow on CPU); the default
 uses a reduced stage plan with the same code path.  --engine selects the BCD
 candidate-evaluation backend (core.engine): 'sequential' is the reference,
 'batched' vmaps candidate chunks into one jitted call, 'sharded' additionally
-lays the candidate axis out across all local devices.
+lays the candidate axis out across all local devices, and 'pipelined'
+double-buffers candidate staging — while the device evaluates chunk k, the
+host materializes and transfers chunk k+1 (--prefetch chunks stay in
+flight).  Selection is bit-identical across engines for a fixed seed.
 """
 import argparse
 
@@ -30,8 +33,11 @@ def main():
     ap.add_argument("--target-frac", type=float, default=0.4)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--engine", default="batched",
-                    choices=["sequential", "batched", "sharded"])
+                    choices=["sequential", "batched", "sharded",
+                             "pipelined"])
     ap.add_argument("--chunk-size", type=int, default=8)
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="chunks kept staged ahead (pipelined engine only)")
     args = ap.parse_args()
 
     if args.full:
@@ -103,7 +109,7 @@ def main():
             # don't let ragged-chunk padding exceed RT (sharded may still
             # round up to the device count; extras are sliced off)
             pad_to=min(bcd_cfg.chunk_size, bcd_cfg.rt),
-            context=holder["params"])
+            context=holder["params"], prefetch=args.prefetch)
 
     def ft(m):
         holder["params"] = finetune(holder["params"], m, sloss, batches,

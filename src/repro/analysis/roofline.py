@@ -22,6 +22,21 @@ PEAK_FLOPS = 197e12          # bf16
 HBM_BW = 819e9               # bytes/s
 LINK_BW = 50e9               # bytes/s per ICI link
 
+def xla_cost(compiled) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` normalized across jax versions.
+
+    Newer jax returns the flat properties dict directly; older versions wrap
+    it in a one-element list (one dict per partition).  Returns {} when the
+    backend offers no cost analysis.
+    """
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,

@@ -81,35 +81,48 @@ def _select_block(
     """One outer step's trial loop: sample RT candidate blocks, evaluate in
     chunks of ``cfg.chunk_size``, return the accepted candidate.
 
+    The loop is a producer/consumer pipeline: the producer materializes
+    chunk mask trees lazily from the pre-sampled indices, and
+    ``engine.evaluate_prefetched`` stages up to ``evaluator.prefetch_depth``
+    chunks (host materialization + H2D transfer + compute dispatch) ahead of
+    the chunk whose results are being consumed — double-buffering for the
+    PipelinedEvaluator, a plain materialize → evaluate alternation for
+    everything else (prefetch_depth 0).
+
     Selection is backend-independent: candidates are scanned in sampling
     order; the *first* candidate with drop < adt wins (ADT early exit —
-    later chunks are never evaluated); otherwise the first-occurrence argmin
+    later chunks' results are never consumed, and chunks beyond the staging
+    horizon are never materialized); otherwise the first-occurrence argmin
     over all RT.  The rng always burns exactly RT draws per step so early
     exit does not desynchronize subsequent steps across backends.
 
     Returns (candidate_tree, best_idx, best_drop, trials_evaluated, found).
     """
+    from . import engine
+
     indices = M.sample_removal_indices(rng, masks, drc_t, cfg.rt)
     flat, layout = M._flatten(masks)     # once per step, not per chunk
-    # Backends may cap the chunk (SequentialEvaluator wants 1 so the ADT
-    # exit never pays for unevaluated chunk-mates); selection is invariant.
-    chunk_size = min(
-        cfg.chunk_size,
-        getattr(evaluator, "preferred_chunk", None) or cfg.chunk_size)
+    # Backends may cap the chunk (engine.effective_chunk); selection is
+    # invariant under chunking either way.
+    chunk_size = engine.effective_chunk(evaluator, cfg.chunk_size)
+    bounds = M.chunk_bounds(cfg.rt, chunk_size)
     best_idx, best_drop, found, n_done = -1, float("inf"), False, 0
-    for start in range(0, cfg.rt, chunk_size):
-        stop = min(start + chunk_size, cfg.rt)
-        chunk = M.materialize_from_flat(flat, layout, indices[start:stop])
-        drops = acc_base - evaluator.evaluate(chunk)
-        for j, drop in enumerate(np.asarray(drops, dtype=np.float64)):
-            n_done += 1
-            if drop < best_drop:
-                best_idx, best_drop = start + j, float(drop)
-            if drop < cfg.adt:
-                found = True
+    results = engine.evaluate_prefetched(
+        evaluator, M.materialize_chunks(flat, layout, indices, chunk_size))
+    try:
+        for (start, _), accs in zip(bounds, results):
+            drops = acc_base - np.asarray(accs, dtype=np.float64)
+            for j, drop in enumerate(drops):
+                n_done += 1
+                if drop < best_drop:
+                    best_idx, best_drop = start + j, float(drop)
+                if drop < cfg.adt:
+                    found = True
+                    break
+            if found:
                 break
-        if found:
-            break
+    finally:
+        results.close()          # drop any staged-but-unread chunks
     if best_idx < 0:
         raise RuntimeError(
             "BCD trial loop produced no candidate: evaluator returned "

@@ -18,9 +18,20 @@ One BCD outer step evaluates up to RT candidate mask trees; the engine decides
 
 ``ShardedEvaluator``
     BatchedEvaluator plus ``jax.sharding``: the candidate axis is laid out
-    across every device of a mesh (``launch.mesh``), so RT trials cost
-    RT / n_devices forward passes of wall-clock.  Falls back gracefully to a
-    1-device mesh (where it equals BatchedEvaluator).
+    across the mesh (``launch.mesh``), so RT trials cost RT / n_devices
+    forward passes of wall-clock.  On a 2-D ``("cand", "batch")`` mesh
+    (``launch.mesh.make_cand_batch_mesh``) it picks a ``PartitionSpec`` per
+    call: chunks with at least one candidate per device shard jointly over
+    both axes; smaller chunks shard candidates over ``"cand"`` only and let a
+    batch-sharded *context* split each forward over ``"batch"`` — no device
+    idles when RT < n_devices.
+
+``PipelinedEvaluator``
+    Double-buffered staging on top of batched/sharded placement:
+    :meth:`~BatchedEvaluator.stage` pads a chunk, starts its host→device
+    transfer, and dispatches the vmapped computation (jax dispatch is async),
+    so the trial loop (:func:`evaluate_prefetched`) materializes and stages
+    chunk k+1 while the device still computes chunk k.
 
 Backends must rank candidates identically: ``run_bcd`` breaks ties by first
 occurrence, and all backends evaluate candidates in sampling order, so for a
@@ -29,7 +40,10 @@ given seed/config every backend selects the same block (tested in
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Protocol, runtime_checkable
+import collections
+import functools
+from typing import (Callable, Iterable, Iterator, NamedTuple, Optional,
+                    Protocol, runtime_checkable)
 
 import numpy as np
 import jax
@@ -50,10 +64,70 @@ class CandidateEvaluator(Protocol):
     # cfg.chunk_size.  Chunking never changes selection (rng burns RT draws
     # per step regardless), so this is a pure performance hint.
     preferred_chunk: Optional[int]
+    # How many chunks evaluate_prefetched may stage (transfer + dispatch)
+    # ahead of the one being consumed.  0 = strict materialize -> evaluate.
+    prefetch_depth: int
 
     def evaluate(self, stacked: M.MaskTree) -> np.ndarray:
         """stacked: {site: (n, *shape)} -> float64 (n,) accuracies [%]."""
         ...
+
+
+class StagedChunk(NamedTuple):
+    """A chunk in flight: transfer + compute dispatched, result not read."""
+    n: int                  # true candidate count (before padding)
+    accs: jax.Array         # (n_padded,) device array, possibly not ready
+
+
+def evaluate_prefetched(evaluator, chunks: Iterable[M.MaskTree]
+                        ) -> Iterator[np.ndarray]:
+    """Producer/consumer driver for the trial loop.
+
+    Yields one float64 ``(n,)`` accuracy array per chunk, in chunk order.
+    When the evaluator supports staging (``stage``/``evaluate_staged``, e.g.
+    :class:`PipelinedEvaluator`), up to ``prefetch_depth`` chunks beyond the
+    one being consumed are kept staged: their host materialization, device
+    transfer, and compute dispatch all happen while earlier chunks still
+    compute.  Backends without staging — or with ``prefetch_depth == 0`` —
+    degrade to the strict materialize → evaluate alternation.
+
+    The consumer may stop early (ADT exit): closing the generator drops any
+    staged-but-unread chunks, and because ``chunks`` is itself pulled lazily,
+    chunks beyond the staging horizon are never even materialized.  Chunk k's
+    result is always yielded before chunk k+depth+1 is staged, so an early
+    exit at chunk k commits at most ``depth`` chunks of wasted work.
+    """
+    depth = int(getattr(evaluator, "prefetch_depth", 0) or 0)
+    if depth <= 0 or not hasattr(evaluator, "stage"):
+        for chunk in chunks:
+            yield evaluator.evaluate(chunk)
+        return
+    staged: collections.deque = collections.deque()
+    it = iter(chunks)
+    exhausted = False
+    while True:
+        while not exhausted and len(staged) <= depth:
+            try:
+                staged.append(evaluator.stage(next(it)))
+            except StopIteration:
+                exhausted = True
+        if not staged:
+            return
+        yield evaluator.evaluate_staged(staged.popleft())
+
+
+def _with_stacked_route(eval_fn):
+    """Trace eval_fn under linearize.stacked_kernel_route so the TPU
+    hard-mask dispatch emits the custom-vmap routed op: vmapping the
+    candidate axis then lowers to the stacked Pallas kernel
+    (kernels.masked_act_2d_batched) instead of vmapping the per-candidate
+    kernel's grid.  Trace-time only — a no-op off TPU."""
+    @functools.wraps(eval_fn)
+    def routed(*args):
+        from . import linearize
+        with linearize.stacked_kernel_route():
+            return eval_fn(*args)
+    return routed
 
 
 class SequentialEvaluator:
@@ -63,6 +137,7 @@ class SequentialEvaluator:
     # One candidate per chunk: evaluating a whole chunk before checking the
     # ADT exit would waste up to chunk-1 forwards on this host-loop backend.
     preferred_chunk = 1
+    prefetch_depth = 0
 
     def __init__(self, eval_acc: Callable[[M.MaskTree], float]):
         self._eval_acc = eval_acc
@@ -78,6 +153,7 @@ class BatchedEvaluator:
 
     name = "batched"
     preferred_chunk = None
+    prefetch_depth = 0
 
     def __init__(self, eval_fn: EvalFn, *, pad_to: Optional[int] = None,
                  context=None):
@@ -91,10 +167,11 @@ class BatchedEvaluator:
         compiled executable picks up the new values without retracing."""
         self._has_ctx = context is not None
         self.context = context
+        routed = _with_stacked_route(eval_fn)
         if self._has_ctx:
-            self._vmapped = jax.jit(jax.vmap(eval_fn, in_axes=(0, None)))
+            self._vmapped = jax.jit(jax.vmap(routed, in_axes=(0, None)))
         else:
-            self._vmapped = jax.jit(jax.vmap(eval_fn))
+            self._vmapped = jax.jit(jax.vmap(routed))
         self._pad_to = pad_to
 
     def set_context(self, context) -> None:
@@ -107,42 +184,154 @@ class BatchedEvaluator:
         return {k: jnp.asarray(v, dtype=jnp.float32)
                 for k, v in stacked.items()}
 
-    def evaluate(self, stacked: M.MaskTree) -> np.ndarray:
+    # -------------------------------------------------------------- staging
+    #
+    # evaluate() is stage() + evaluate_staged(); splitting them lets
+    # evaluate_prefetched keep later chunks' transfers AND dispatched
+    # computations in flight while it blocks on an earlier chunk's result.
+
+    def stage(self, stacked: M.MaskTree) -> StagedChunk:
+        """Pad, start the host→device transfer, dispatch the computation."""
         n = M.stacked_len(stacked)
         if self._pad_to is not None and n < self._pad_to:
             stacked = M.pad_stacked(stacked, self._pad_to)
         batch = self._device_batch(stacked)
         accs = self._vmapped(batch, self.context) if self._has_ctx \
             else self._vmapped(batch)
-        return np.asarray(accs, dtype=np.float64)[:n]
+        return StagedChunk(n, accs)
+
+    def evaluate_staged(self, staged: StagedChunk) -> np.ndarray:
+        """Block on a staged chunk's result and strip its padding."""
+        return np.asarray(staged.accs, dtype=np.float64)[:staged.n]
+
+    def evaluate(self, stacked: M.MaskTree) -> np.ndarray:
+        return self.evaluate_staged(self.stage(stacked))
+
+
+def effective_chunk(evaluator, chunk_size: int) -> int:
+    """The chunk size the trial loop actually uses: backends may cap it via
+    ``preferred_chunk`` (SequentialEvaluator wants 1 so the ADT exit never
+    pays for unevaluated chunk-mates).  Shared by ``bcd._select_block`` and
+    the throughput benchmark so both drive the same loop."""
+    return min(chunk_size,
+               getattr(evaluator, "preferred_chunk", None) or chunk_size)
+
+
+def context_batch_specs(context: dict, *, batch_key: str = "batch",
+                        axis: str = "batch") -> dict:
+    """PartitionSpec tree for an evaluator context dict: leaves under
+    ``context[batch_key]`` shard their leading axis over mesh axis ``axis``
+    (the axis size must divide their leading dim, e.g. batch 16 over a
+    2-device axis); every other leaf replicates.  Feed the result to
+    ShardedEvaluator(context_specs=...)."""
+    from jax.sharding import PartitionSpec as P
+    return {k: jax.tree.map(lambda _: P(axis) if k == batch_key else P(), v)
+            for k, v in context.items()}
 
 
 class ShardedEvaluator(BatchedEvaluator):
     """Batched backend with the candidate axis sharded across a mesh.
 
-    Every mesh axis contributes to the candidate sharding (a pure
-    candidate-parallel layout); candidate counts are padded up to the device
-    count so the leading axis always divides evenly.
+    1-D mesh (``make_candidate_mesh``): every axis contributes to the
+    candidate sharding (pure candidate-parallel); counts pad up to the device
+    count.  2-D ``("cand", "batch")`` mesh (``make_cand_batch_mesh``): the
+    spec is chosen *per call* by padded per-device work — chunks big enough
+    to give every device a candidate shard jointly over both axes; smaller
+    chunks shard over ``"cand"`` only, and a ``context_specs``-sharded eval
+    batch splits each candidate's forward across ``"batch"``.
     """
 
     name = "sharded"
 
     def __init__(self, eval_fn: EvalFn, mesh, *, pad_to: Optional[int] = None,
-                 context=None):
+                 context=None, context_specs=None):
         super().__init__(eval_fn, pad_to=pad_to, context=context)
         from jax.sharding import NamedSharding, PartitionSpec as P
         self._mesh = mesh
-        self._n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
-        self._sharding = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+        axes = tuple(mesh.axis_names)
+        self._n_dev = int(np.prod([mesh.shape[a] for a in axes]))
+        cand_axes = tuple(a for a in axes if a != "batch") or axes
+        self._cand = int(np.prod([mesh.shape[a] for a in cand_axes]))
+        self._joint_sharding = NamedSharding(mesh, P(axes))
+        self._cand_sharding = NamedSharding(mesh, P(cand_axes))
+        self._ctx_shardings = None
+        if context_specs is not None:
+            if context is None:
+                raise ValueError("context_specs given without a context")
+            self._ctx_shardings = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), context_specs,
+                is_leaf=lambda x: isinstance(x, P))
+            self.context = jax.device_put(context, self._ctx_shardings)
+
+    def set_context(self, context) -> None:
+        if self._ctx_shardings is not None:
+            context = jax.device_put(context, self._ctx_shardings)
+        super().set_context(context)
+
+    def _chunk_sharding(self, n: int):
+        """Per-call layout: (padded candidate count, NamedSharding).
+
+        Minimize padded per-device work: the joint layout costs
+        ceil(n / n_dev) candidate-forwards per device; the cand-only layout
+        costs ceil(n / cand) forwards over 1/batch of the eval batch each.
+        Ties prefer joint (no cross-device reduction inside a forward)."""
+        batch_ax = self._n_dev // self._cand
+        joint_cost = -(-n // self._n_dev)
+        split_cost = -(-n // self._cand) / batch_ax
+        if joint_cost <= split_cost:
+            return n + (-n % self._n_dev), self._joint_sharding
+        return n + (-n % self._cand), self._cand_sharding
 
     def _device_batch(self, stacked: M.MaskTree):
         n = M.stacked_len(stacked)
-        pad = -n % self._n_dev
-        if pad:
-            stacked = M.pad_stacked(stacked, n + pad)
-        return {k: jax.device_put(np.asarray(v, dtype=np.float32),
-                                  self._sharding)
+        n_pad, sharding = self._chunk_sharding(n)
+        if n_pad > n:
+            stacked = M.pad_stacked(stacked, n_pad)
+        return {k: jax.device_put(np.asarray(v, dtype=np.float32), sharding)
                 for k, v in stacked.items()}
+
+
+class PipelinedEvaluator(ShardedEvaluator):
+    """Double-buffered candidate staging (batched or sharded placement).
+
+    ``prefetch`` chunks beyond the one being consumed stay staged: padded,
+    transferred, and *dispatched*.  jax's async dispatch then overlaps chunk
+    k+1's host materialization + H2D transfer with chunk k's device compute,
+    which is the wall-clock the chunk-serial BatchedEvaluator leaves on the
+    table.  ``mesh=None`` keeps single-device placement; passing a mesh
+    layers the prefetch pipeline over ShardedEvaluator's joint
+    candidate×batch layout.  Selection is unchanged versus every other
+    backend: chunks are consumed in sampling order and the ADT early exit
+    checks chunk k's results before chunk k+1+prefetch is committed.
+    """
+
+    name = "pipelined"
+
+    def __init__(self, eval_fn: EvalFn, *, pad_to: Optional[int] = None,
+                 context=None, prefetch: int = 1, mesh=None,
+                 context_specs=None):
+        if prefetch < 0:
+            raise ValueError(f"prefetch must be >= 0, got {prefetch}")
+        if mesh is None:
+            if context_specs is not None:
+                raise ValueError("context_specs requires a mesh")
+            BatchedEvaluator.__init__(self, eval_fn, pad_to=pad_to,
+                                      context=context)
+            self._mesh = None
+            self._ctx_shardings = None
+        else:
+            ShardedEvaluator.__init__(self, eval_fn, mesh, pad_to=pad_to,
+                                      context=context,
+                                      context_specs=context_specs)
+        self.prefetch_depth = int(prefetch)
+
+    def _device_batch(self, stacked: M.MaskTree):
+        if self._mesh is None:
+            # device_put (not jnp.asarray) so the transfer is an async
+            # dispatch the pipeline can run ahead of.
+            return {k: jax.device_put(np.asarray(v, dtype=np.float32))
+                    for k, v in stacked.items()}
+        return ShardedEvaluator._device_batch(self, stacked)
 
 
 def make_evaluator(
@@ -153,28 +342,35 @@ def make_evaluator(
     mesh=None,
     pad_to: Optional[int] = None,
     context=None,
+    context_specs=None,
+    prefetch: int = 1,
 ) -> CandidateEvaluator:
-    """Factory: ``backend`` in {'sequential', 'batched', 'sharded'}.
+    """Factory: ``backend`` in {'sequential','batched','sharded','pipelined'}.
 
-    sequential needs ``eval_acc`` (host callable); batched/sharded need
-    ``eval_fn`` (traceable); sharded defaults to a mesh over all local
-    devices when ``mesh`` is None.
+    sequential needs ``eval_acc`` (host callable); the rest need ``eval_fn``
+    (traceable).  sharded defaults to a mesh over all local devices when
+    ``mesh`` is None; pipelined keeps single-device placement unless a mesh
+    is passed.  ``context_specs`` (see :func:`context_batch_specs`) shards
+    the context over the mesh — the joint candidate×batch layout.
     """
     if backend == "sequential":
         if eval_acc is None:
             raise ValueError("sequential backend needs eval_acc")
         return SequentialEvaluator(eval_acc)
-    if backend == "batched":
+    if backend in ("batched", "sharded", "pipelined"):
         if eval_fn is None:
-            raise ValueError("batched backend needs a traceable eval_fn")
+            raise ValueError(f"{backend} backend needs a traceable eval_fn")
+    if backend == "batched":
         return BatchedEvaluator(eval_fn, pad_to=pad_to, context=context)
     if backend == "sharded":
-        if eval_fn is None:
-            raise ValueError("sharded backend needs a traceable eval_fn")
         if mesh is None:
             from repro.launch import mesh as mesh_lib
             mesh = mesh_lib.make_candidate_mesh()
         return ShardedEvaluator(eval_fn, mesh, pad_to=pad_to,
-                                context=context)
+                                context=context, context_specs=context_specs)
+    if backend == "pipelined":
+        return PipelinedEvaluator(eval_fn, pad_to=pad_to, context=context,
+                                  prefetch=prefetch, mesh=mesh,
+                                  context_specs=context_specs)
     raise ValueError(f"unknown evaluator backend {backend!r}; expected "
-                     "'sequential' | 'batched' | 'sharded'")
+                     "'sequential' | 'batched' | 'sharded' | 'pipelined'")

@@ -7,13 +7,39 @@ model-agnostic: BCD only ever sees the mask tree.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import threading
 from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
 
 from repro.kernels import ops
 from . import masks as M
+
+_ROUTE_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def stacked_kernel_route(on: bool = True):
+    """Trace-time hint (thread-local): inside this context, the hard-mask
+    TPU dispatch in :func:`apply_masked_act` emits the custom-vmap routed op
+    (``ops.masked_act_sited_routed``), so a candidate-axis vmap — the
+    batched/sharded/pipelined engines in ``core.engine`` — lowers every mask
+    site to the stacked Pallas kernel (``masked_act_2d_batched``) instead of
+    vmapping the per-candidate kernel's grid.  Off by default: custom_vmap
+    does not support differentiation, and training forwards must keep the
+    plain kernel."""
+    prev = getattr(_ROUTE_STATE, "on", False)
+    _ROUTE_STATE.on = on
+    try:
+        yield
+    finally:
+        _ROUTE_STATE.on = prev
+
+
+def stacked_route_active() -> bool:
+    return getattr(_ROUTE_STATE, "on", False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,4 +100,6 @@ def apply_masked_act(x, mask, site: MaskSite, poly=None, soft: bool = False):
             lin = a * x * x + b * x + c
         m = mask.astype(x.dtype)
         return m * y + (1.0 - m) * lin
+    if stacked_route_active():
+        return ops.masked_act_sited_routed(x, mask, kind=site.kind, poly=p)
     return ops.masked_act_sited(x, mask, kind=site.kind, poly=p)

@@ -129,6 +129,24 @@ def materialize_candidates(masks: MaskTree, indices: np.ndarray) -> MaskTree:
     return materialize_from_flat(flat, layout, indices)
 
 
+def chunk_bounds(n: int, chunk_size: int) -> list:
+    """[(start, stop)] chunk boundaries covering ``n`` candidates."""
+    return [(s, min(s + chunk_size, n)) for s in range(0, n, chunk_size)]
+
+
+def materialize_chunks(flat: np.ndarray, layout: list, indices: np.ndarray,
+                       chunk_size: int):
+    """Lazy chunk producer for the trial loop: yields one stacked candidate
+    tree per :func:`chunk_bounds` chunk of ``indices``.
+
+    Laziness is load-bearing twice over — the prefetch pipeline
+    (core.engine.evaluate_prefetched) pulls chunk k+1's materialization
+    while chunk k computes on device, and an ADT early exit closes the
+    generator so chunks past the staging horizon are never built."""
+    for start, stop in chunk_bounds(indices.shape[0], chunk_size):
+        yield materialize_from_flat(flat, layout, indices[start:stop])
+
+
 def sample_removal_blocks(
     rng: np.random.Generator, masks: MaskTree, drc: int, n: int
 ) -> MaskTree:

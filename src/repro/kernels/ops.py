@@ -85,6 +85,74 @@ def masked_act_sited_batched(x, masks, *, kind: str = "relu", poly=None,
     return out.reshape(x.shape)
 
 
+# --------------------------------------------------- candidate-vmap routing
+#
+# The BCD candidate engines (core.engine) evaluate a chunk of masks as
+# jit(vmap(eval_fn)): inside the model forward every mask site then carries a
+# hidden candidate batch dim.  Plain vmap of masked_act_sited would batch the
+# per-candidate pallas_call's grid; the wrappers below attach a
+# jax.custom_batching.custom_vmap rule that instead lowers the whole batched
+# site to the stacked kernel (masked_act_2d_batched) — one pallas_call owning
+# the (N, rows, cols) tiling, with the mask row broadcast per candidate
+# inside VMEM.  custom_vmap does not support differentiation, so this entry
+# is opt-in (core.linearize.stacked_kernel_route): training forwards keep the
+# plain kernel.
+
+
+@functools.lru_cache(maxsize=None)
+def _routed_sited(kind: str, interpret: bool, has_poly: bool):
+    from jax import custom_batching
+
+    def _to_batched(axis_size, xb, mb, pb, x, mask, poly):
+        if pb:
+            raise NotImplementedError(
+                "poly coefficients are per-site, not per-candidate; a "
+                "batched poly axis has no stacked-kernel layout")
+        if not xb:        # mask-independent activations (e.g. the first site)
+            x = jnp.broadcast_to(x[None], (axis_size,) + x.shape)
+        if not mb:
+            mask = jnp.broadcast_to(mask[None], (axis_size,) + mask.shape)
+        out = masked_act_sited_batched(x, mask, kind=kind, poly=poly,
+                                       force_pallas=True, interpret=interpret)
+        return out, True
+
+    if has_poly:
+        @custom_batching.custom_vmap
+        def f(x, mask, poly):
+            return masked_act_sited(x, mask, kind=kind, poly=poly,
+                                    force_pallas=True, interpret=interpret)
+
+        @f.def_vmap
+        def _rule(axis_size, in_batched, x, mask, poly):
+            return _to_batched(axis_size, in_batched[0], in_batched[1],
+                               in_batched[2], x, mask, poly)
+    else:
+        @custom_batching.custom_vmap
+        def f(x, mask):
+            return masked_act_sited(x, mask, kind=kind,
+                                    force_pallas=True, interpret=interpret)
+
+        @f.def_vmap
+        def _rule(axis_size, in_batched, x, mask):
+            return _to_batched(axis_size, in_batched[0], in_batched[1],
+                               False, x, mask, None)
+    return f
+
+
+def masked_act_sited_routed(x, mask, *, kind: str = "relu", poly=None,
+                            interpret: bool = False):
+    """:func:`masked_act_sited` with a custom-vmap rule: under a candidate
+    axis vmap (the batched/sharded/pipelined BCD engines) the site lowers to
+    the stacked Pallas kernel instead of a vmapped per-candidate grid.
+
+    TPU-path only (callers dispatch; the kernel always runs, with
+    ``interpret=True`` for off-TPU tests).  Not differentiable — route
+    training forwards through :func:`masked_act_sited`.
+    """
+    f = _routed_sited(kind, bool(interpret), poly is not None)
+    return f(x, mask) if poly is None else f(x, mask, poly)
+
+
 def rwkv6(r, k, v, w, u, state, *, chunk: int = 32,
           force_pallas: bool = False, interpret: bool = False):
     """Chunked rwkv6 scan over (BH, T, K/V); falls back to a lax.scan oracle."""

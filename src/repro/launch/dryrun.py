@@ -116,7 +116,7 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
     compiled = lowered.compile()
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = rl.xla_cost(compiled)
     hlo = compiled.as_text()
     g = cfg.remat_group if (meta["mode"] == "train"
                             and cfg.remat_group > 1) else 1

@@ -48,5 +48,33 @@ def make_candidate_mesh(n_devices: int | None = None):
     return Mesh(np.array(devs[:n]), ("cand",))
 
 
+def make_cand_batch_mesh(cand: int | None = None, batch: int | None = None):
+    """2-D ``("cand", "batch")`` mesh for joint candidate×batch BCD eval.
+
+    A pure candidate layout idles ``n_devices - RT`` devices whenever a trial
+    chunk has fewer candidates than the mesh has devices; this mesh lets
+    ``core.engine.ShardedEvaluator`` shard small chunks over ``"cand"`` while
+    a batch-sharded evaluator context splits each candidate's forward over
+    ``"batch"`` (big chunks still shard jointly over both axes — the spec is
+    chosen per call).  Give either factor; the other defaults to using every
+    local device.  ``batch`` must divide the eval-batch leading dim.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    n = len(devs)
+    if cand is None and batch is None:
+        cand, batch = n, 1
+    elif cand is None:
+        cand = n // batch
+    elif batch is None:
+        batch = n // cand
+    assert cand >= 1 and batch >= 1, (cand, batch)
+    assert cand * batch <= n, \
+        f"need {cand}x{batch} devices, have {n}"
+    return Mesh(np.array(devs[:cand * batch]).reshape(cand, batch),
+                ("cand", "batch"))
+
+
 def dp_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

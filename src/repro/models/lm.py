@@ -351,6 +351,21 @@ class LM:
         fn = self.make_param_eval_fn(batch)
         return lambda masks: fn(masks, params)
 
+    def make_joint_eval_fn(self):
+        """Traceable ``(mask_tree, ctx) -> accuracy[%]`` with
+        ``ctx = {"params": ..., "batch": ...}`` — same contract as
+        ``CNN.make_joint_eval_fn``: the token batch is evaluator context, so
+        on a ``("cand", "batch")`` mesh the eval batch shards over
+        ``"batch"`` while candidates shard over ``"cand"`` (joint layout for
+        trial chunks smaller than the device count)."""
+        def eval_fn(masks, ctx):
+            tokens = ctx["batch"]["tokens"]
+            logits, _ = self.forward(ctx["params"], masks, tokens[:, :-1])
+            pred = jnp.argmax(logits, -1)
+            return jnp.mean((pred == tokens[:, 1:])
+                            .astype(jnp.float32)) * 100.0
+        return eval_fn
+
     def make_eval_acc(self, params, batch):
         from repro.core import masks as M
         fn = jax.jit(self.make_eval_fn(params, batch))

@@ -205,6 +205,22 @@ class CNN:
         fn = self.make_param_eval_fn(batch)
         return lambda masks: fn(masks, params)
 
+    def make_joint_eval_fn(self):
+        """Traceable ``(mask_tree, ctx) -> accuracy[%]`` with
+        ``ctx = {"params": ..., "batch": ...}`` — params AND the eval batch
+        ride as evaluator context (jit inputs), so a ShardedEvaluator on a
+        ``("cand", "batch")`` mesh (``launch.mesh.make_cand_batch_mesh``)
+        can lay the batch axis across the ``"batch"`` devices while the
+        candidate axis shards over ``"cand"``: the joint layout that keeps
+        every device busy when a trial chunk has fewer candidates than the
+        mesh has devices."""
+        def eval_fn(masks, ctx):
+            batch = ctx["batch"]
+            logits = self.forward(ctx["params"], masks, batch["images"])
+            return jnp.mean((jnp.argmax(logits, -1) == batch["labels"])
+                            .astype(jnp.float32)) * 100.0
+        return eval_fn
+
     def make_eval_acc(self, params, batch):
         """Host callable ``mask_tree -> float`` (jitted single-candidate
         path) — what ``run_bcd``'s eval_acc argument expects."""

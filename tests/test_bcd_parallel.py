@@ -83,6 +83,35 @@ def test_sharded_matches_sequential_bitwise(setup):
     _assert_same_result(seq, shd)
 
 
+@pytest.mark.parametrize("prefetch", [0, 1, 2])
+def test_pipelined_matches_sequential_bitwise(setup, prefetch):
+    """Double-buffered staging is a pure latency optimization: for every
+    prefetch depth — including 0, the strict materialize→evaluate
+    degradation — the pipelined backend selects bit-identical blocks.
+    chunk_size=3 against rt=8 forces ragged final chunks (3, 3, 2)."""
+    model, params, batch, masks0 = setup
+    seq = _run(model, params, batch, masks0,
+               engine.SequentialEvaluator(model.make_eval_acc(params, batch)),
+               chunk_size=3)
+    pip = _run(model, params, batch, masks0,
+               engine.PipelinedEvaluator(model.make_eval_fn(params, batch),
+                                         pad_to=3, prefetch=prefetch),
+               chunk_size=3)
+    _assert_same_result(seq, pip)
+
+
+def test_pipelined_on_mesh_matches_sequential_bitwise(setup):
+    """Prefetch pipeline layered over sharded placement (1-D local mesh)."""
+    model, params, batch, masks0 = setup
+    seq = _run(model, params, batch, masks0,
+               engine.SequentialEvaluator(model.make_eval_acc(params, batch)))
+    pip = _run(model, params, batch, masks0,
+               engine.PipelinedEvaluator(model.make_eval_fn(params, batch),
+                                         pad_to=4, prefetch=2,
+                                         mesh=mesh_lib.make_candidate_mesh()))
+    _assert_same_result(seq, pip)
+
+
 def test_chunk_size_does_not_change_selection(setup):
     """rng burns RT draws per step regardless of chunking, so chunk_size is
     a pure performance knob: selections are identical."""
@@ -140,6 +169,13 @@ def test_context_swap_is_visible_without_retrace():
     np.testing.assert_allclose(ev.evaluate(stacked), 2 * before)
     with pytest.raises(ValueError):
         engine.BatchedEvaluator(lambda m: jnp.sum(m["s"])).set_context(1.0)
+    # the meshless pipelined backend must support the same swap (finetune
+    # between outer steps while chunks are staged)
+    pip = engine.PipelinedEvaluator(eval_fn, context=jnp.asarray(1.0),
+                                    prefetch=2)
+    np.testing.assert_allclose(pip.evaluate(stacked), before)
+    pip.set_context(jnp.asarray(3.0))
+    np.testing.assert_allclose(pip.evaluate(stacked), 3 * before)
 
 
 _SHARDED_SCRIPT = r"""
@@ -245,6 +281,154 @@ def test_no_early_exit_takes_first_occurrence_argmin():
     assert drop == pytest.approx(0.7)
 
 
+# ------------------------------------------------- prefetch-loop semantics
+
+
+class _StagedScriptedEvaluator(_ScriptedEvaluator):
+    """Scripted accuracies with the staging protocol; logs the event order
+    so tests can pin down exactly when chunks are staged vs consumed."""
+
+    name = "scripted-staged"
+
+    def __init__(self, accs, prefetch):
+        super().__init__(accs)
+        self.prefetch_depth = prefetch
+        self.events = []
+
+    def stage(self, stacked):
+        n = M.stacked_len(stacked)
+        accs = super().evaluate(stacked)
+        self.events.append(("stage", self._next - n))
+        return engine.StagedChunk(n, accs)
+
+    def evaluate_staged(self, staged):
+        # accs were scripted at stage() time; this is the blocking read
+        self.events.append(("consume",))
+        return staged.accs
+
+    def evaluate(self, stacked):
+        self.events.append(("evaluate",))
+        return super().evaluate(stacked)
+
+
+def test_prefetch_loop_stages_ahead_and_consumes_in_order():
+    """depth=1: chunk k+1 is staged before chunk k's results are consumed,
+    and chunk k+2 is only committed after chunk k was checked."""
+    ev = _StagedScriptedEvaluator(90.0 - np.arange(8, dtype=np.float64),
+                                  prefetch=1)
+    chunks = [M.sample_removal_blocks(np.random.default_rng(i),
+                                      _tiny_masks(), 2, 2)
+              for i in range(4)]
+    out = []
+    for accs in engine.evaluate_prefetched(ev, iter(chunks)):
+        out.append(accs)
+    kinds = [e[0] for e in ev.events]
+    assert kinds == ["stage", "stage", "consume", "stage", "consume",
+                     "stage", "consume", "consume"]
+    np.testing.assert_array_equal(np.concatenate(out),
+                                  90.0 - np.arange(8))
+
+
+def test_prefetch_loop_early_exit_wastes_at_most_depth_chunks():
+    """Closing the result generator (the ADT exit) drops staged chunks and
+    never materializes chunks beyond the staging horizon."""
+    ev = _StagedScriptedEvaluator(np.zeros(12), prefetch=2)
+    pulled = []
+
+    def produce():
+        for i in range(6):
+            pulled.append(i)
+            yield M.sample_removal_blocks(np.random.default_rng(i),
+                                          _tiny_masks(), 2, 2)
+
+    results = engine.evaluate_prefetched(ev, produce())
+    next(results)                 # consume chunk 0; chunks 0..2 are staged
+    results.close()
+    assert pulled == [0, 1, 2]    # chunks 3..5 never even materialized
+    assert [e[0] for e in ev.events] == ["stage", "stage", "stage",
+                                         "consume"]
+
+
+def test_prefetch_depth_zero_degrades_to_strict_alternation():
+    ev = _StagedScriptedEvaluator(np.zeros(4), prefetch=0)
+    chunks = [M.sample_removal_blocks(np.random.default_rng(i),
+                                      _tiny_masks(), 2, 2) for i in range(2)]
+    list(engine.evaluate_prefetched(ev, iter(chunks)))
+    assert [e[0] for e in ev.events] == ["evaluate", "evaluate"]
+
+
+# -------------------------------------------- joint candidate×batch sharding
+
+
+_JOINT_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax
+from repro.core import engine, linearize, masks as M
+from repro.data import ImageDatasetCfg, SyntheticImages
+from repro.launch import mesh as mesh_lib
+from repro.models.resnet import CNN, CNNConfig
+
+model = CNN(CNNConfig("tiny", 4, 8, ((4, 1, 1),), stem_channels=4))
+data = SyntheticImages(ImageDatasetCfg(n_classes=4, image_size=8,
+                                       n_train=64, n_test=32))
+params = model.init(jax.random.PRNGKey(0))
+batch = data.train_eval_set(16)
+masks0 = linearize.init_masks(model.mask_sites())
+stacked = M.sample_removal_blocks(np.random.default_rng(0), masks0, 8, 6)
+
+mesh = mesh_lib.make_cand_batch_mesh(cand=2, batch=2)
+assert tuple(mesh.axis_names) == ("cand", "batch"), mesh
+assert mesh.devices.size == 4, mesh
+ctx = {"params": params, "batch": {k: np.asarray(v) for k, v in batch.items()}}
+ev = engine.ShardedEvaluator(model.make_joint_eval_fn(), mesh, context=ctx,
+                             context_specs=engine.context_batch_specs(ctx))
+seq = engine.SequentialEvaluator(model.make_eval_acc(params, batch))
+
+# per-call PartitionSpec selection: a 2-candidate chunk (< 4 devices) must
+# take the cand-only layout (batch axis splits the forward); a full chunk
+# takes the joint layout over both axes
+n2, s2 = ev._chunk_sharding(2)
+assert (n2, tuple(s2.spec)) == (2, (("cand",),)), (n2, s2.spec)
+n8, s8 = ev._chunk_sharding(8)
+assert (n8, tuple(s8.spec)) == (8, (("cand", "batch"),)), (n8, s8.spec)
+
+small = M.slice_stacked(stacked, 0, 2)
+np.testing.assert_allclose(ev.evaluate(small), seq.evaluate(small), atol=1e-4)
+np.testing.assert_allclose(ev.evaluate(stacked), seq.evaluate(stacked),
+                           atol=1e-4)
+
+# pipelined over the same joint mesh, with a context swap (re-sharded)
+pip = engine.PipelinedEvaluator(model.make_joint_eval_fn(), mesh=mesh,
+                                prefetch=2, context=ctx,
+                                context_specs=engine.context_batch_specs(ctx))
+np.testing.assert_allclose(pip.evaluate(small), seq.evaluate(small),
+                           atol=1e-4)
+pip.set_context(ctx)
+np.testing.assert_allclose(pip.evaluate(stacked), seq.evaluate(stacked),
+                           atol=1e-4)
+print("JOINT_OK")
+"""
+
+
+def test_joint_cand_batch_sharding_on_forced_multi_device_mesh():
+    """4 forced host devices on a ("cand", "batch") = (2, 2) mesh: small
+    chunks shard candidates over "cand" while the batch-sharded context
+    splits each forward over "batch"; results match the sequential
+    reference bit-for-bit at evaluation tolerance."""
+    import os
+    import subprocess
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _JOINT_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "JOINT_OK" in out.stdout
+
+
 # ------------------------------------------------------------- hardening
 
 
@@ -272,7 +456,19 @@ def test_make_evaluator_factory_validates():
     with pytest.raises(ValueError):
         engine.make_evaluator("batched")
     with pytest.raises(ValueError):
+        engine.make_evaluator("pipelined")
+    with pytest.raises(ValueError):
         engine.make_evaluator("nope", eval_acc=lambda m: 0.0)
+    with pytest.raises(ValueError):        # negative prefetch
+        engine.make_evaluator("pipelined", eval_fn=lambda m: 0.0,
+                              prefetch=-1)
+    with pytest.raises(ValueError):        # context_specs needs a mesh
+        engine.PipelinedEvaluator(lambda m: 0.0, context={"batch": {}},
+                                  context_specs={"batch": {}})
+    ev = engine.make_evaluator("pipelined",
+                               eval_fn=lambda m: jnp.sum(m["s"]),
+                               prefetch=2)
+    assert ev.prefetch_depth == 2 and ev.name == "pipelined"
     ev = engine.make_evaluator("sequential", eval_acc=lambda m: 42.0)
     accs = ev.evaluate(M.sample_removal_blocks(
         np.random.default_rng(0), _tiny_masks(), 2, 3))

@@ -42,7 +42,7 @@ with mesh:
              for k, s in model.mask_sites().items()}
     lowered = step.lower(state_sds, input_specs(cfg, shape), m_sds)
     compiled = lowered.compile()
-ca = compiled.cost_analysis()
+ca = rl.xla_cost(compiled)
 st = rl.parse_collectives(compiled.as_text(), 16, loop_trip_count=cfg.n_repeats)
 out = {"flops": float(ca.get("flops", 0)),
        "collective_bytes": st.bytes_moved_global,

@@ -125,6 +125,71 @@ def test_ops_masked_act_sited_batched_matches_per_candidate_sited():
             np.testing.assert_allclose(got[i], want, rtol=1e-5, atol=1e-5)
 
 
+def test_masked_act_sited_routed_vmaps_to_stacked_kernel():
+    """The custom-vmap entry (the BCD engines' TPU route): vmapping the
+    candidate axis must produce exactly what N per-candidate sited calls
+    produce — for batched x, unbatched x (mask-independent activations),
+    and the poly replacement; unbatched calls fall through to the base."""
+    from repro.kernels.ops import masked_act_sited, masked_act_sited_routed
+    rng = np.random.default_rng(7)
+    n, B, site = 4, 2, (4, 4, 8)
+    x = jnp.asarray(rng.normal(size=(n, B) + site).astype(np.float32))
+    m = jnp.asarray((rng.random((n,) + site) > 0.5).astype(np.float32))
+    poly = jnp.asarray(rng.normal(size=(3,) + site).astype(np.float32) * 0.1)
+
+    # both batched
+    got = jax.vmap(lambda xi, mi: masked_act_sited_routed(
+        xi, mi, kind="relu", interpret=True))(x, m)
+    w = jnp.stack([masked_act_sited(x[i], m[i], kind="relu",
+                                    force_pallas=True, interpret=True)
+                   for i in range(n)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(w),
+                               rtol=1e-6, atol=1e-6)
+
+    # mask-only batched (x shared across candidates — the first mask site)
+    x1 = x[0]
+    got = jax.vmap(lambda mi: masked_act_sited_routed(
+        x1, mi, kind="gelu", interpret=True))(m)
+    w = jnp.stack([masked_act_sited(x1, m[i], kind="gelu",
+                                    force_pallas=True, interpret=True)
+                   for i in range(n)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(w),
+                               rtol=1e-5, atol=1e-5)
+
+    # poly replacement, shared across candidates; under jit like the engine
+    got = jax.jit(jax.vmap(lambda xi, mi: masked_act_sited_routed(
+        xi, mi, kind="relu", poly=poly, interpret=True)))(x, m)
+    w = jnp.stack([masked_act_sited(x[i], m[i], kind="relu", poly=poly,
+                                    force_pallas=True, interpret=True)
+                   for i in range(n)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(w),
+                               rtol=1e-5, atol=1e-5)
+
+    # no vmap: falls through to the per-candidate kernel
+    got = masked_act_sited_routed(x[0], m[0], kind="relu", interpret=True)
+    w = masked_act_sited(x[0], m[0], kind="relu", force_pallas=True,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(w),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_stacked_kernel_route_hint_is_scoped():
+    """linearize.stacked_kernel_route flips the trace-time flag and always
+    restores it (exceptions included)."""
+    from repro.core import linearize
+    assert not linearize.stacked_route_active()
+    with linearize.stacked_kernel_route():
+        assert linearize.stacked_route_active()
+        with linearize.stacked_kernel_route(False):
+            assert not linearize.stacked_route_active()
+        assert linearize.stacked_route_active()
+    assert not linearize.stacked_route_active()
+    with pytest.raises(RuntimeError):
+        with linearize.stacked_kernel_route():
+            raise RuntimeError("boom")
+    assert not linearize.stacked_route_active()
+
+
 def test_full_mask_is_pure_activation_and_zero_mask_is_identity():
     rng = np.random.default_rng(2)
     x = jnp.asarray(rng.normal(size=(16, 128)).astype(np.float32))

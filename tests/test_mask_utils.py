@@ -1,11 +1,22 @@
-"""Deterministic coverage for the mask-tree utilities (no hypothesis).
+"""Coverage for the mask-tree utilities.
 
 Hand-built trees pin down threshold's exact-budget/tie-breaking behavior,
 IoU / is_subset semantics, and the stacked-tree helpers the candidate engine
-is built on (round-trips through _flatten/_unflatten layouts).
+is built on (round-trips through _flatten/_unflatten layouts); hypothesis
+property tests (optional dep, skipped when absent) sweep the pad/slice/index
+round-trips over arbitrary tree shapes and candidate counts.
 """
 import numpy as np
 import pytest
+
+# hypothesis is an optional dev dep (pip extra: test) — bare environments
+# must still collect/run the deterministic tests, so only the property
+# tests below are guarded.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
 
 from repro.core import masks as M
 
@@ -123,3 +134,85 @@ def test_materialize_candidates_zeroes_exactly_the_indices():
         row = M.flatten_stacked(M.slice_stacked(stacked, i, i + 1))[0][0]
         removed = np.nonzero((flat > 0.5) & ~(row > 0.5))[0]
         np.testing.assert_array_equal(np.sort(removed), np.sort(idx[i]))
+
+
+# ------------------------------------------------- hypothesis properties
+#
+# The stacked-tree helpers back every evaluator backend: padding must be
+# invisible below the original length, indexing must round-trip through
+# stacking, and stacked_len/stacked_counts must stay consistent under
+# slice/pad for ANY tree geometry — not just the hand-built cases above.
+
+if HAS_HYPOTHESIS:
+    @st.composite
+    def _stacked_trees(draw, max_sites=3, max_candidates=5):
+        n = draw(st.integers(1, max_candidates))
+        n_sites = draw(st.integers(1, max_sites))
+        tree = {}
+        for s in range(n_sites):
+            shape = tuple(draw(st.lists(st.integers(1, 4), min_size=1,
+                                        max_size=3)))
+            bits = draw(st.lists(st.integers(0, 1),
+                                 min_size=n * int(np.prod(shape)),
+                                 max_size=n * int(np.prod(shape))))
+            tree[f"site{s}"] = np.asarray(bits, np.float32).reshape(
+                (n,) + shape)
+        return tree
+
+    @given(stacked=_stacked_trees(), pad_to=st.integers(0, 9))
+    @settings(max_examples=40, deadline=None)
+    def test_pad_index_roundtrip_identity(stacked, pad_to):
+        """index_stacked(pad_stacked(t, m), i) == index_stacked(t, i) for
+        every real candidate i; padded rows repeat the last candidate."""
+        n = M.stacked_len(stacked)
+        padded = M.pad_stacked(stacked, pad_to)
+        assert M.stacked_len(padded) == max(n, pad_to)
+        for i in range(n):
+            a, b = M.index_stacked(padded, i), M.index_stacked(stacked, i)
+            for k in stacked:
+                np.testing.assert_array_equal(a[k], b[k])
+        last = M.index_stacked(stacked, n - 1)
+        for i in range(n, max(n, pad_to)):
+            got = M.index_stacked(padded, i)
+            for k in stacked:
+                np.testing.assert_array_equal(got[k], last[k])
+
+    @given(stacked=_stacked_trees())
+    @settings(max_examples=40, deadline=None)
+    def test_stack_of_indexed_is_identity(stacked):
+        """stack_trees([index_stacked(t, i) for i]) == t."""
+        n = M.stacked_len(stacked)
+        back = M.stack_trees(M.index_stacked(stacked, i) for i in range(n))
+        for k in stacked:
+            np.testing.assert_array_equal(back[k], stacked[k])
+
+    @given(stacked=_stacked_trees(), start=st.integers(0, 6),
+           stop=st.integers(0, 6))
+    @settings(max_examples=40, deadline=None)
+    def test_slice_len_and_counts_invariants(stacked, start, stop):
+        """stacked_len/stacked_counts agree with per-candidate count() and
+        survive slicing; flatten/unflatten round-trips the sliced tree."""
+        n = M.stacked_len(stacked)
+        counts = M.stacked_counts(stacked)
+        assert counts.shape == (n,)
+        for i in range(n):
+            assert counts[i] == M.count(M.index_stacked(stacked, i))
+        sl = M.slice_stacked(stacked, start, stop)
+        want = len(range(*slice(start, stop).indices(n)))
+        assert M.stacked_len(sl) == want
+        if want:
+            flat, layout = M.flatten_stacked(sl)
+            back = M.unflatten_stacked(flat, layout)
+            for k in sl:
+                np.testing.assert_array_equal(back[k], sl[k])
+        else:                              # empty slice stays a valid tree
+            assert all(v.shape[0] == 0 for v in sl.values())
+else:
+    def test_pad_index_roundtrip_identity():
+        pytest.skip("hypothesis not installed (pip extra: test)")
+
+    def test_stack_of_indexed_is_identity():
+        pytest.skip("hypothesis not installed (pip extra: test)")
+
+    def test_slice_len_and_counts_invariants():
+        pytest.skip("hypothesis not installed (pip extra: test)")
