@@ -3,7 +3,7 @@ vs SNL(B_target) head-to-head (Fig. 1 / Table 3 protocol, synthetic CIFAR).
 
     PYTHONPATH=src python examples/resnet18_bcd_pipeline.py \
         [--image-size 16] [--ref-frac 0.6] [--target-frac 0.4] [--full] \
-        [--engine batched] [--chunk-size 8] [--prefetch 2]
+        [--engine batched] [--chunk-size 8] [--prefetch 2|auto]
 
 --full uses the real ResNet18 geometry at 32x32 (slow on CPU); the default
 uses a reduced stage plan with the same code path.  --engine selects the BCD
@@ -11,22 +11,37 @@ candidate-evaluation backend (core.engine): 'sequential' is the reference,
 'batched' vmaps candidate chunks into one jitted call, 'sharded' additionally
 lays the candidate axis out across all local devices, and 'pipelined'
 double-buffers candidate staging — while the device evaluates chunk k, the
-host materializes and transfers chunk k+1 (--prefetch chunks stay in
-flight).  Selection is bit-identical across engines for a fixed seed.
+host materializes and transfers chunk k+1 (--prefetch chunks stay in flight;
+``--prefetch auto`` measures producer vs consumer rates on the first chunks
+and picks the depth itself).  Selection is bit-identical across engines for
+a fixed seed.
+
+Sweep mode (the paper's accuracy-vs-budget curve, Fig. 4 protocol):
+
+    PYTHONPATH=src python examples/resnet18_bcd_pipeline.py \
+        --sweep 0.55,0.4 --out-dir runs/r18 [--engine pipelined]
+
+descends the budget schedule with warm-starting + finetuning between stages,
+checkpointing after every accepted block (launch.sweep / core.runner).  The
+run is fully restartable: kill it at any point — SIGKILL included — and
+rerunning the same command resumes where it stopped, bit-identically; the
+persisted SNL warm start under <out-dir>/init is reused, so a resume skips
+training entirely.  The curve lands in <out-dir>/SWEEP_<model>.json.
 """
 import argparse
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import bcd, engine, linearize, masks as M
+from repro.core import bcd, engine, linearize, masks as M, runner
 from repro.core.snl import SNLConfig, finetune, run_snl
 from repro.data import ImageDatasetCfg, SyntheticImages
+from repro.launch import sweep as sweep_lib
 from repro.models.resnet import CNN, CNNConfig
 from repro.training import optimizer as opt_lib, train as train_lib
 
 
-def main():
+def parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--image-size", type=int, default=16)
     ap.add_argument("--ref-frac", type=float, default=0.6)
@@ -36,10 +51,33 @@ def main():
                     choices=["sequential", "batched", "sharded",
                              "pipelined"])
     ap.add_argument("--chunk-size", type=int, default=8)
-    ap.add_argument("--prefetch", type=int, default=2,
-                    help="chunks kept staged ahead (pipelined engine only)")
+    ap.add_argument("--prefetch", default="2",
+                    help="chunks kept staged ahead (pipelined engine), or "
+                         "'auto' to pick from measured rates")
+    ap.add_argument("--sweep", default=None,
+                    help="comma-separated descending budget fractions "
+                         "(e.g. '0.55,0.4'): run the multi-budget sweep "
+                         "driver instead of the single head-to-head")
+    ap.add_argument("--out-dir", default=None,
+                    help="sweep output/checkpoint directory (required with "
+                         "--sweep)")
     args = ap.parse_args()
+    if args.prefetch != "auto":
+        try:
+            args.prefetch = int(args.prefetch)
+        except ValueError:
+            ap.error(f"--prefetch must be an integer or 'auto', got "
+                     f"{args.prefetch!r}")
+    elif args.engine != "pipelined":
+        ap.error("--prefetch auto requires --engine pipelined")
+    if args.sweep is not None:
+        if args.out_dir is None:
+            ap.error("--sweep requires --out-dir")
+        args.sweep = [float(f) for f in args.sweep.split(",")]
+    return args
 
+
+def build_model_data(args):
     if args.full:
         model = CNN(CNNConfig.resnet18(10, 32))
         data = SyntheticImages(ImageDatasetCfg.cifar10())
@@ -48,22 +86,17 @@ def main():
                               ((8, 2, 1), (16, 2, 2)), stem_channels=8))
         data = SyntheticImages(ImageDatasetCfg(
             n_classes=4, image_size=args.image_size, n_train=256, n_test=64))
+    return model, data
 
-    params = model.init(jax.random.PRNGKey(0))
+
+def make_closures(model, data):
+    """The shared training/eval closures (all deterministic in their
+    inputs, so a resumed process rebuilds identical ones)."""
     opt = opt_lib.sgd(lr=5e-2, momentum=0.9)
-    step, loss_fn = train_lib.make_cnn_train_step(model, opt)
+    step, _ = train_lib.make_cnn_train_step(model, opt)
     batches_np = data.batches("train", 32)
-    batches = lambda i: {k: jnp.asarray(v) for k, v in batches_np(i).items()}
-    masks0 = linearize.init_masks(model.mask_sites())
-    total = M.count(masks0)
-    b_ref = int(total * args.ref_frac)
-    b_target = int(total * args.target_frac)
-    print(f"total ReLUs {total}; B_ref={b_ref}; B_target={b_target}")
-
-    ostate = opt.init(params)
-    mdev = M.as_device(masks0)
-    for i in range(80):
-        params, ostate, loss, acc = step(params, ostate, mdev, batches(i))
+    batches = lambda i: {k: jnp.asarray(v)
+                         for k, v in batches_np(i).items()}
 
     def sloss(p, a, batch, soft):
         logits = model.forward(p, a, batch["images"], soft=soft)
@@ -75,6 +108,118 @@ def main():
         logits = model.forward(p, M.as_device(m), test_b["images"])
         return float(jnp.mean((jnp.argmax(logits, -1) == test_b["labels"])
                               .astype(jnp.float32)) * 100)
+
+    return opt, step, batches, sloss, test_acc
+
+
+def train_base(model, step, opt, batches, masks0):
+    params = model.init(jax.random.PRNGKey(0))
+    ostate = opt.init(params)
+    mdev = M.as_device(masks0)
+    for i in range(80):
+        params, ostate, _loss, _acc = step(params, ostate, mdev, batches(i))
+    return params
+
+
+def make_bcd_evaluator(args, model, eval_b, holder, chunk_size, rt):
+    """The candidate engine: params are evaluator *context* (a jit input)
+    because finetuning rewrites them between outer steps."""
+    eval_fn_p = model.make_param_eval_fn(eval_b)
+    acc_jit = jax.jit(eval_fn_p)
+    eval_acc = lambda m: float(acc_jit(M.as_device(m), holder["params"]))
+    if args.engine == "sequential":
+        return engine.make_evaluator("sequential", eval_acc=eval_acc), \
+            eval_acc
+    evaluator = engine.make_evaluator(
+        args.engine, eval_fn=eval_fn_p,
+        # don't let ragged-chunk padding exceed RT (sharded may still
+        # round up to the device count; extras are sliced off)
+        pad_to=min(chunk_size, rt),
+        context=holder["params"], prefetch=args.prefetch)
+    return evaluator, eval_acc
+
+
+def run_sweep_mode(args):
+    model, data = build_model_data(args)
+    opt, step, batches, sloss, test_acc = make_closures(model, data)
+    masks0 = linearize.init_masks(model.mask_sites())
+    total = M.count(masks0)
+    b_ref = int(total * args.ref_frac)
+    budgets = [int(total * f) for f in args.sweep]
+    print(f"total ReLUs {total}; B_ref={b_ref}; schedule={budgets}")
+
+    sweep_cfg = sweep_lib.SweepConfig(
+        budgets=budgets, out_dir=args.out_dir, name=model.cfg.name,
+        verbose=True)
+    if runner.stage_init_exists(sweep_lib.init_dir(sweep_cfg)):
+        # resume: params/masks come from the persisted warm start — the
+        # untrained init only provides restore templates
+        print(f"== reusing persisted warm start under "
+              f"{sweep_lib.init_dir(sweep_cfg)} (skipping train + SNL)")
+        init = {"kind": "snl", "masks": masks0,
+                "params": model.init(jax.random.PRNGKey(0))}
+    else:
+        print("== train + SNL to B_ref (the sweep's warm start)")
+        params = train_base(model, step, opt, batches, masks0)
+        alphas = {k: jnp.ones(v.shape) for k, v in masks0.items()}
+        res_ref = run_snl(params, alphas, sloss, batches,
+                          SNLConfig(b_target=b_ref, lam0=5e-4, kappa=1.5,
+                                    epochs=6, steps_per_epoch=5, lr=3e-2,
+                                    finetune_steps=15), verbose=True)
+        init = res_ref.stage_init()
+
+    holder = {"params": init["params"]}
+    eval_b = data.train_eval_set(128)
+    evaluator, eval_acc = make_bcd_evaluator(
+        args, model, eval_b, holder, args.chunk_size, rt=6)
+
+    def set_params(p):
+        holder["params"] = p
+        if args.engine != "sequential":
+            evaluator.set_context(p)
+
+    def ft(m):
+        set_params(finetune(holder["params"], m, sloss, batches,
+                            steps=12, lr=1e-2))
+
+    def make_bcd_cfg(budget):
+        return bcd.BCDConfig(
+            b_target=budget, drc=max(1, (b_ref - budgets[-1]) // 10), rt=6,
+            adt=0.3, chunk_size=args.chunk_size)
+
+    payload = sweep_lib.run_sweep(
+        sweep_cfg, make_bcd_cfg, eval_acc, init=init, finetune=ft,
+        evaluator=evaluator if args.engine != "sequential" else None,
+        params_io=(lambda: holder["params"], set_params),
+        eval_test=lambda m: test_acc(holder["params"], m),
+        notes={"engine": args.engine, "prefetch": str(args.prefetch)})
+
+    report = getattr(evaluator, "auto_report", None)
+    if report is not None:
+        print(f"[auto-prefetch] depth={report['prefetch']} "
+              f"producer={report['producer_s']:.4f}s "
+              f"consumer={report['consumer_s']:.4f}s")
+        sweep_lib.update_notes(sweep_cfg, {"auto_prefetch": report})
+
+    print(f"\n=== sweep curve ({payload['artifact']}) ===")
+    for s in payload["stages"]:
+        acc = s.get("test_acc")
+        print(f"B={s['budget']:6d}  steps={s['steps']:3d}  "
+              f"acc={acc if acc is not None else float('nan'):.2f}%  "
+              f"masks={s['mask_fingerprint'][:12]}")
+    return payload
+
+
+def run_head_to_head(args):
+    model, data = build_model_data(args)
+    opt, step, batches, sloss, test_acc = make_closures(model, data)
+    masks0 = linearize.init_masks(model.mask_sites())
+    total = M.count(masks0)
+    b_ref = int(total * args.ref_frac)
+    b_target = int(total * args.target_frac)
+    print(f"total ReLUs {total}; B_ref={b_ref}; B_target={b_target}")
+
+    params = train_base(model, step, opt, batches, masks0)
 
     alphas = {k: jnp.ones(v.shape) for k, v in masks0.items()}
     print("== SNL to B_ref (the paper's starting checkpoint)")
@@ -91,25 +236,12 @@ def main():
 
     print(f"== BCD from B_ref to B_target (ours, engine={args.engine})")
     eval_b = data.train_eval_set(128)
-
-    # The candidate engine: params are evaluator *context* (a jit input)
-    # because finetuning rewrites them between outer steps.
     holder = {"params": res_ref.params}
     bcd_cfg = bcd.BCDConfig(
         b_target=b_target, drc=max(1, (b_ref - b_target) // 5), rt=6,
         adt=0.3, chunk_size=args.chunk_size)
-    eval_fn_p = model.make_param_eval_fn(eval_b)
-    acc_jit = jax.jit(eval_fn_p)
-    eval_acc = lambda m: float(acc_jit(M.as_device(m), holder["params"]))
-    if args.engine == "sequential":
-        evaluator = engine.make_evaluator("sequential", eval_acc=eval_acc)
-    else:
-        evaluator = engine.make_evaluator(
-            args.engine, eval_fn=eval_fn_p,
-            # don't let ragged-chunk padding exceed RT (sharded may still
-            # round up to the device count; extras are sliced off)
-            pad_to=min(bcd_cfg.chunk_size, bcd_cfg.rt),
-            context=holder["params"], prefetch=args.prefetch)
+    evaluator, eval_acc = make_bcd_evaluator(
+        args, model, eval_b, holder, bcd_cfg.chunk_size, bcd_cfg.rt)
 
     def ft(m):
         holder["params"] = finetune(holder["params"], m, sloss, batches,
@@ -125,6 +257,14 @@ def main():
     print(f"SNL : test acc {acc_snl:.2f}%")
     print(f"BCD : test acc {acc_bcd:.2f}%  (budget exact: "
           f"{M.count(res_bcd.masks) == b_target})")
+
+
+def main():
+    args = parse_args()
+    if args.sweep is not None:
+        run_sweep_mode(args)
+    else:
+        run_head_to_head(args)
 
 
 if __name__ == "__main__":

@@ -46,6 +46,14 @@ class AutoRepResult:
     alphas: Dict[str, np.ndarray]
     budget_per_epoch: List[int]
 
+    def stage_init(self) -> dict:
+        """This result as a BCD warm-start, in the same shared stage-init
+        layout as :meth:`SNLResult.stage_init` (``core.runner``): the poly
+        replacement coefficients ride in ``aux`` so a BCD stage finetuning
+        (θ, poly) can restore them alongside θ."""
+        return {"kind": "autorep", "masks": self.masks,
+                "params": self.params, "aux": {"poly": self.poly}}
+
 
 def _ste_indicator(alpha, m_prev, h):
     """Hysteresis indicator with straight-through gradient."""

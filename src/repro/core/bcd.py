@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
 import numpy as np
 
@@ -68,6 +68,33 @@ class BCDResult:
     masks: M.MaskTree
     history: List[BCDStepLog]
     mask_snapshots: List[M.MaskTree]  # for IoU / golden-set analysis
+
+
+@dataclasses.dataclass
+class BCDState:
+    """Everything Alg. 2 carries between outer steps.
+
+    This is the unit of persistence for resumable runs (core.runner): a run
+    checkpointed after step ``t`` and restored restarts the loop at step
+    ``t+1`` with the same masks and the same rng stream position, so it
+    replays bit-identically against an uninterrupted run.  Model params are
+    *not* part of this state — they live with the caller's finetune closure /
+    evaluator context and are checkpointed alongside by the runner.
+    """
+    masks: M.MaskTree
+    rng: np.random.Generator
+    step: int                      # next outer step index (== steps done)
+    b_ref: int                     # ||m||_0 at run start
+    history: List[BCDStepLog]
+    snapshots: List[M.MaskTree]
+
+
+def init_state(masks: M.MaskTree, cfg: BCDConfig) -> BCDState:
+    """Fresh run state: copies the masks, seeds the rng from cfg.seed."""
+    cfg.validate()
+    masks = {k: np.array(v, dtype=np.float32) for k, v in masks.items()}
+    return BCDState(masks=masks, rng=np.random.default_rng(cfg.seed),
+                    step=0, b_ref=M.count(masks), history=[], snapshots=[])
 
 
 def _select_block(
@@ -132,6 +159,82 @@ def _select_block(
     return M.index_stacked(cand, 0), best_idx, best_drop, n_done, found
 
 
+def total_steps(b_ref: int, cfg: BCDConfig) -> int:
+    """The schedule length: outer steps from ``b_ref`` down to b_target."""
+    return max(0, math.ceil((b_ref - cfg.b_target) / cfg.drc))
+
+
+def bcd_steps(
+    state: BCDState,
+    cfg: BCDConfig,
+    eval_acc: Callable[[M.MaskTree], float],
+    finetune: Optional[Callable[[M.MaskTree], None]] = None,
+    *,
+    evaluator=None,
+    verbose: bool = False,
+    keep_snapshots: bool = False,
+):
+    """Step-granular Alg. 2: yields one :class:`BCDStepLog` per accepted
+    block, mutating ``state`` in place.
+
+    This is the resumable core of :func:`run_bcd`: a caller (core.runner)
+    may checkpoint ``state`` after any yield and later rebuild an identical
+    generator from the restored state — the loop carries no hidden
+    per-iteration context beyond ``state`` itself, so the continuation
+    replays bit-identically (``wall_s`` excepted, which is wall-clock).
+    """
+    cfg.validate()
+    if evaluator is None:
+        from . import engine
+        evaluator = engine.SequentialEvaluator(eval_acc)
+    t_cap = total_steps(state.b_ref, cfg)
+    while state.step < t_cap:
+        t0 = time.perf_counter()
+        budget = M.count(state.masks)
+        drc_t = min(cfg.drc, budget - cfg.b_target)
+        if drc_t <= 0:
+            return
+        acc_base = float(eval_acc(state.masks))
+        masks, _, best_drop, n, found = _select_block(
+            state.masks, cfg, state.rng, evaluator, drc_t, acc_base)
+        state.masks = masks
+        acc_after = None
+        if finetune is not None and cfg.finetune_every_step:
+            finetune(state.masks)
+            acc_after = float(eval_acc(state.masks))
+        log = BCDStepLog(
+            step=state.step, budget_before=budget,
+            budget_after=M.count(state.masks),
+            trials=n, found_early=found, best_drop=best_drop,
+            acc_before=acc_base, acc_after_finetune=acc_after,
+            wall_s=time.perf_counter() - t0)
+        state.step += 1
+        state.history.append(log)
+        if keep_snapshots:
+            state.snapshots.append(
+                {k: v.copy() for k, v in state.masks.items()})
+        if verbose:
+            print(f"[bcd] t={log.step} budget "
+                  f"{log.budget_before}->{log.budget_after}"
+                  f" trials={n} early={found} drop={best_drop:.3f}%"
+                  f" acc={acc_base:.2f}->"
+                  f"{acc_after if acc_after is not None else float('nan'):.2f}"
+                  f" [{getattr(evaluator, 'name', '?')}]")
+        yield log
+
+
+def check_reached_target(state: BCDState, cfg: BCDConfig) -> None:
+    """Raise if a completed schedule did not land exactly on b_target."""
+    final = M.count(state.masks)
+    if final != cfg.b_target:
+        raise RuntimeError(
+            f"BCD terminated at budget {final}, target {cfg.b_target} "
+            f"(b_ref={state.b_ref}, drc={cfg.drc}, steps run="
+            f"{len(state.history)}/{total_steps(state.b_ref, cfg)}) — the "
+            "schedule did not reach the target; check drc/b_target against "
+            "the initial mask count")
+
+
 def run_bcd(
     masks: M.MaskTree,
     cfg: BCDConfig,
@@ -147,53 +250,16 @@ def run_bcd(
     Accuracies are in percent (0..100).  ΔAcc = acc(m) − acc(m⊙block).
     ``evaluator`` is a core.engine.CandidateEvaluator for the trial loop
     (defaults to SequentialEvaluator over ``eval_acc``); ``eval_acc`` is
-    always used for the per-step base / post-finetune accuracies.
+    always used for the per-step base / post-finetune accuracies.  For
+    checkpointed / resumable runs, drive :func:`bcd_steps` through
+    ``core.runner.BCDRunner`` instead — this wrapper is the fire-and-forget
+    path.
     """
-    cfg.validate()
-    if evaluator is None:
-        from . import engine
-        evaluator = engine.SequentialEvaluator(eval_acc)
-    rng = np.random.default_rng(cfg.seed)
-    masks = {k: np.array(v, dtype=np.float32) for k, v in masks.items()}
-    b_ref = M.count(masks)
-    if cfg.b_target >= b_ref:
-        return BCDResult(masks, [], [])
-    t_total = math.ceil((b_ref - cfg.b_target) / cfg.drc)
-    history: List[BCDStepLog] = []
-    snaps: List[M.MaskTree] = []
-
-    for t in range(t_total):
-        t0 = time.perf_counter()
-        budget = M.count(masks)
-        drc_t = min(cfg.drc, budget - cfg.b_target)
-        if drc_t <= 0:
-            break
-        acc_base = float(eval_acc(masks))
-        masks, _, best_drop, n, found = _select_block(
-            masks, cfg, rng, evaluator, drc_t, acc_base)
-        acc_after = None
-        if finetune is not None and cfg.finetune_every_step:
-            finetune(masks)
-            acc_after = float(eval_acc(masks))
-        log = BCDStepLog(
-            step=t, budget_before=budget, budget_after=M.count(masks),
-            trials=n, found_early=found, best_drop=best_drop,
-            acc_before=acc_base, acc_after_finetune=acc_after,
-            wall_s=time.perf_counter() - t0)
-        history.append(log)
-        if keep_snapshots:
-            snaps.append({k: v.copy() for k, v in masks.items()})
-        if verbose:
-            print(f"[bcd] t={t} budget {log.budget_before}->{log.budget_after}"
-                  f" trials={n} early={found} drop={best_drop:.3f}%"
-                  f" acc={acc_base:.2f}->"
-                  f"{acc_after if acc_after is not None else float('nan'):.2f}"
-                  f" [{getattr(evaluator, 'name', '?')}]")
-    final = M.count(masks)
-    if final != cfg.b_target:
-        raise RuntimeError(
-            f"BCD terminated at budget {final}, target {cfg.b_target} "
-            f"(b_ref={b_ref}, drc={cfg.drc}, steps run={len(history)}/"
-            f"{t_total}) — the schedule did not reach the target; check "
-            "drc/b_target against the initial mask count")
-    return BCDResult(masks, history, snaps)
+    state = init_state(masks, cfg)
+    if cfg.b_target >= state.b_ref:
+        return BCDResult(state.masks, [], [])
+    for _ in bcd_steps(state, cfg, eval_acc, finetune, evaluator=evaluator,
+                       verbose=verbose, keep_snapshots=keep_snapshots):
+        pass
+    check_reached_target(state, cfg)
+    return BCDResult(state.masks, state.history, state.snapshots)

@@ -42,8 +42,10 @@ from __future__ import annotations
 
 import collections
 import functools
+import statistics
+import time
 from typing import (Callable, Iterable, Iterator, NamedTuple, Optional,
-                    Protocol, runtime_checkable)
+                    Protocol, Union, runtime_checkable)
 
 import numpy as np
 import jax
@@ -79,6 +81,62 @@ class StagedChunk(NamedTuple):
     accs: jax.Array         # (n_padded,) device array, possibly not ready
 
 
+class PrefetchAutoTuner:
+    """Picks a prefetch depth from measured producer/consumer rates.
+
+    The pipeline overlaps the *producer* (host mask materialization + pad +
+    H2D transfer + dispatch) with the *consumer* (blocking on the device
+    result, i.e. the remaining compute).  :func:`evaluate_prefetched` runs
+    the first chunks of a run in strict alternation, timing both sides; the
+    first sample is discarded (it pays jit compile), and once ``n_probe``
+    clean samples exist the depth is fixed for the rest of the run:
+
+        depth = clamp(floor(consumer / producer), 1, max_depth)
+
+    — the number of chunks the producer can stage during one consumer
+    block.  Depth 1 already reaches steady-state overlap (per-chunk cost
+    max(p, c)); deeper staging only buys robustness to producer jitter when
+    the producer is much faster, and is capped because every staged chunk
+    is wasted work on an ADT early exit.
+    """
+
+    def __init__(self, n_probe: int = 2, max_depth: int = 4):
+        if n_probe < 1:
+            raise ValueError(f"n_probe must be >= 1, got {n_probe}")
+        if max_depth < 1:
+            raise ValueError(f"max_depth must be >= 1, got {max_depth}")
+        self.n_probe = n_probe
+        self.max_depth = max_depth
+        self._produce: list = []
+        self._consume: list = []
+        self._warmed = False      # first sample (compile) dropped
+        self.done = False
+
+    def add_sample(self, produce_s: float, consume_s: float) -> None:
+        if self.done:
+            return
+        if not self._warmed:
+            self._warmed = True
+            return
+        self._produce.append(produce_s)
+        self._consume.append(consume_s)
+        if len(self._produce) >= self.n_probe:
+            self.done = True
+
+    def depth(self) -> int:
+        p = max(statistics.median(self._produce), 1e-9)
+        c = statistics.median(self._consume)
+        return max(1, min(self.max_depth, int(c / p)))
+
+    def report(self) -> dict:
+        return {
+            "producer_s": statistics.median(self._produce),
+            "consumer_s": statistics.median(self._consume),
+            "prefetch": self.depth(),
+            "samples": len(self._produce),
+        }
+
+
 def evaluate_prefetched(evaluator, chunks: Iterable[M.MaskTree]
                         ) -> Iterator[np.ndarray]:
     """Producer/consumer driver for the trial loop.
@@ -96,14 +154,38 @@ def evaluate_prefetched(evaluator, chunks: Iterable[M.MaskTree]
     chunks beyond the staging horizon are never even materialized.  Chunk k's
     result is always yielded before chunk k+depth+1 is staged, so an early
     exit at chunk k commits at most ``depth`` chunks of wasted work.
+
+    When the evaluator carries a live :class:`PrefetchAutoTuner`
+    (``prefetch="auto"``), the first chunks run in strict alternation while
+    the tuner times the producer vs the consumer; once it converges the
+    evaluator's ``prefetch_depth`` is fixed for the rest of the run and the
+    loop switches to staged prefetching mid-stream.  The probe phase changes
+    timing only — chunk results and their order are identical.
     """
+    it = iter(chunks)
+    tuner = getattr(evaluator, "auto_tuner", None)
+    if tuner is not None and not tuner.done and hasattr(evaluator, "stage"):
+        while not tuner.done:
+            t0 = time.perf_counter()
+            try:
+                chunk = next(it)
+            except StopIteration:
+                return
+            staged_one = evaluator.stage(chunk)
+            t1 = time.perf_counter()
+            accs = evaluator.evaluate_staged(staged_one)
+            t2 = time.perf_counter()
+            tuner.add_sample(t1 - t0, t2 - t1)
+            if tuner.done:
+                evaluator.prefetch_depth = tuner.depth()
+                evaluator.auto_report = tuner.report()
+            yield accs
     depth = int(getattr(evaluator, "prefetch_depth", 0) or 0)
     if depth <= 0 or not hasattr(evaluator, "stage"):
-        for chunk in chunks:
+        for chunk in it:
             yield evaluator.evaluate(chunk)
         return
     staged: collections.deque = collections.deque()
-    it = iter(chunks)
     exhausted = False
     while True:
         while not exhausted and len(staged) <= depth:
@@ -303,15 +385,32 @@ class PipelinedEvaluator(ShardedEvaluator):
     candidate×batch layout.  Selection is unchanged versus every other
     backend: chunks are consumed in sampling order and the ADT early exit
     checks chunk k's results before chunk k+1+prefetch is committed.
+
+    ``prefetch="auto"`` defers the depth to a :class:`PrefetchAutoTuner`:
+    the run's first chunks execute in strict alternation while producer and
+    consumer rates are measured, then ``prefetch_depth`` locks in for the
+    rest of the run (``auto_report`` records the measurements) — the
+    ROADMAP's "pick prefetch from measured rates instead of a flag".
     """
 
     name = "pipelined"
 
     def __init__(self, eval_fn: EvalFn, *, pad_to: Optional[int] = None,
-                 context=None, prefetch: int = 1, mesh=None,
-                 context_specs=None):
-        if prefetch < 0:
+                 context=None, prefetch: Union[int, str] = 1, mesh=None,
+                 context_specs=None, auto_probe_chunks: int = 2,
+                 auto_max_prefetch: int = 4):
+        if prefetch == "auto":
+            self.auto_tuner = PrefetchAutoTuner(
+                n_probe=auto_probe_chunks, max_depth=auto_max_prefetch)
+            prefetch = 0          # strict alternation until the probe locks
+        elif isinstance(prefetch, str):
+            raise ValueError(
+                f"prefetch must be an int >= 0 or 'auto', got {prefetch!r}")
+        elif prefetch < 0:
             raise ValueError(f"prefetch must be >= 0, got {prefetch}")
+        else:
+            self.auto_tuner = None
+        self.auto_report: Optional[dict] = None
         if mesh is None:
             if context_specs is not None:
                 raise ValueError("context_specs requires a mesh")
@@ -343,7 +442,7 @@ def make_evaluator(
     pad_to: Optional[int] = None,
     context=None,
     context_specs=None,
-    prefetch: int = 1,
+    prefetch: Union[int, str] = 1,
 ) -> CandidateEvaluator:
     """Factory: ``backend`` in {'sequential','batched','sharded','pipelined'}.
 
@@ -352,7 +451,14 @@ def make_evaluator(
     ``mesh`` is None; pipelined keeps single-device placement unless a mesh
     is passed.  ``context_specs`` (see :func:`context_batch_specs`) shards
     the context over the mesh — the joint candidate×batch layout.
+    ``prefetch`` is a depth or ``"auto"`` (measured-rate tuning, pipelined
+    only).
     """
+    if backend != "pipelined" and prefetch == "auto":
+        raise ValueError(
+            f"prefetch='auto' requires the pipelined backend; the "
+            f"{backend!r} backend has no staging pipeline to tune "
+            "(integer prefetch values are ignored as a no-op hint)")
     if backend == "sequential":
         if eval_acc is None:
             raise ValueError("sequential backend needs eval_acc")

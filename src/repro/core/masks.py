@@ -13,8 +13,9 @@ per outer iteration, never inside a jitted step.
 """
 from __future__ import annotations
 
+import hashlib
+
 import numpy as np
-import jax
 import jax.numpy as jnp
 from typing import Dict, Iterable, Tuple
 
@@ -238,6 +239,22 @@ def is_subset(m_small: MaskTree, m_big: MaskTree) -> bool:
         if np.any((a > 0.5) & ~(m_big[k] > 0.5)):
             return False
     return True
+
+
+def fingerprint(masks: MaskTree) -> str:
+    """Content hash of a binary mask tree: sha256 over sorted site names,
+    shapes, and packed mask bits.  Two trees fingerprint equal iff they
+    keep/linearize exactly the same coordinates — the identity used by
+    resume tests and the sweep curve artifact (float payloads are reduced
+    to their >0.5 binarization, so dtype/storage differences don't leak
+    into the identity)."""
+    h = hashlib.sha256()
+    for k in sorted(masks.keys()):
+        v = np.asarray(masks[k])
+        h.update(k.encode())
+        h.update(repr(tuple(v.shape)).encode())
+        h.update(np.packbits(v.reshape(-1) > 0.5).tobytes())
+    return h.hexdigest()
 
 
 def per_site_counts(masks: MaskTree) -> Dict[str, int]:

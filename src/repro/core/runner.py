@@ -1,0 +1,331 @@
+"""Resumable BCD run orchestration (crash-safe Alg. 2).
+
+``run_bcd`` is fire-and-forget: a multi-hour descent that dies mid-run loses
+everything.  :class:`BCDRunner` drives the same step-granular loop
+(:func:`core.bcd.bcd_steps`) but persists the full run state through
+``training.checkpoint`` after every accepted block:
+
+    masks          the current iterate (the only thing Alg. 2 mutates)
+    params         the caller's finetuned model params (via ``params_io``)
+    rng state      the numpy bit-generator state, so the candidate stream
+                   continues exactly where it stopped
+    step / logs    outer-step index + full history (JSON, in manifest meta)
+
+Checkpoints are atomic (tmp dir + rename) and checksummed; restore takes the
+*newest valid* checkpoint, skipping a partially-written or corrupted one from
+the crash itself.  Because ``bcd_steps`` carries no hidden state beyond
+``BCDState``, a resumed run replays bit-identically against an uninterrupted
+one — same selected blocks, same logs (``wall_s`` excepted).
+
+The same checkpoint layout doubles as the *stage-init* warm-start format
+(:func:`save_stage_init` / :func:`load_stage_init`) shared by
+``SNLResult.stage_init()`` / ``AutoRepResult.stage_init()`` and by completed
+sweep stages — the glue ``launch.sweep`` uses to descend a budget schedule
+from an SNL or AutoReP reference checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+
+from repro.training import checkpoint
+from . import bcd as bcd_lib
+from . import masks as M
+
+CheckpointError = checkpoint.CheckpointError
+
+# Testing/CI hook: SIGKILL this process after N accepted blocks have been
+# checkpointed (process-wide count, across sweep stages).  A real kill -9 —
+# no atexit, no flushing — so the resume path is exercised against the same
+# failure mode a preempted node produces.
+KILL_ENV = "REPRO_KILL_AFTER_STEPS"
+_accepted_in_process = 0
+
+
+def _maybe_kill_for_test() -> None:
+    global _accepted_in_process
+    limit = os.environ.get(KILL_ENV)
+    if not limit:
+        return
+    _accepted_in_process += 1
+    if _accepted_in_process >= int(limit):
+        os.kill(os.getpid(), signal.SIGKILL)
+
+
+# ------------------------------------------------------------ rng round-trip
+
+
+def rng_state_to_jsonable(rng: np.random.Generator) -> dict:
+    """A numpy Generator's full position as JSON-able data (Python ints are
+    arbitrary precision, so the 128-bit PCG64 state serializes losslessly)."""
+    return rng.bit_generator.state
+
+
+def rng_from_state(state: dict) -> np.random.Generator:
+    """Inverse of :func:`rng_state_to_jsonable`: a Generator that continues
+    the stream bit-identically from the recorded position."""
+    rng = np.random.default_rng(0)
+    if state["bit_generator"] != type(rng.bit_generator).__name__:
+        raise CheckpointError(
+            f"checkpointed rng is a {state['bit_generator']}, this numpy "
+            f"builds {type(rng.bit_generator).__name__} — refusing a "
+            "stream that cannot replay bit-identically")
+    rng.bit_generator.state = state
+    return rng
+
+
+# ------------------------------------------------------------ run persistence
+
+
+def _cfg_meta(cfg: bcd_lib.BCDConfig) -> dict:
+    return dataclasses.asdict(cfg)
+
+
+def save_run_state(state: bcd_lib.BCDState, cfg: bcd_lib.BCDConfig,
+                   ckpt_dir: str, *, params=None, keep: int = 3) -> str:
+    """Checkpoint a run after ``state.step`` accepted blocks (atomic).
+
+    The full step history rides in every manifest (cumulative write cost
+    O(steps²) over a run) — a deliberate trade for single-checkpoint
+    restores: at ~150 bytes/entry the manifest stays well under a megabyte
+    for thousand-step runs, dwarfed by the params leaves.  Revisit with an
+    append-only sidecar if manifests ever dominate checkpoint I/O.
+    """
+    tree = {"masks": state.masks}
+    if params is not None:
+        tree["params"] = params
+    meta = {
+        "algo": "bcd",
+        "step": state.step,
+        "b_ref": state.b_ref,
+        "rng": rng_state_to_jsonable(state.rng),
+        "history": [dataclasses.asdict(h) for h in state.history],
+        "cfg": _cfg_meta(cfg),
+        "has_params": params is not None,
+    }
+    return checkpoint.save(tree, ckpt_dir, state.step, meta=meta, keep=keep)
+
+
+def restore_run_state(
+    ckpt_dir: str,
+    cfg: bcd_lib.BCDConfig,
+    masks_template: M.MaskTree,
+    *,
+    params_template=None,
+    step: Optional[int] = None,
+) -> Tuple[bcd_lib.BCDState, object]:
+    """Rebuild a :class:`BCDState` (+ params) from the newest valid
+    checkpoint.  Refuses a checkpoint written under a different BCD config:
+    resuming a run under a changed schedule/seed cannot replay
+    bit-identically, which is the whole contract.
+    """
+    verify = True
+    if step is None:
+        step = checkpoint.latest_valid_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no valid checkpoints in {ckpt_dir}")
+        verify = False     # latest_valid_step already deep-hashed this step
+    meta = checkpoint.read_manifest(ckpt_dir, step).get("meta", {})
+    if meta.get("algo") != "bcd":
+        raise CheckpointError(
+            f"checkpoint step {step} in {ckpt_dir} is not a BCD run state "
+            f"(algo={meta.get('algo')!r})")
+    saved_cfg = meta.get("cfg", {})
+    now_cfg = _cfg_meta(cfg)
+    diffs = {k: (saved_cfg.get(k), now_cfg[k]) for k in now_cfg
+             if saved_cfg.get(k) != now_cfg[k]}
+    if diffs:
+        raise CheckpointError(
+            "refusing to resume under a different BCDConfig (bit-identical "
+            f"replay impossible); changed fields: {diffs}")
+    template = {"masks": masks_template}
+    if meta.get("has_params"):
+        if params_template is None:
+            raise CheckpointError(
+                "checkpoint carries params but no params_template was "
+                "given for the restore")
+        template["params"] = params_template
+    tree, _ = checkpoint.restore(template, ckpt_dir, step, verify=verify)
+    masks = {k: np.asarray(v, dtype=np.float32)
+             for k, v in tree["masks"].items()}
+    history = [bcd_lib.BCDStepLog(**h) for h in meta.get("history", [])]
+    state = bcd_lib.BCDState(
+        masks=masks, rng=rng_from_state(meta["rng"]),
+        step=int(meta["step"]), b_ref=int(meta["b_ref"]),
+        history=history, snapshots=[])
+    return state, tree.get("params")
+
+
+# ------------------------------------------------------------ stage-init I/O
+
+_STAGE_INIT_STEP = 0
+
+
+def save_stage_init(path: str, init: dict, *, meta: Optional[dict] = None
+                    ) -> str:
+    """Persist a warm-start checkpoint in the shared stage-init layout.
+
+    ``init`` is ``{kind, masks, params, aux}`` — what
+    ``SNLResult.stage_init()`` / ``AutoRepResult.stage_init()`` return, and
+    what every completed sweep stage writes for its successor.  ``aux``
+    (soft alphas, poly coefficients, ...) is persisted but optional on load:
+    restore reads only the leaves its template asks for.
+    """
+    tree = {"masks": init["masks"]}
+    if init.get("params") is not None:
+        tree["params"] = init["params"]
+    if init.get("aux"):
+        tree["aux"] = init["aux"]
+    info = {
+        "stage_init": True,
+        "kind": init.get("kind", "unknown"),
+        "budget": M.count(init["masks"]),
+        "mask_fingerprint": M.fingerprint(init["masks"]),
+        "has_params": init.get("params") is not None,
+    }
+    info.update(meta or {})
+    return checkpoint.save(tree, path, _STAGE_INIT_STEP, meta=info, keep=1)
+
+
+def load_stage_init(path: str, masks_template: M.MaskTree, *,
+                    params_template=None, aux_template=None) -> dict:
+    """Load a stage-init checkpoint back into ``{kind, masks, params, aux}``.
+    Raises :class:`CheckpointError` when absent/corrupted — callers decide
+    whether that means "first run" or "fatal"."""
+    if not checkpoint.validate(path, _STAGE_INIT_STEP, deep=True):
+        raise CheckpointError(f"no valid stage-init checkpoint at {path}")
+    meta = checkpoint.read_manifest(path, _STAGE_INIT_STEP).get("meta", {})
+    if not meta.get("stage_init"):
+        raise CheckpointError(f"checkpoint at {path} is not a stage init")
+    template = {"masks": masks_template}
+    if meta.get("has_params"):
+        if params_template is None:
+            raise CheckpointError(
+                f"stage init at {path} carries params but no "
+                "params_template was given")
+        template["params"] = params_template
+    if aux_template is not None:
+        template["aux"] = aux_template
+    # validate(deep=True) above already hashed every leaf
+    tree, _ = checkpoint.restore(template, path, _STAGE_INIT_STEP,
+                                 verify=False)
+    masks = {k: np.asarray(v, dtype=np.float32)
+             for k, v in tree["masks"].items()}
+    return {"kind": meta.get("kind", "unknown"), "masks": masks,
+            "params": tree.get("params"), "aux": tree.get("aux"),
+            "meta": meta}
+
+
+def stage_init_exists(path: str) -> bool:
+    return checkpoint.validate(path, _STAGE_INIT_STEP, deep=True)
+
+
+# ------------------------------------------------------------------ runner
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    ckpt_dir: str
+    checkpoint_every: int = 1     # accepted blocks between checkpoints
+    keep: int = 3                 # retained checkpoints (gc'd oldest-first)
+    max_steps: Optional[int] = None   # stop (not fail) after N accepted
+    #                                   blocks this invocation — preemption
+    #                                   drills and budgeted partial runs
+    verbose: bool = False
+
+
+class BCDRunner:
+    """Checkpointed, resumable ``run_bcd``.
+
+    ``params_io`` is an optional ``(get_params, set_params)`` pair: when the
+    run finetunes between steps, the current params are part of the resume
+    state, and the runner snapshots them with every checkpoint and pushes
+    restored params back through ``set_params`` before the loop restarts
+    (the caller's ``set_params`` must also refresh any evaluator context —
+    exactly like its finetune callback does).
+
+    ``run()`` resumes automatically from the newest valid checkpoint in
+    ``cfg.ckpt_dir``; a corrupted newest checkpoint falls back to the one
+    before it (the replayed steps re-select the same blocks, so the result
+    is unchanged — crash-consistency by determinism, not by fsync).
+    """
+
+    def __init__(
+        self,
+        bcd_cfg: bcd_lib.BCDConfig,
+        run_cfg: RunnerConfig,
+        eval_acc: Callable[[M.MaskTree], float],
+        finetune: Optional[Callable[[M.MaskTree], None]] = None,
+        *,
+        evaluator=None,
+        params_io: Optional[Tuple[Callable[[], object],
+                                  Callable[[object], None]]] = None,
+    ):
+        bcd_cfg.validate()
+        self.bcd_cfg = bcd_cfg
+        self.run_cfg = run_cfg
+        self._eval_acc = eval_acc
+        self._finetune = finetune
+        self._evaluator = evaluator
+        self._params_io = params_io
+        self.resumed_from: Optional[int] = None   # step, for observability
+        self.stopped_early = False                # hit run_cfg.max_steps
+
+    def _restore_or_init(self, init_masks: M.MaskTree) -> bcd_lib.BCDState:
+        params_template = self._params_io[0]() if self._params_io else None
+        try:
+            state, params = restore_run_state(
+                self.run_cfg.ckpt_dir, self.bcd_cfg, init_masks,
+                params_template=params_template)
+        except FileNotFoundError:
+            return bcd_lib.init_state(init_masks, self.bcd_cfg)
+        if params is not None and self._params_io is not None:
+            self._params_io[1](params)
+        self.resumed_from = state.step
+        if self.run_cfg.verbose:
+            print(f"[runner] resumed {self.run_cfg.ckpt_dir} at step "
+                  f"{state.step} (budget {M.count(state.masks)})")
+        return state
+
+    def _checkpoint(self, state: bcd_lib.BCDState) -> None:
+        params = self._params_io[0]() if self._params_io else None
+        save_run_state(state, self.bcd_cfg, self.run_cfg.ckpt_dir,
+                       params=params, keep=self.run_cfg.keep)
+        _maybe_kill_for_test()
+
+    def run(self, init_masks: M.MaskTree) -> bcd_lib.BCDResult:
+        """Run (or resume) to completion; returns the usual BCDResult.
+
+        With ``max_steps`` set, the loop may stop before reaching b_target:
+        ``stopped_early`` is True and the returned result holds the partial
+        state (budget check is skipped — the next invocation picks up the
+        checkpoint).
+        """
+        state = self._restore_or_init(init_masks)
+        self.stopped_early = False
+        if self.bcd_cfg.b_target >= state.b_ref:
+            return bcd_lib.BCDResult(state.masks, state.history, [])
+        done_now = 0
+        since_ckpt = 0
+        for _log in bcd_lib.bcd_steps(
+                state, self.bcd_cfg, self._eval_acc, self._finetune,
+                evaluator=self._evaluator, verbose=self.run_cfg.verbose):
+            done_now += 1
+            since_ckpt += 1
+            if since_ckpt >= self.run_cfg.checkpoint_every:
+                self._checkpoint(state)
+                since_ckpt = 0
+            if self.run_cfg.max_steps is not None and \
+                    done_now >= self.run_cfg.max_steps and \
+                    M.count(state.masks) > self.bcd_cfg.b_target:
+                self.stopped_early = True
+                break
+        if since_ckpt:
+            self._checkpoint(state)
+        if not self.stopped_early:
+            bcd_lib.check_reached_target(state, self.bcd_cfg)
+        return bcd_lib.BCDResult(state.masks, state.history, state.snapshots)

@@ -10,7 +10,7 @@ BCD.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Iterable, List, Optional, Tuple
+from typing import Callable, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +42,14 @@ class SNLResult:
     snapshots: List[M.MaskTree]   # binarized masks per epoch (Fig. 6 analysis)
     budget_per_epoch: List[int]
     lam_per_epoch: List[float]
+
+    def stage_init(self) -> dict:
+        """This result as a BCD warm-start (the paper's B_ref checkpoint),
+        in the shared stage-init layout ``core.runner.save_stage_init``
+        persists: SNL and AutoReP emit the same {kind, masks, params, aux}
+        shape, so a budget sweep can descend from either."""
+        return {"kind": "snl", "masks": self.masks, "params": self.params,
+                "aux": {"alphas": self.alphas}}
 
 
 def run_snl(

@@ -80,7 +80,6 @@ def rwkv6_scan(r, k, v, w, u, state, *, chunk: int = 32,
     grid = (BH, nchunks)
 
     seq = lambda i, j: (i, j, 0)
-    per_head = lambda i, j: (i, 0)
     full_head = lambda i, j: (i, 0, 0)
     y, sout = pl.pallas_call(
         functools.partial(_rwkv6_kernel, nchunks=nchunks),

@@ -1,2 +1,2 @@
 # NOTE: do not import dryrun here — it sets XLA_FLAGS at import time.
-from . import mesh  # noqa: F401
+from . import mesh, sweep  # noqa: F401

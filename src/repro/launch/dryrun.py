@@ -24,11 +24,10 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import (ARCH_IDS, SHAPES, cell_applicable, get_config,
                            input_specs)
-from repro.core import linearize
 from repro.models.lm import LM
 from repro.training import optimizer as opt_lib
 from repro.training import serve as serve_lib

@@ -1,0 +1,254 @@
+"""Multi-budget BCD sweep driver: the paper's accuracy-vs-budget curve.
+
+The headline experiment (Fig. 4 protocol) descends a budget schedule
+``[B1 > B2 > ... > B_target]`` with finetuning interleaved, warm-starting
+each stage from the previous stage's result and stage 0 from an SNL or
+AutoReP reference checkpoint.  ``run_sweep`` turns that into a restartable
+pipeline on top of ``core.runner``:
+
+    out_dir/
+        init/                    stage-init checkpoint (warm start, persisted
+                                 on first run; later runs load it so a resume
+                                 never depends on the caller re-deriving it)
+        stage_00_b<B1>/
+            ckpt/                BCDRunner checkpoints (one per accepted block)
+            final/               stage-init checkpoint for stage 1's warm start
+            result.json          stage summary (written only on completion)
+        stage_01_b<B2>/ ...
+        SWEEP_<name>.json        the curve artifact, rewritten after every
+                                 stage
+
+Kill the process at ANY point — including SIGKILL mid-stage — and rerunning
+the same command resumes: completed stages are skipped via their
+``result.json`` + ``final/`` checkpoint, and the in-flight stage resumes from
+its newest valid runner checkpoint, replaying bit-identically (same blocks,
+same logs; ``wall_s`` excepted).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, List, Optional, Tuple
+
+from repro.core import bcd as bcd_lib
+from repro.core import masks as M
+from repro.core import runner as runner_lib
+
+
+@dataclasses.dataclass
+class SweepConfig:
+    budgets: List[int]            # strictly descending ReLU budgets
+    out_dir: str
+    name: str = "model"           # artifact: SWEEP_<name>.json
+    checkpoint_every: int = 1
+    keep: int = 3
+    verbose: bool = False
+
+    def validate(self, b_init: Optional[int] = None) -> None:
+        if not self.budgets:
+            raise ValueError("sweep schedule is empty")
+        if any(b < 0 for b in self.budgets):
+            raise ValueError(f"budgets must be >= 0: {self.budgets}")
+        if any(a <= b for a, b in zip(self.budgets, self.budgets[1:])):
+            raise ValueError(
+                f"sweep schedule must be strictly descending: {self.budgets}")
+        if b_init is not None and self.budgets[0] >= b_init:
+            raise ValueError(
+                f"first sweep budget {self.budgets[0]} must be below the "
+                f"warm-start budget {b_init}")
+
+
+def _stage_dir(cfg: SweepConfig, i: int) -> str:
+    return os.path.join(cfg.out_dir, f"stage_{i:02d}_b{cfg.budgets[i]}")
+
+
+def init_dir(cfg: SweepConfig) -> str:
+    """The persisted warm-start location (callers must not hardcode it)."""
+    return os.path.join(cfg.out_dir, "init")
+
+
+def artifact_path(cfg: SweepConfig) -> str:
+    return os.path.join(cfg.out_dir, f"SWEEP_{cfg.name}.json")
+
+
+def _atomic_write_json(path: str, obj) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=2)
+    os.replace(tmp, path)
+
+
+def update_notes(cfg: SweepConfig, extra: dict) -> None:
+    """Atomically merge keys into the artifact's ``notes`` (e.g. the
+    auto-prefetch report, known only after the run)."""
+    path = artifact_path(cfg)
+    with open(path) as f:
+        payload = json.load(f)
+    payload.setdefault("notes", {}).update(extra)
+    _atomic_write_json(path, payload)
+
+
+def _log_jsonable(h: bcd_lib.BCDStepLog) -> dict:
+    """A step log for the curve artifact, with ``wall_s`` split out: the
+    remaining fields are the run's deterministic identity (what the
+    kill-and-resume smoke job compares across runs)."""
+    d = dataclasses.asdict(h)
+    d.pop("wall_s")
+    return d
+
+
+def _write_artifact(cfg: SweepConfig, stages: List[dict],
+                    complete: bool, notes: Optional[dict] = None) -> dict:
+    path = artifact_path(cfg)
+    # keep notes keys added out-of-band (update_notes) across rewrites —
+    # a resumed sweep must not silently drop e.g. the auto-prefetch report
+    merged = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f).get("notes", {}) or {}
+        except (json.JSONDecodeError, OSError):
+            merged = {}
+    merged.update(notes or {})
+    payload = {
+        "name": cfg.name,
+        "schedule": list(cfg.budgets),
+        "complete": complete,
+        "stages": stages,
+        "notes": merged,
+    }
+    _atomic_write_json(path, payload)
+    payload["artifact"] = path
+    return payload
+
+
+def run_sweep(
+    sweep_cfg: SweepConfig,
+    make_bcd_cfg: Callable[[int], bcd_lib.BCDConfig],
+    eval_acc: Callable[[M.MaskTree], float],
+    *,
+    init: Optional[dict] = None,
+    finetune: Optional[Callable[[M.MaskTree], None]] = None,
+    evaluator=None,
+    params_io: Optional[Tuple[Callable[[], object],
+                              Callable[[object], None]]] = None,
+    eval_test: Optional[Callable[[M.MaskTree], float]] = None,
+    notes: Optional[dict] = None,
+) -> dict:
+    """Descend the budget schedule; returns the curve artifact payload.
+
+    make_bcd_cfg(budget) builds each stage's BCDConfig (b_target must equal
+    the budget).  ``init`` — a ``{kind, masks, params, aux}`` warm start
+    (e.g. ``SNLResult.stage_init()``) — is required on the first run and
+    ignored afterwards: the persisted ``out_dir/init`` checkpoint wins, so
+    resumed sweeps never drift from the original warm start.  ``params_io``
+    and ``finetune`` follow the :class:`~repro.core.runner.BCDRunner`
+    contract; ``eval_test`` (optional) scores each completed stage for the
+    curve.  ``notes`` is stored verbatim in the artifact.
+    """
+    os.makedirs(sweep_cfg.out_dir, exist_ok=True)
+    init_path = init_dir(sweep_cfg)
+
+    # -- warm start: persisted init wins over the caller's argument (so a
+    # resumed sweep can never drift from its original warm start); the
+    # argument doubles as the restore template, so it is always required
+    if init is None:
+        raise ValueError(
+            "run_sweep needs `init`: the warm start on the first run, the "
+            "restore template (mask shapes / params structure) on a resume")
+    try:
+        start = runner_lib.load_stage_init(
+            init_path, init["masks"],
+            params_template=params_io[0]() if params_io else None)
+    except runner_lib.CheckpointError:      # absent/corrupt: first run
+        runner_lib.save_stage_init(init_path, init)
+        start = dict(init)
+    b_init = M.count(start["masks"])
+    sweep_cfg.validate(b_init)
+
+    masks = start["masks"]
+    if params_io is not None and start.get("params") is not None:
+        params_io[1](start["params"])
+
+    stages: List[dict] = []
+    complete = True
+    for i, budget in enumerate(sweep_cfg.budgets):
+        sdir = _stage_dir(sweep_cfg, i)
+        result_path = os.path.join(sdir, "result.json")
+        final_dir = os.path.join(sdir, "final")
+        bcd_cfg = make_bcd_cfg(budget)
+        if bcd_cfg.b_target != budget:
+            raise ValueError(
+                f"make_bcd_cfg({budget}).b_target == {bcd_cfg.b_target}")
+
+        if os.path.exists(result_path):
+            try:
+                # completed stage: reuse its summary, warm-start from final
+                done = runner_lib.load_stage_init(
+                    final_dir, masks,
+                    params_template=params_io[0]() if params_io else None)
+                with open(result_path) as f:
+                    stage = json.load(f)
+            except (runner_lib.CheckpointError, json.JSONDecodeError,
+                    OSError):
+                pass            # final/ or summary unusable: re-run below
+            else:
+                masks = done["masks"]
+                if params_io is not None and done.get("params") is not None:
+                    params_io[1](done["params"])
+                if sweep_cfg.verbose:
+                    print(f"[sweep] stage {i} (b={budget}) already complete "
+                          "— skipped")
+                stages.append(stage)
+                # no artifact rewrite here: nothing new happened, and
+                # clobbering a complete artifact with a partial one would
+                # open a crash window on an otherwise-finished sweep
+                continue
+
+        t0 = time.perf_counter()
+        runner = runner_lib.BCDRunner(
+            bcd_cfg,
+            runner_lib.RunnerConfig(
+                ckpt_dir=os.path.join(sdir, "ckpt"),
+                checkpoint_every=sweep_cfg.checkpoint_every,
+                keep=sweep_cfg.keep, verbose=sweep_cfg.verbose),
+            eval_acc, finetune, evaluator=evaluator, params_io=params_io)
+        res = runner.run(masks)
+        if runner.stopped_early:
+            complete = False
+            break
+        masks = res.masks
+
+        stage = {
+            "stage": i,
+            "budget": budget,
+            "mask_fingerprint": M.fingerprint(masks),
+            "steps": len(res.history),
+            "trials_total": int(sum(h.trials for h in res.history)),
+            "history": [_log_jsonable(h) for h in res.history],
+            "resumed_from": runner.resumed_from,
+            "wall_s": time.perf_counter() - t0,
+        }
+        if eval_test is not None:
+            stage["test_acc"] = float(eval_test(masks))
+        # persist the stage's warm-start for its successor BEFORE the
+        # summary: a crash between the two re-runs a no-op stage rather
+        # than warm-starting from a missing checkpoint
+        runner_lib.save_stage_init(final_dir, {
+            "kind": "bcd_stage", "masks": masks,
+            "params": params_io[0]() if params_io else None})
+        _atomic_write_json(result_path, stage)
+        stages.append(stage)
+        _write_artifact(sweep_cfg, stages, False, notes)
+        if sweep_cfg.verbose:
+            acc = stage.get("test_acc")
+            print(f"[sweep] stage {i} done: b={budget} "
+                  f"fingerprint={stage['mask_fingerprint'][:12]} "
+                  f"acc={acc if acc is not None else 'n/a'}")
+
+    complete = complete and len(stages) == len(sweep_cfg.budgets)
+    payload = _write_artifact(sweep_cfg, stages, complete, notes)
+    payload["final_masks"] = masks
+    return payload

@@ -8,7 +8,6 @@ materialize (S, S) score tensors.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax

@@ -13,7 +13,6 @@ same compiled forward with different mask values — no recompilation.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -14,7 +14,6 @@ fine-grained d_ff).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ The decode path is the exact O(1)-state recurrence (long_500k cells).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,6 +11,7 @@ it onto ANY mesh — elastic restart across different topologies (DESIGN §5).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
@@ -21,6 +22,21 @@ import jax
 import numpy as np
 
 _SEP = "/"
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint exists but cannot be trusted: missing leaf files,
+    unreadable/mismatched manifest, or a leaf whose bytes fail the
+    manifest's sha256 — the restore path refuses partial state rather than
+    resuming a run from silently corrupted arrays."""
+
+
+def _file_sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
 
 
 def _key_part(p) -> str:
@@ -53,9 +69,11 @@ def save(state, ckpt_dir: str, step: int, *, meta: Optional[dict] = None,
     for i, (key, leaf) in enumerate(sorted(flat.items())):
         arr = np.asarray(jax.device_get(leaf))
         fname = f"leaf_{i:05d}.npy"
-        np.save(os.path.join(tmp, fname), arr)
+        fpath = os.path.join(tmp, fname)
+        np.save(fpath, arr)
         manifest["leaves"][key] = {
-            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "sha256": _file_sha256(fpath)}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -73,31 +91,68 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def read_manifest(ckpt_dir: str, step: int) -> dict:
+    """Load + sanity-check a checkpoint's manifest (incl. its ``meta``)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    mf = os.path.join(d, "manifest.json")
+    if not os.path.exists(mf):
+        raise CheckpointError(f"no manifest at {mf}")
+    try:
+        with open(mf) as f:
+            manifest = json.load(f)
+    except json.JSONDecodeError as e:
+        raise CheckpointError(f"unreadable manifest {mf}: {e}") from e
+    if "leaves" not in manifest:
+        raise CheckpointError(f"manifest {mf} has no leaves table")
+    return manifest
+
+
 def restore(state_template, ckpt_dir: str, step: Optional[int] = None,
-            shardings=None):
+            shardings=None, *, verify: bool = True):
     """Restore into the structure of ``state_template``; optionally place
-    leaves with ``shardings`` (same tree) — elastic re-shard onto any mesh."""
+    leaves with ``shardings`` (same tree) — elastic re-shard onto any mesh.
+
+    ``verify`` checks each leaf file against the manifest's sha256 before
+    use (checkpoints written before checksums existed skip silently);
+    corruption raises :class:`CheckpointError` instead of handing the caller
+    partial state.
+    """
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = read_manifest(ckpt_dir, step)
     flat_t = _flatten(state_template)
     shard_flat = _flatten(shardings) if shardings is not None else None
     out = {}
-    for key, tmpl in flat_t.items():
+    for key in flat_t:
+        if key not in manifest["leaves"]:
+            raise CheckpointError(
+                f"checkpoint {d} is missing leaf {key!r} required by the "
+                "restore template")
         info = manifest["leaves"][key]
-        arr = np.load(os.path.join(d, info["file"]))
+        fpath = os.path.join(d, info["file"])
+        if not os.path.exists(fpath):
+            raise CheckpointError(f"checkpoint {d}: leaf file {info['file']} "
+                                  "is missing (partial write?)")
+        if verify and info.get("sha256") and \
+                _file_sha256(fpath) != info["sha256"]:
+            raise CheckpointError(
+                f"checkpoint {d}: leaf {key!r} ({info['file']}) fails its "
+                "manifest sha256 — corrupted on disk")
+        try:
+            arr = np.load(fpath)
+        except (ValueError, OSError, EOFError) as e:
+            raise CheckpointError(
+                f"checkpoint {d}: leaf {key!r} unreadable: {e}") from e
         if shard_flat is not None and key in shard_flat and \
                 shard_flat[key] is not None:
             out[key] = jax.device_put(arr, shard_flat[key])
         else:
             out[key] = jax.numpy.asarray(arr)
     # rebuild tree in template structure
-    leaves_t, treedef = jax.tree_util.tree_flatten(state_template)
-    keys = list(_flatten(state_template).keys())
+    treedef = jax.tree_util.tree_structure(state_template)
     # _flatten sorted ordering must match tree_flatten ordering:
     ordered = [out[k] for k in _flatten_keys_in_order(state_template)]
     return jax.tree_util.tree_unflatten(treedef, ordered), step
@@ -116,16 +171,37 @@ def _gc(ckpt_dir: str, keep: int):
                       ignore_errors=True)
 
 
-def validate(ckpt_dir: str, step: int) -> bool:
-    """A checkpoint is valid iff its manifest and all leaf files exist."""
+def validate(ckpt_dir: str, step: int, *, deep: bool = False) -> bool:
+    """A checkpoint is valid iff its manifest and all leaf files exist;
+    ``deep`` additionally re-hashes every leaf against the manifest's
+    sha256 (catches truncated/bit-rotted files, not just missing ones)."""
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    mf = os.path.join(d, "manifest.json")
-    if not os.path.exists(mf):
+    try:
+        manifest = read_manifest(ckpt_dir, step)
+    except CheckpointError:
         return False
     try:
-        with open(mf) as f:
-            manifest = json.load(f)
-        return all(os.path.exists(os.path.join(d, v["file"]))
-                   for v in manifest["leaves"].values())
-    except (json.JSONDecodeError, KeyError):
+        for v in manifest["leaves"].values():
+            fpath = os.path.join(d, v["file"])
+            if not os.path.exists(fpath):
+                return False
+            if deep and v.get("sha256") and \
+                    _file_sha256(fpath) != v["sha256"]:
+                return False
+    except (KeyError, TypeError):
         return False
+    return True
+
+
+def latest_valid_step(ckpt_dir: str, *, deep: bool = True) -> Optional[int]:
+    """Newest step that passes :func:`validate` — the resume point.  Scans
+    descending so a crash that corrupted only the newest checkpoint falls
+    back to the one before it."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted((int(m.group(1)) for d in os.listdir(ckpt_dir)
+                    if (m := re.fullmatch(r"step_(\d+)", d))), reverse=True)
+    for s in steps:
+        if validate(ckpt_dir, s, deep=deep):
+            return s
+    return None

@@ -9,7 +9,7 @@ DP axes; for long_500k (B=1) the KV-cache *sequence* axis shards over 'data'
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

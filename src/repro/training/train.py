@@ -8,7 +8,6 @@
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -162,7 +161,6 @@ def jit_train_step(model, opt, mesh: Mesh, cfg: TrainStepCfg):
                               None)
     sspec = state_specs(model, opt, data, model_ax, cfg.fsdp)
     step = make_train_step(model, opt, cfg)
-    batch_spec = P(cfg.dp_axes, None)
     in_shardings = (
         jax.tree.map(lambda s: NamedSharding(mesh, s), sspec,
                      is_leaf=lambda x: isinstance(x, P)),

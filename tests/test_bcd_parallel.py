@@ -429,6 +429,59 @@ def test_joint_cand_batch_sharding_on_forced_multi_device_mesh():
     assert "JOINT_OK" in out.stdout
 
 
+# ------------------------------------------------- prefetch auto-tuning
+
+
+def test_auto_prefetch_picks_depth_and_matches_sequential(setup):
+    """prefetch='auto': the first chunks probe producer vs consumer rates
+    in strict alternation, then the depth locks in for the rest of the run
+    — and selection stays bit-identical to the sequential reference."""
+    model, params, batch, masks0 = setup
+    seq = _run(model, params, batch, masks0,
+               engine.SequentialEvaluator(model.make_eval_acc(params, batch)),
+               chunk_size=2)
+    ev = engine.PipelinedEvaluator(model.make_eval_fn(params, batch),
+                                   pad_to=2, prefetch="auto")
+    assert ev.prefetch_depth == 0 and not ev.auto_tuner.done
+    pip = _run(model, params, batch, masks0, ev, chunk_size=2)
+    _assert_same_result(seq, pip)
+    assert ev.auto_tuner.done
+    assert 1 <= ev.prefetch_depth <= ev.auto_tuner.max_depth
+    assert set(ev.auto_report) == {"producer_s", "consumer_s", "prefetch",
+                                   "samples"}
+    assert ev.auto_report["prefetch"] == ev.prefetch_depth
+
+
+def test_auto_tuner_depth_formula():
+    t = engine.PrefetchAutoTuner(n_probe=2, max_depth=4)
+    t.add_sample(1.0, 1.0)              # warm-up (compile) — discarded
+    t.add_sample(0.001, 0.0095)
+    assert not t.done
+    t.add_sample(0.001, 0.0105)
+    assert t.done
+    assert t.depth() == 4               # floor(10) capped at max_depth
+    slow_prod = engine.PrefetchAutoTuner(n_probe=1, max_depth=4)
+    slow_prod.add_sample(1.0, 1.0)
+    slow_prod.add_sample(0.05, 0.001)   # producer-bound: still overlap once
+    assert slow_prod.done and slow_prod.depth() == 1
+
+
+def test_make_evaluator_accepts_auto_prefetch():
+    ev = engine.make_evaluator("pipelined",
+                               eval_fn=lambda m: jnp.sum(m["s"]),
+                               prefetch="auto")
+    assert ev.auto_tuner is not None and ev.prefetch_depth == 0
+    with pytest.raises(ValueError):
+        engine.make_evaluator("pipelined", eval_fn=lambda m: 0.0,
+                              prefetch="bogus")
+    # backends without a staging pipeline must reject 'auto' loudly rather
+    # than silently running untuned
+    for backend in ("sequential", "batched", "sharded"):
+        with pytest.raises(ValueError, match="pipelined"):
+            engine.make_evaluator(backend, eval_acc=lambda m: 0.0,
+                                  eval_fn=lambda m: 0.0, prefetch="auto")
+
+
 # ------------------------------------------------------------- hardening
 
 

@@ -1,7 +1,6 @@
 """Per-architecture smoke tests (REQUIRED deliverable): every assigned arch at
 a reduced config runs one forward + one train step on CPU — output shapes
 checked, no NaNs — plus decode==prefill consistency per cache family."""
-import dataclasses
 
 import numpy as np
 import jax

@@ -130,7 +130,6 @@ def test_supervisor_restarts_from_checkpoint(tmp_path):
 
 def test_supervisor_gives_up_after_max_failures(tmp_path):
     d = str(tmp_path / "ck2")
-    inj = ft.FailureInjector(fail_at_steps=(1,))
 
     def always_fail(state, step):
         raise ft.SimulatedNodeFailure("boom")
