@@ -9,12 +9,24 @@ results print a note suggesting a refresh.
 
     PYTHONPATH=src python -m benchmarks.check_bench_regression \
         BENCH_bcd_eval.json BENCH_new.json [--tolerance 0.30]
+
+Exit codes: 0 pass, 1 candidates/sec regression, 2 unusable input (missing
+or malformed report, incomparable operating points) — always with a
+human-readable FAIL line, never a traceback, so CI logs say what to fix.
+A backend sitting exactly at the threshold (ratio == 1 - tolerance) passes:
+the gate fails only on drops strictly beyond the tolerance, with a small
+epsilon so float rounding cannot flip an at-threshold result.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+
+# Guards the exactly-at-threshold case against float rounding: 1.0 - 0.30
+# is a hair above the literal 0.70, which would otherwise fail a backend
+# sitting exactly at 70% of baseline.
+_EPS = 1e-9
 
 # Config keys that define the benchmark's operating point: two reports are
 # only comparable when all of these match.  Timing-precision knobs
@@ -65,7 +77,7 @@ def compare(baseline: dict, fresh: dict, tolerance: float,
         old, new = rate(base_b, name), rate(new_b, name)
         ratio = new / old if old > 0 else float("inf")
         status = "OK"
-        if ratio < 1.0 - tolerance:
+        if ratio < 1.0 - tolerance - _EPS:
             status = "REGRESSION"
             failures.append(name)
         elif ratio > 1.0 + tolerance:
@@ -75,7 +87,45 @@ def compare(baseline: dict, fresh: dict, tolerance: float,
     return failures, lines
 
 
+def load_report(path: str, which: str):
+    """Load one benchmark report; returns None after printing a clear FAIL
+    line when the file is missing, unreadable, or not a report-shaped dict
+    (the CI log then says exactly what to fix — no traceback)."""
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except FileNotFoundError:
+        print(f"FAIL: {which} report missing: {path}")
+        if which == "baseline":
+            print("Commit a baseline first: "
+                  "`python -m benchmarks.bench_bcd_eval --out "
+                  f"{path}` on representative hardware.")
+        return None
+    except OSError as e:
+        print(f"FAIL: cannot read {which} report {path}: {e}")
+        return None
+    except json.JSONDecodeError as e:
+        print(f"FAIL: {which} report {path} is not valid JSON: {e}")
+        print("Re-generate it with benchmarks.bench_bcd_eval (a truncated "
+              "file usually means the benchmark run was interrupted).")
+        return None
+    backends = report.get("backends") if isinstance(report, dict) else None
+    if not isinstance(backends, dict) or not backends:
+        print(f"FAIL: {which} report {path} has no 'backends' table — not "
+              "a bench_bcd_eval report?")
+        return None
+    bad = [name for name, rec in backends.items()
+           if not isinstance(rec, dict)
+           or not isinstance(rec.get("cands_per_s"), (int, float))]
+    if bad:
+        print(f"FAIL: {which} report {path}: backend(s) {sorted(bad)} "
+              "missing a numeric 'cands_per_s'")
+        return None
+    return report
+
+
 def main(argv=None):
+    """CLI entry; returns the process exit code (see module docstring)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline", help="committed BENCH_bcd_eval.json")
     ap.add_argument("fresh", help="freshly produced report to check")
@@ -87,10 +137,10 @@ def main(argv=None):
                          "each report (hardware-robust cross-backend ratio "
                          "gate; e.g. 'sequential')")
     args = ap.parse_args(argv)
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    with open(args.fresh) as f:
-        fresh = json.load(f)
+    baseline = load_report(args.baseline, "baseline")
+    fresh = load_report(args.fresh, "fresh")
+    if baseline is None or fresh is None:
+        return 2
     mismatches = config_mismatches(baseline, fresh)
     if mismatches:
         print("FAIL: reports are not comparable — operating-point config "

@@ -27,8 +27,20 @@ run is fully restartable: kill it at any point — SIGKILL included — and
 rerunning the same command resumes where it stopped, bit-identically; the
 persisted SNL warm start under <out-dir>/init is reused, so a resume skips
 training entirely.  The curve lands in <out-dir>/SWEEP_<model>.json.
+
+--overlap starts stage i+1's BCD descent as soon as stage i's accepted
+masks land, running stage i's reporting tail (per-stage finetune + test
+scoring) concurrently on a worker thread — masks and step logs stay
+bit-identical to a serial sweep; only wall-clock changes.
+
+Multi-host: launch one process per rank with REPRO_COORD_RANK /
+REPRO_COORD_WORLD / REPRO_COORD_DIR (shared path) / REPRO_COORD_SESSION
+exported (launch.coordinator.from_env); rank 0 owns every checkpoint and
+artifact, other ranks follow its lineage and verify they resumed the same
+manifest fingerprint.  Unset, the run is plain single-process.
 """
 import argparse
+import os
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +48,7 @@ import jax.numpy as jnp
 from repro.core import bcd, engine, linearize, masks as M, runner
 from repro.core.snl import SNLConfig, finetune, run_snl
 from repro.data import ImageDatasetCfg, SyntheticImages
+from repro.launch import coordinator as coord_lib
 from repro.launch import sweep as sweep_lib
 from repro.models.resnet import CNN, CNNConfig
 from repro.training import optimizer as opt_lib, train as train_lib
@@ -61,7 +74,13 @@ def parse_args():
     ap.add_argument("--out-dir", default=None,
                     help="sweep output/checkpoint directory (required with "
                          "--sweep)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlap each sweep stage's reporting tail "
+                         "(finetune + test scoring) with the next stage's "
+                         "BCD descent; masks stay bit-identical to serial")
     args = ap.parse_args()
+    if args.overlap and args.sweep is None:
+        ap.error("--overlap only applies to --sweep mode")
     if args.prefetch != "auto":
         try:
             args.prefetch = int(args.prefetch)
@@ -150,7 +169,9 @@ def run_sweep_mode(args):
 
     sweep_cfg = sweep_lib.SweepConfig(
         budgets=budgets, out_dir=args.out_dir, name=model.cfg.name,
-        verbose=True)
+        overlap=args.overlap, verbose=True)
+    coordinator = coord_lib.from_env(
+        default_root=os.path.join(args.out_dir, "coord"))
     if runner.stage_init_exists(sweep_lib.init_dir(sweep_cfg)):
         # resume: params/masks come from the persisted warm start — the
         # untrained init only provides restore templates
@@ -187,15 +208,25 @@ def run_sweep_mode(args):
             b_target=budget, drc=max(1, (b_ref - budgets[-1]) // 10), rt=6,
             adt=0.3, chunk_size=args.chunk_size)
 
+    # the reporting tail: pure in (params, masks), so with --overlap it can
+    # score stage i on a worker thread while stage i+1's descent mutates the
+    # live holder.  The finetuned params are reporting-only — the descent
+    # lineage continues from the descent-end state in both modes.
+    def stage_ft(p, m):
+        return finetune(p, m, sloss, batches, steps=12, lr=1e-2)
+
     payload = sweep_lib.run_sweep(
         sweep_cfg, make_bcd_cfg, eval_acc, init=init, finetune=ft,
         evaluator=evaluator if args.engine != "sequential" else None,
         params_io=(lambda: holder["params"], set_params),
-        eval_test=lambda m: test_acc(holder["params"], m),
-        notes={"engine": args.engine, "prefetch": str(args.prefetch)})
+        stage_finetune=stage_ft,
+        stage_eval=lambda m, p: test_acc(p, m),
+        notes={"engine": args.engine, "prefetch": str(args.prefetch),
+               "overlap": args.overlap},
+        coordinator=coordinator)
 
     report = getattr(evaluator, "auto_report", None)
-    if report is not None:
+    if report is not None and coordinator.is_writer:
         print(f"[auto-prefetch] depth={report['prefetch']} "
               f"producer={report['producer_s']:.4f}s "
               f"consumer={report['consumer_s']:.4f}s")

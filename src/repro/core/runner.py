@@ -86,7 +86,8 @@ def _cfg_meta(cfg: bcd_lib.BCDConfig) -> dict:
 
 
 def save_run_state(state: bcd_lib.BCDState, cfg: bcd_lib.BCDConfig,
-                   ckpt_dir: str, *, params=None, keep: int = 3) -> str:
+                   ckpt_dir: str, *, params=None, keep: int = 3,
+                   coordinator=None) -> str:
     """Checkpoint a run after ``state.step`` accepted blocks (atomic).
 
     The full step history rides in every manifest (cumulative write cost
@@ -94,6 +95,10 @@ def save_run_state(state: bcd_lib.BCDState, cfg: bcd_lib.BCDConfig,
     restores: at ~150 bytes/entry the manifest stays well under a megabyte
     for thousand-step runs, dwarfed by the params leaves.  Revisit with an
     append-only sidecar if manifests ever dominate checkpoint I/O.
+
+    ``coordinator`` stamps the writer's identity into the manifest meta
+    (audit trail for the single-lineage invariant) and makes
+    ``checkpoint.save`` refuse a non-writer caller outright.
     """
     tree = {"masks": state.masks}
     if params is not None:
@@ -107,7 +112,10 @@ def save_run_state(state: bcd_lib.BCDState, cfg: bcd_lib.BCDConfig,
         "cfg": _cfg_meta(cfg),
         "has_params": params is not None,
     }
-    return checkpoint.save(tree, ckpt_dir, state.step, meta=meta, keep=keep)
+    if coordinator is not None:
+        meta["writer"] = coordinator.describe()
+    return checkpoint.save(tree, ckpt_dir, state.step, meta=meta, keep=keep,
+                           coordinator=coordinator)
 
 
 def restore_run_state(
@@ -117,18 +125,24 @@ def restore_run_state(
     *,
     params_template=None,
     step: Optional[int] = None,
+    verify: Optional[bool] = None,
 ) -> Tuple[bcd_lib.BCDState, object]:
     """Rebuild a :class:`BCDState` (+ params) from the newest valid
     checkpoint.  Refuses a checkpoint written under a different BCD config:
     resuming a run under a changed schedule/seed cannot replay
     bit-identically, which is the whole contract.
+
+    ``verify`` defaults to hashing every leaf when ``step`` is explicit and
+    skipping the re-hash when this function picked the step itself (in that
+    case ``latest_valid_step`` just deep-validated it); callers that already
+    deep-validated an explicit step pass ``verify=False``.
     """
-    verify = True
+    if verify is None:
+        verify = step is not None
     if step is None:
         step = checkpoint.latest_valid_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no valid checkpoints in {ckpt_dir}")
-        verify = False     # latest_valid_step already deep-hashed this step
     meta = checkpoint.read_manifest(ckpt_dir, step).get("meta", {})
     if meta.get("algo") != "bcd":
         raise CheckpointError(
@@ -235,6 +249,9 @@ class RunnerConfig:
     max_steps: Optional[int] = None   # stop (not fail) after N accepted
     #                                   blocks this invocation — preemption
     #                                   drills and budgeted partial runs
+    wait_timeout_s: float = 300.0     # reader ranks: max wait for the
+    #                                   writer's checkpoint before declaring
+    #                                   the writer dead (multi-host only)
     verbose: bool = False
 
 
@@ -252,6 +269,17 @@ class BCDRunner:
     ``cfg.ckpt_dir``; a corrupted newest checkpoint falls back to the one
     before it (the replayed steps re-select the same blocks, so the result
     is unchanged — crash-consistency by determinism, not by fsync).
+
+    ``coordinator`` (a :mod:`repro.launch.coordinator` object; None means
+    single-process) makes the runner multi-host safe: every rank executes
+    the same deterministic loop, but only the writer rank commits
+    checkpoints — reader ranks block on ``checkpoint.wait_for_step`` at each
+    checkpoint point, so no rank runs ahead of durable state.  On restore,
+    all ranks barrier, the writer picks the resume step and broadcasts it
+    with the checkpoint's manifest fingerprint, and every rank restores that
+    exact step and verifies the fingerprint — a rank on a divergent
+    checkpoint lineage fails loudly instead of silently descending a
+    different trajectory.
     """
 
     def __init__(
@@ -264,6 +292,7 @@ class BCDRunner:
         evaluator=None,
         params_io: Optional[Tuple[Callable[[], object],
                                   Callable[[object], None]]] = None,
+        coordinator=None,
     ):
         bcd_cfg.validate()
         self.bcd_cfg = bcd_cfg
@@ -272,19 +301,70 @@ class BCDRunner:
         self._finetune = finetune
         self._evaluator = evaluator
         self._params_io = params_io
+        self._coord = coordinator
         self.resumed_from: Optional[int] = None   # step, for observability
         self.stopped_early = False                # hit run_cfg.max_steps
 
+    @property
+    def _is_writer(self) -> bool:
+        return self._coord is None or self._coord.is_writer
+
+    def _resume_point(self) -> Optional[dict]:
+        """Agree on the resume step across ranks (single-process: local).
+
+        Returns ``{"step", "fingerprint"}`` or None for a fresh start.  All
+        ranks barrier first so nobody inspects the directory while a
+        previous attempt's writer could still be mid-commit.
+        """
+        coord = self._coord
+        if coord is None or coord.world_size == 1:
+            step = checkpoint.latest_valid_step(self.run_cfg.ckpt_dir)
+            if step is None:
+                return None
+            return {"step": step, "fingerprint": None}
+        coord.barrier("bcd_restore")
+        if coord.is_writer:
+            step = checkpoint.latest_valid_step(self.run_cfg.ckpt_dir)
+            fp = (checkpoint.manifest_fingerprint(self.run_cfg.ckpt_dir,
+                                                  step)
+                  if step is not None else None)
+            return coord.broadcast("bcd_resume_point",
+                                   {"step": step, "fingerprint": fp})
+        return coord.broadcast("bcd_resume_point")
+
     def _restore_or_init(self, init_masks: M.MaskTree) -> bcd_lib.BCDState:
-        params_template = self._params_io[0]() if self._params_io else None
-        try:
-            state, params = restore_run_state(
-                self.run_cfg.ckpt_dir, self.bcd_cfg, init_masks,
-                params_template=params_template)
-        except FileNotFoundError:
+        point = self._resume_point()
+        if point is None or point["step"] is None:
             return bcd_lib.init_state(init_masks, self.bcd_cfg)
+        step = point["step"]
+        if point["fingerprint"] is not None:
+            mine = checkpoint.manifest_fingerprint(self.run_cfg.ckpt_dir,
+                                                   step)
+            if mine != point["fingerprint"]:
+                rank = self._coord.rank if self._coord else 0
+                raise CheckpointError(
+                    f"rank {rank} sees manifest fingerprint {mine[:12]} at "
+                    f"step {step}, writer broadcast "
+                    f"{point['fingerprint'][:12]} — divergent checkpoint "
+                    "lineages; refusing to resume")
+        params_template = self._params_io[0]() if self._params_io else None
+        # reader ranks must hash what they read (they did not run the
+        # writer's latest_valid_step validation); the rank that picked the
+        # step — single-process or the writer — just deep-validated it
+        picked_locally = (self._coord is None
+                          or self._coord.world_size == 1
+                          or self._coord.is_writer)
+        state, params = restore_run_state(
+            self.run_cfg.ckpt_dir, self.bcd_cfg, init_masks,
+            params_template=params_template, step=step,
+            verify=not picked_locally)
         if params is not None and self._params_io is not None:
             self._params_io[1](params)
+        if self._coord is not None and self._coord.world_size > 1:
+            # nobody advances (and the writer commits nothing — its keep=N
+            # GC could delete the very step a slower reader is still
+            # reading) until every rank finished restoring
+            self._coord.barrier("bcd_restored")
         self.resumed_from = state.step
         if self.run_cfg.verbose:
             print(f"[runner] resumed {self.run_cfg.ckpt_dir} at step "
@@ -292,9 +372,16 @@ class BCDRunner:
         return state
 
     def _checkpoint(self, state: bcd_lib.BCDState) -> None:
-        params = self._params_io[0]() if self._params_io else None
-        save_run_state(state, self.bcd_cfg, self.run_cfg.ckpt_dir,
-                       params=params, keep=self.run_cfg.keep)
+        if self._is_writer:
+            params = self._params_io[0]() if self._params_io else None
+            save_run_state(state, self.bcd_cfg, self.run_cfg.ckpt_dir,
+                           params=params, keep=self.run_cfg.keep,
+                           coordinator=self._coord)
+        else:
+            # readers advance only once the writer's commit is durable —
+            # no rank ever runs ahead of restorable state
+            checkpoint.wait_for_step(self.run_cfg.ckpt_dir, state.step,
+                                     timeout_s=self.run_cfg.wait_timeout_s)
         _maybe_kill_for_test()
 
     def run(self, init_masks: M.MaskTree) -> bcd_lib.BCDResult:

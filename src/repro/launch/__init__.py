@@ -1,2 +1,7 @@
-# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time.
-from . import mesh, sweep  # noqa: F401
+"""Launch layer: meshes, process coordination, sweeps, and entry points.
+
+NOTE: ``dryrun`` is deliberately NOT imported here — it sets XLA_FLAGS
+(forced host device count) at import time, which must never happen in test
+or production processes.
+"""
+from . import coordinator, mesh, sweep  # noqa: F401

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
     PYTHONPATH=src python -m repro.launch.dryrun                # all cells
@@ -11,10 +8,12 @@ Per cell it jits the train/prefill/decode step with production shardings,
 ``.lower().compile()``s it, prints memory_analysis() / cost_analysis(), and
 writes a JSON record (roofline terms included) for EXPERIMENTS.md.
 
-NOTE: the XLA_FLAGS line above MUST run before any other import — jax locks
+NOTE: the XLA_FLAGS line below MUST run before any other import — jax locks
 the device count at first init.  Smoke tests / benches never import this
 module, so they see the real single CPU device.
 """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json
@@ -102,6 +101,8 @@ def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
 def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
              fsdp: bool = True, remat: bool = True, variant: str = "base",
              overrides: dict | None = None, loss_chunk: int = 0):
+    """Lower + compile one (arch, shape, mesh) cell; return its JSON record
+    (memory analysis, collectives, roofline terms) or a skip marker."""
     cfg = get_config(arch_id)
     ok, why = cell_applicable(cfg, shape_name)
     if not ok:
@@ -152,6 +153,7 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
 
 
 def main(argv=None):
+    """CLI entry: run the selected dry-run cells and write their reports."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

@@ -77,4 +77,19 @@ def make_cand_batch_mesh(cand: int | None = None, batch: int | None = None):
 
 
 def dp_axes(mesh) -> tuple:
+    """Mesh axes that carry data parallelism (batch sharding)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def process_info() -> tuple:
+    """``(process_index, process_count)`` of this host in the jax job.
+
+    The bridge between jax's multi-process runtime and
+    :mod:`repro.launch.coordinator`: on a real cluster
+    (``jax.distributed.initialize``) a launcher maps these onto
+    ``REPRO_COORD_RANK``/``REPRO_COORD_WORLD``; single-process runs get
+    ``(0, 1)``.  Calling this initializes jax's backend, so launch-time code
+    should consult the coordinator env vars first (coordinator.from_env)
+    and fall back here only when it actually needs device state.
+    """
+    return int(jax.process_index()), int(jax.process_count())

@@ -20,6 +20,7 @@ from .mesh import make_host_mesh
 
 
 def main(argv=None):
+    """CLI entry: batched prefill + decode benchmark over a local mesh."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm_1p6b")
     ap.add_argument("--reduced", action="store_true")

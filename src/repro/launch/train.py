@@ -27,6 +27,7 @@ from .mesh import dp_axes as mesh_dp_axes, make_host_mesh
 
 
 def main(argv=None):
+    """CLI entry: supervised, checkpointed training over a local mesh."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm_1p6b")
     ap.add_argument("--reduced", action="store_true")

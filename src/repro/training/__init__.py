@@ -1,1 +1,3 @@
+"""Training substrate: steps, optimizers, serving, fault tolerance,
+checkpointing, and pipeline-parallel scheduling."""
 from . import optimizer, train, serve, checkpoint, ft, pp  # noqa: F401

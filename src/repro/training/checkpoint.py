@@ -8,6 +8,13 @@ Layout (one directory per step):
 Arrays are saved as *host-local shards* with their global layout recorded in
 the manifest, so restore can (a) reassemble the global array and (b) re-shard
 it onto ANY mesh — elastic restart across different topologies (DESIGN §5).
+
+Multi-host policy: a checkpoint directory has exactly ONE writer (rank 0 of
+the job's :mod:`repro.launch.coordinator`).  :func:`save` enforces this when
+handed a coordinator; reader ranks follow the writer's lineage with
+:func:`wait_for_step` and prove they restored the same checkpoint by
+comparing :func:`manifest_fingerprint` values — two ranks that ever disagree
+on a manifest byte are on divergent lineages and must abort, not average.
 """
 from __future__ import annotations
 
@@ -16,6 +23,7 @@ import json
 import os
 import re
 import shutil
+import time
 from typing import Any, Dict, Optional
 
 import jax
@@ -54,8 +62,25 @@ def _flatten(tree) -> Dict[str, Any]:
 
 
 def save(state, ckpt_dir: str, step: int, *, meta: Optional[dict] = None,
-         keep: int = 3) -> str:
-    """Atomic checkpoint write.  Returns the final directory."""
+         keep: int = 3, coordinator=None) -> str:
+    """Atomic checkpoint write.  Returns the final directory.
+
+    ``state`` is any pytree; every leaf lands as one ``.npy`` with its
+    sha256 recorded in the manifest, and the whole step directory becomes
+    visible in a single rename (readers never observe a partial step).
+    ``keep`` garbage-collects the oldest step directories past that count.
+
+    ``coordinator`` (optional, a :mod:`repro.launch.coordinator` object)
+    enforces the single-writer policy: a non-writer rank calling this is a
+    logic error in the calling layer and raises :class:`CheckpointError`
+    before any bytes are written — reader ranks must
+    :func:`wait_for_step` instead.
+    """
+    if coordinator is not None and not coordinator.is_writer:
+        raise CheckpointError(
+            f"rank {coordinator.rank} is not the writer (rank 0 of "
+            f"{coordinator.world_size}): only the writer commits "
+            f"checkpoints to {ckpt_dir}; readers wait_for_step()")
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -84,11 +109,56 @@ def save(state, ckpt_dir: str, step: int, *, meta: Optional[dict] = None,
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest step directory present (no validity check) or None.
+
+    Prefer :func:`latest_valid_step` for resume decisions — a crash can
+    leave the newest step present but unusable.
+    """
     if not os.path.isdir(ckpt_dir):
         return None
     steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
              if (m := re.fullmatch(r"step_(\d+)", d))]
     return max(steps) if steps else None
+
+
+def manifest_fingerprint(ckpt_dir: str, step: int) -> str:
+    """sha256 over a checkpoint's canonicalized manifest.
+
+    The manifest already pins every leaf's bytes (per-leaf sha256), shapes,
+    dtypes, and the run meta — so two checkpoints with equal fingerprints
+    describe bit-identical state.  This is what multi-host restores compare
+    across ranks: the writer broadcasts its fingerprint and every reader
+    verifies it resumed the SAME lineage, not merely the same step number.
+    Canonicalized (sorted keys, tight separators) so the fingerprint is a
+    property of the content, not of json.dump's formatting.
+    """
+    manifest = read_manifest(ckpt_dir, step)
+    blob = json.dumps(manifest, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def wait_for_step(ckpt_dir: str, step: int, *, timeout_s: float = 300.0,
+                  poll_s: float = 0.05) -> int:
+    """Block until a valid checkpoint at ``>= step`` exists; return its step.
+
+    The reader side of the single-writer policy: non-writer ranks call this
+    where the writer calls :func:`save`, so every rank proceeds only once
+    the step is durably committed (the atomic rename makes a visible step
+    directory complete).  Polls :func:`latest_valid_step` shallowly —
+    content trust comes from the restore path's hash verification.  Raises
+    :class:`CheckpointError` when the timeout expires (dead writer).
+    """
+    deadline = time.monotonic() + timeout_s
+    while True:
+        got = latest_valid_step(ckpt_dir, deep=False)
+        if got is not None and got >= step:
+            return got
+        if time.monotonic() > deadline:
+            raise CheckpointError(
+                f"timed out after {timeout_s:.0f}s waiting for checkpoint "
+                f"step >= {step} in {ckpt_dir} (newest valid: {got}) — "
+                "writer rank dead or stalled")
+        time.sleep(poll_s)
 
 
 def read_manifest(ckpt_dir: str, step: int) -> dict:

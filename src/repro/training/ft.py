@@ -19,7 +19,7 @@ from . import checkpoint
 
 
 class SimulatedNodeFailure(RuntimeError):
-    pass
+    """Injected stand-in for a node failure (tests / drills only)."""
 
 
 @dataclasses.dataclass
@@ -29,6 +29,7 @@ class FailureInjector:
     _fired: set = dataclasses.field(default_factory=set)
 
     def check(self, step: int):
+        """Raise SimulatedNodeFailure when ``step`` is scheduled to fail."""
         if step in self.fail_at_steps and step not in self._fired:
             self._fired.add(step)
             raise SimulatedNodeFailure(f"injected failure at step {step}")
@@ -47,6 +48,7 @@ class StragglerWatchdog:
     flagged: List[int] = dataclasses.field(default_factory=list)
 
     def observe(self, step: int, dt: float) -> bool:
+        """Record one step's wall time; True iff it was flagged as slow."""
         self.n += 1
         if self.ewma is None:
             self.ewma = dt

@@ -24,10 +24,13 @@ def cosine(base_lr: float, total_steps: int, min_lr: float = 0.0):
 
 
 def constant(lr: float):
+    """Constant learning-rate schedule."""
     return lambda step: jnp.asarray(lr)
 
 
 class OptState(NamedTuple):
+    """Shared optimizer state (AdamW uses both moments, SGD only mu)."""
+
     step: jnp.ndarray
     mu: object        # momentum / first moment (pytree or None-like zeros)
     nu: object        # second moment (AdamW only; zeros tree for SGD)
@@ -35,6 +38,8 @@ class OptState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class Optimizer:
+    """An (init, update) pair — the optax-style contract."""
+
     init: Callable
     update: Callable   # (grads, state, params) -> (updates, new_state)
 
@@ -46,6 +51,7 @@ def _zeros_like_tree(params):
 def sgd(lr: float = 1e-3, momentum: float = 0.9,
         schedule: Optional[Callable] = None,
         weight_decay: float = 0.0, grad_clip: Optional[float] = None):
+    """SGD with momentum, optional decoupled weight decay and grad clip."""
     sched = schedule or constant(lr)
 
     def init(params):
@@ -71,6 +77,7 @@ def adamw(lr: float = 3.5e-5, b1: float = 0.9, b2: float = 0.999,
           eps: float = 1e-8, weight_decay: float = 0.0,
           schedule: Optional[Callable] = None,
           grad_clip: Optional[float] = None):
+    """AdamW (decoupled weight decay) with bias correction."""
     sched = schedule or constant(lr)
 
     def init(params):
@@ -108,4 +115,5 @@ def _clip(grads, max_norm):
 
 
 def apply_updates(params, updates):
+    """Apply additive updates leaf-wise (optax-style)."""
     return jax.tree.map(lambda p, u: p + u, params, updates)

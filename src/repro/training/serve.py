@@ -20,6 +20,8 @@ from repro.models import lm as lm_lib
 
 @dataclasses.dataclass
 class ServeCfg:
+    """Serving shape/placement knobs (batch, cache length, DP axes)."""
+
     dp_axes: Tuple[str, ...] = ("data",)
     max_len: int = 32768
     batch: int = 128
@@ -27,6 +29,7 @@ class ServeCfg:
 
 
 def make_prefill(model: lm_lib.LM):
+    """Prefill closure: (params, masks, tokens, cache) -> (last logits, cache)."""
     def prefill(params, masks, tokens, cache, prefix_embeds=None):
         logits, cache = model.forward(params, masks, tokens,
                                       prefix_embeds=prefix_embeds,
@@ -36,6 +39,7 @@ def make_prefill(model: lm_lib.LM):
 
 
 def make_decode_step(model: lm_lib.LM):
+    """Greedy single-token decode closure over a running cache."""
     def decode_step(params, masks, token, cache, cache_len):
         """token (B,1) -> (next_token (B,1), cache)."""
         logits, cache = model.forward(params, masks, token, cache=cache,
@@ -106,6 +110,7 @@ def _set_act_spec(model, mesh, cfg):
 
 def jit_prefill(model: lm_lib.LM, mesh: Mesh, cfg: ServeCfg,
                 with_prefix: bool = False):
+    """Jit the prefill step with production shardings (cache donated)."""
     _set_act_spec(model, mesh, cfg)
     psh, csh = serve_shardings(model, mesh, cfg)
     prefill = make_prefill(model)
@@ -120,6 +125,7 @@ def jit_prefill(model: lm_lib.LM, mesh: Mesh, cfg: ServeCfg,
 
 
 def jit_decode_step(model: lm_lib.LM, mesh: Mesh, cfg: ServeCfg):
+    """Jit the one-token decode step with state-passing cache shardings."""
     _set_act_spec(model, mesh, cfg)
     psh, csh = serve_shardings(model, mesh, cfg)
     step = make_decode_step(model)

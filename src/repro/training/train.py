@@ -52,6 +52,8 @@ def quantize_grads_int8(grads):
 
 @dataclasses.dataclass
 class TrainStepCfg:
+    """Train-step lowering knobs (remat, sharding axes, memory levers)."""
+
     remat: bool = True
     compress_grads: bool = False
     dp_axes: Tuple[str, ...] = ("data",)
@@ -64,6 +66,7 @@ class TrainStepCfg:
 
 
 def make_state(model: lm_lib.LM, opt: opt_lib.Optimizer, key):
+    """Fresh train state: params + optimizer moments + step counter."""
     params = model.init(key)
     return {"params": params, "opt": opt.init(params),
             "step": jnp.zeros((), jnp.int32)}

@@ -1,0 +1,114 @@
+"""The CI candidates/sec gate (benchmarks.check_bench_regression).
+
+The gate is the last line of defense for engine throughput, so its own
+failure modes matter: a missing or malformed report must exit with a clear
+FAIL message (code 2) rather than a traceback, and a backend sitting
+*exactly* at the tolerance threshold must pass — only drops strictly beyond
+it fail (code 1).
+"""
+import json
+import sys
+
+import pytest
+
+sys.path.insert(0, "")   # repo root on path when pytest runs from it
+from benchmarks import check_bench_regression as gate  # noqa: E402
+
+
+def _report(rates, **config):
+    cfg = {"rt": 8, "chunk_size": 4, "prefetch": 2, "drc": 16,
+           "eval_batch": 128, "model": "tiny", "n_devices": 1,
+           "backend": None}
+    cfg.update(config)
+    return {"config": cfg,
+            "backends": {k: {"cands_per_s": v} for k, v in rates.items()}}
+
+
+def _write(tmp_path, name, obj):
+    p = tmp_path / name
+    p.write_text(obj if isinstance(obj, str) else json.dumps(obj))
+    return str(p)
+
+
+def _run(argv, capsys):
+    rc = gate.main(argv)
+    return rc, capsys.readouterr().out
+
+
+def test_pass_and_regression(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", _report({"seq": 100.0, "bat": 400.0}))
+    ok = _write(tmp_path, "ok.json", _report({"seq": 95.0, "bat": 390.0}))
+    rc, out = _run([base, ok], capsys)
+    assert rc == 0 and "PASS" in out
+
+    slow = _write(tmp_path, "slow.json", _report({"seq": 95.0, "bat": 200.0}))
+    rc, out = _run([base, slow], capsys)
+    assert rc == 1 and "REGRESSION" in out and "bat" in out
+
+
+def test_exactly_at_threshold_passes(tmp_path, capsys):
+    """ratio == 1 - tolerance must PASS: the gate fails only strictly
+    beyond the tolerance, and float rounding (1.0 - 0.3 > 0.7) must not
+    flip an at-threshold backend into a failure."""
+    base = _write(tmp_path, "base.json", _report({"seq": 100.0}))
+    at = _write(tmp_path, "at.json", _report({"seq": 70.0}))
+    rc, out = _run([base, at, "--tolerance", "0.30"], capsys)
+    assert rc == 0, out
+    assert "PASS" in out
+
+    below = _write(tmp_path, "below.json", _report({"seq": 69.9}))
+    rc, out = _run([base, below, "--tolerance", "0.30"], capsys)
+    assert rc == 1 and "REGRESSION" in out
+
+
+def test_missing_baseline_is_clear_failure(tmp_path, capsys):
+    fresh = _write(tmp_path, "fresh.json", _report({"seq": 100.0}))
+    rc, out = _run([str(tmp_path / "nope.json"), fresh], capsys)
+    assert rc == 2
+    assert "FAIL" in out and "baseline report missing" in out
+    assert "bench_bcd_eval" in out            # tells the reader what to run
+
+
+def test_missing_fresh_is_clear_failure(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", _report({"seq": 100.0}))
+    rc, out = _run([base, str(tmp_path / "nope.json")], capsys)
+    assert rc == 2 and "fresh report missing" in out
+
+
+@pytest.mark.parametrize("blob,needle", [
+    ("{not json", "not valid JSON"),
+    ("[1, 2, 3]", "no 'backends'"),
+    ('{"backends": {}}', "no 'backends'"),
+    ('{"backends": {"seq": {"other": 1}}}', "cands_per_s"),
+    ('{"backends": {"seq": {"cands_per_s": "fast"}}}', "cands_per_s"),
+])
+def test_malformed_reports_are_clear_failures(tmp_path, capsys, blob, needle):
+    base = _write(tmp_path, "base.json", _report({"seq": 100.0}))
+    bad = _write(tmp_path, "bad.json", blob)
+    rc, out = _run([base, bad], capsys)
+    assert rc == 2, out
+    assert "FAIL" in out and needle in out
+    assert "Traceback" not in out
+
+
+def test_config_mismatch_refuses_comparison(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", _report({"seq": 100.0}, rt=8))
+    other = _write(tmp_path, "other.json", _report({"seq": 100.0}, rt=16))
+    rc, out = _run([base, other], capsys)
+    assert rc == 2 and "not comparable" in out and "rt" in out
+
+
+def test_relative_mode_requires_reference_backend(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", _report({"seq": 100.0}))
+    fresh = _write(tmp_path, "fresh.json", _report({"bat": 100.0}))
+    rc, out = _run([base, fresh, "--relative-to", "seq"], capsys)
+    assert rc == 2 and "seq" in out
+
+
+def test_one_sided_backends_never_fail(tmp_path, capsys):
+    """Adding/removing a backend must not force a lockstep baseline
+    refresh: one-sided entries are reported but skipped."""
+    base = _write(tmp_path, "base.json", _report({"seq": 100.0, "old": 5.0}))
+    fresh = _write(tmp_path, "fresh.json", _report({"seq": 95.0, "new": 9.0}))
+    rc, out = _run([base, fresh], capsys)
+    assert rc == 0 and "skipped" in out

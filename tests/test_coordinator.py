@@ -1,0 +1,452 @@
+"""Multi-host coordination (launch.coordinator + coordinated runner).
+
+The contract under test: N ranks run the same deterministic BCD loop against
+ONE checkpoint directory; only rank 0 (the writer) commits checkpoints,
+reader ranks block on each commit, and every restore is rank-agreed (barrier
++ broadcast of the resume step and its manifest fingerprint).  SIGKILL any
+rank — reader or writer — relaunch all ranks with a fresh session, and the
+job resumes from a single checkpoint lineage, replaying bit-identically
+against an uninterrupted run.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bcd, masks as M, runner
+from repro.launch import coordinator as coord_lib
+from repro.training import checkpoint
+
+
+# ------------------------------------------------------------ primitives
+
+
+def test_local_coordinator_is_trivial():
+    c = coord_lib.LocalCoordinator()
+    assert (c.rank, c.world_size, c.is_writer) == (0, 1, True)
+    c.barrier("anything")
+    assert c.broadcast("x", {"a": 1}) == {"a": 1}
+    assert c.describe()["backend"] == "local"
+    c.close()
+
+
+def test_file_coordinator_barrier_and_broadcast_across_threads(tmp_path):
+    """Two 'ranks' (threads, same syscalls as processes) rendezvous: the
+    barrier releases both, the broadcast hands rank 1 the writer's payload,
+    and repeated tags stay distinct via the per-tag use counter."""
+    root = str(tmp_path / "coord")
+    got = {}
+
+    def rank_main(r):
+        c = coord_lib.FileCoordinator(root, r, 2, session="s0",
+                                      poll_s=0.005, timeout_s=30)
+        c.barrier("start")
+        for round_i in range(3):                # tag reuse
+            payload = c.broadcast(
+                "step", {"round": round_i} if c.is_writer else None)
+            got.setdefault(r, []).append(payload)
+            c.barrier("round")
+
+    ts = [threading.Thread(target=rank_main, args=(r,)) for r in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert got[0] == got[1] == [{"round": 0}, {"round": 1}, {"round": 2}]
+
+
+def test_file_coordinator_barrier_timeout_names_missing_rank(tmp_path):
+    c = coord_lib.FileCoordinator(str(tmp_path), 0, 2, timeout_s=0.2,
+                                  poll_s=0.01)
+    with pytest.raises(coord_lib.CoordinatorError, match=r"rank\(s\) \[1\]"):
+        c.barrier("lonely")
+
+
+def test_file_coordinator_broadcast_timeout_on_dead_writer(tmp_path):
+    c = coord_lib.FileCoordinator(str(tmp_path), 1, 2, timeout_s=0.2,
+                                  poll_s=0.01)
+    with pytest.raises(coord_lib.CoordinatorError, match="writer"):
+        c.broadcast("nothing")
+
+
+def test_sessions_are_isolated(tmp_path):
+    """Leftover rendezvous files from a crashed attempt must not satisfy a
+    relaunch: the same barrier in a fresh session blocks again."""
+    root = str(tmp_path)
+    a = coord_lib.FileCoordinator(root, 0, 2, session="a", timeout_s=0.2)
+    with pytest.raises(coord_lib.CoordinatorError):
+        a.barrier("x")                           # rank 0's file now exists
+    b0 = coord_lib.FileCoordinator(root, 0, 2, session="b", timeout_s=0.2)
+    with pytest.raises(coord_lib.CoordinatorError):
+        b0.barrier("x")                          # session a's file is inert
+
+
+def test_from_env(tmp_path, monkeypatch):
+    monkeypatch.delenv(coord_lib.ENV_WORLD, raising=False)
+    assert isinstance(coord_lib.from_env(), coord_lib.LocalCoordinator)
+    monkeypatch.setenv(coord_lib.ENV_WORLD, "1")
+    assert isinstance(coord_lib.from_env(), coord_lib.LocalCoordinator)
+
+    monkeypatch.setenv(coord_lib.ENV_WORLD, "2")
+    monkeypatch.delenv(coord_lib.ENV_RANK, raising=False)
+    monkeypatch.delenv(coord_lib.ENV_DIR, raising=False)
+    monkeypatch.delenv(coord_lib.ENV_SESSION, raising=False)
+    with pytest.raises(coord_lib.CoordinatorError, match=coord_lib.ENV_RANK):
+        coord_lib.from_env()
+    monkeypatch.setenv(coord_lib.ENV_RANK, "1")
+    with pytest.raises(coord_lib.CoordinatorError, match=coord_lib.ENV_DIR):
+        coord_lib.from_env()
+    # a session is mandatory: defaulting one would let a relaunch
+    # rendezvous against a dead attempt's leftover files
+    with pytest.raises(coord_lib.CoordinatorError,
+                       match=coord_lib.ENV_SESSION):
+        coord_lib.from_env(default_root=str(tmp_path))
+    monkeypatch.setenv(coord_lib.ENV_SESSION, "s7")
+    c = coord_lib.from_env(default_root=str(tmp_path))
+    assert isinstance(c, coord_lib.FileCoordinator)
+    assert (c.rank, c.world_size, c.is_writer) == (1, 2, False)
+    assert c.session == "s7"
+    monkeypatch.setenv(coord_lib.ENV_DIR, str(tmp_path / "explicit"))
+    c = coord_lib.from_env()
+    assert c.session == "s7"
+
+
+def test_rank_bounds_rejected(tmp_path):
+    with pytest.raises(coord_lib.CoordinatorError):
+        coord_lib.FileCoordinator(str(tmp_path), 2, 2)
+
+
+# ------------------------------------------------ writer-exclusive commits
+
+
+def test_checkpoint_save_refuses_non_writer(tmp_path):
+    reader = coord_lib.FileCoordinator(str(tmp_path / "c"), 1, 2)
+    with pytest.raises(checkpoint.CheckpointError, match="writer"):
+        checkpoint.save({"x": np.ones(3)}, str(tmp_path / "ck"), 0,
+                        coordinator=reader)
+    assert not os.path.exists(str(tmp_path / "ck"))   # refused before I/O
+
+
+def test_wait_for_step(tmp_path):
+    d = str(tmp_path / "ck")
+    with pytest.raises(checkpoint.CheckpointError, match="timed out"):
+        checkpoint.wait_for_step(d, 1, timeout_s=0.2, poll_s=0.01)
+    checkpoint.save({"x": np.ones(3)}, d, 2)
+    assert checkpoint.wait_for_step(d, 1, timeout_s=0.2) == 2
+
+
+def test_manifest_fingerprint_tracks_content(tmp_path):
+    d = str(tmp_path / "ck")
+    checkpoint.save({"x": np.ones(3)}, d, 0, meta={"tag": "a"})
+    fp_a = checkpoint.manifest_fingerprint(d, 0)
+    assert fp_a == checkpoint.manifest_fingerprint(d, 0)   # stable
+    checkpoint.save({"x": np.zeros(3)}, d, 0, meta={"tag": "a"})
+    assert checkpoint.manifest_fingerprint(d, 0) != fp_a   # leaves changed
+
+
+# --------------------------------------------- coordinated restore checks
+
+
+def _toy_masks(n=48):
+    return {"a": np.ones((n // 2,), np.float32),
+            "b": np.ones((n // 2,), np.float32)}
+
+
+def _toy_eval_acc(m):
+    md = M.as_device(m)
+    wa = jnp.arange(md["a"].shape[-1], dtype=jnp.float32)
+    return float(95.0 - 0.02 * (jnp.sum((1 - md["a"]) * wa) +
+                                jnp.sum((1 - md["b"]) * wa[::-1])))
+
+
+def _toy_cfg(masks, steps=4):
+    return bcd.BCDConfig(b_target=M.count(masks) - 4 * steps, drc=4, rt=6,
+                         adt=-1.0, chunk_size=2, seed=0)
+
+
+class _StubCoordinator:
+    """Writer rank of a fake 2-rank world whose broadcast replays a
+    scripted resume point (as if agreed with a peer)."""
+
+    def __init__(self, point):
+        self.rank, self.world_size, self._point = 0, 2, point
+
+    @property
+    def is_writer(self):
+        return True
+
+    def barrier(self, tag, timeout_s=None):
+        pass
+
+    def broadcast(self, tag, payload=None):
+        return self._point
+
+    def describe(self):
+        return {"backend": "stub", "rank": 0, "world_size": 2}
+
+
+def test_restore_verifies_broadcast_fingerprint(tmp_path):
+    """A reader rank whose directory disagrees with the writer's broadcast
+    fingerprint must refuse to resume (divergent lineages)."""
+    masks = _toy_masks()
+    cfg = _toy_cfg(masks)
+    d = str(tmp_path / "ck")
+    part = runner.BCDRunner(cfg, runner.RunnerConfig(ckpt_dir=d, max_steps=2),
+                            _toy_eval_acc)
+    part.run(masks)
+    step = checkpoint.latest_valid_step(d)
+    good_fp = checkpoint.manifest_fingerprint(d, step)
+
+    ok = runner.BCDRunner(
+        cfg, runner.RunnerConfig(ckpt_dir=d), _toy_eval_acc,
+        coordinator=_StubCoordinator({"step": step, "fingerprint": good_fp}))
+    res = ok.run(masks)
+    assert ok.resumed_from == step and M.count(res.masks) == cfg.b_target
+
+    bad = runner.BCDRunner(
+        cfg, runner.RunnerConfig(ckpt_dir=d), _toy_eval_acc,
+        coordinator=_StubCoordinator({"step": step, "fingerprint": "0" * 64}))
+    with pytest.raises(runner.CheckpointError, match="divergent"):
+        bad.run(masks)
+
+
+# ------------------------------------- the drill (acceptance criterion)
+#
+# 2 ranks over a FileCoordinator against one checkpoint directory.  Three
+# launches of the same job: (a) SIGKILL the non-writer mid-run, (b) relaunch
+# under a fresh session and SIGKILL the WRITER mid-run (the reader times out
+# on the missing commit and exits too), (c) relaunch again and run to
+# completion.  The final masks/logs must be bit-identical to an
+# uninterrupted single-process run, and every checkpoint ever committed must
+# come from rank 0 (single lineage).
+
+_DRILL = r"""
+import dataclasses, json, sys
+import numpy as np
+import jax.numpy as jnp
+from repro.core import bcd, masks as M, runner
+from repro.launch import coordinator as coord_lib
+
+ckpt_dir, coord_dir, session, rank, world = sys.argv[1:6]
+coord = coord_lib.FileCoordinator(coord_dir, int(rank), int(world),
+                                  session=session, poll_s=0.01, timeout_s=60)
+masks = {"a": np.ones((24,), np.float32), "b": np.ones((24,), np.float32)}
+wa = jnp.arange(24, dtype=jnp.float32)
+eval_fn = lambda m: 95.0 - 0.02 * (jnp.sum((1 - m["a"]) * wa) +
+                                   jnp.sum((1 - m["b"]) * wa[::-1]))
+eval_acc = lambda m: float(eval_fn(M.as_device(m)))
+cfg = bcd.BCDConfig(b_target=28, drc=4, rt=6, adt=-1.0, chunk_size=2, seed=0)
+run = runner.BCDRunner(
+    cfg, runner.RunnerConfig(ckpt_dir=ckpt_dir, wait_timeout_s=8.0),
+    eval_acc, coordinator=coord)
+res = run.run(masks)
+hist = []
+for h in res.history:
+    d = dataclasses.asdict(h); d.pop("wall_s"); hist.append(d)
+print(f"R{coord.rank}_FP=" + M.fingerprint(res.masks))
+print(f"R{coord.rank}_HIST=" + json.dumps(hist))
+"""
+
+
+def _launch_ranks(ckpt_dir, coord_dir, session, world=2, kill_rank=None,
+                  kill_after=2):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    procs = []
+    for r in range(world):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + \
+            env.get("PYTHONPATH", "")
+        env.pop(runner.KILL_ENV, None)
+        if kill_rank is not None and r == kill_rank:
+            env[runner.KILL_ENV] = str(kill_after)
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", _DRILL, ckpt_dir, coord_dir, session,
+             str(r), str(world)],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+            text=True))
+    done = [p.communicate(timeout=600) for p in procs]
+    return [(p.returncode, out, err) for p, (out, err) in zip(procs, done)]
+
+
+def _parse(out):
+    got = {}
+    for ln in out.splitlines():
+        if "_FP=" in ln or "_HIST=" in ln:
+            k, v = ln.split("=", 1)
+            got[k.split("_", 1)[1]] = json.loads(v) if "HIST" in k else v
+    return got
+
+
+def _assert_single_lineage(ckpt_dir):
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    assert steps, "no checkpoints committed"
+    for s in steps:
+        meta = checkpoint.read_manifest(ckpt_dir, s).get("meta", {})
+        assert meta.get("writer", {}).get("rank") == 0, \
+            (s, meta.get("writer"))
+
+
+_SWEEP_DRILL = r"""
+import json, sys
+import numpy as np
+import jax.numpy as jnp
+from repro.core import bcd, masks as M
+from repro.launch import coordinator as coord_lib
+from repro.launch import sweep as sweep_lib
+
+out_dir, coord_dir, session, rank, world = sys.argv[1:6]
+coord = coord_lib.FileCoordinator(coord_dir, int(rank), int(world),
+                                  session=session, poll_s=0.01, timeout_s=60)
+masks = {"a": np.ones((24,), np.float32), "b": np.ones((24,), np.float32)}
+wa = jnp.arange(24, dtype=jnp.float32)
+eval_fn = lambda m: 95.0 - 0.02 * (jnp.sum((1 - m["a"]) * wa) +
+                                   jnp.sum((1 - m["b"]) * wa[::-1]))
+eval_acc = lambda m: float(eval_fn(M.as_device(m)))
+holder = {"params": {"w": np.arange(4, dtype=np.float32)}}
+pio = (lambda: holder["params"], lambda p: holder.__setitem__("params", p))
+cfg = sweep_lib.SweepConfig(budgets=[36, 28], out_dir=out_dir, name="mh",
+                            wait_timeout_s=8.0)
+mk = lambda b: bcd.BCDConfig(b_target=b, drc=4, rt=6, adt=-1.0,
+                             chunk_size=2, seed=0)
+init = {"kind": "snl", "masks": masks, "params": holder["params"]}
+res = sweep_lib.run_sweep(cfg, mk, eval_acc, init=init, params_io=pio,
+                          stage_eval=lambda m, p: eval_acc(m),
+                          coordinator=coord)
+print(f"R{coord.rank}_SWEEPFPS="
+      + json.dumps([s["mask_fingerprint"] for s in res["stages"]]))
+"""
+
+
+def _launch_sweep_ranks(out_dir, coord_dir, session, world=2,
+                        kill_rank=None, kill_after=4):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    procs = []
+    for r in range(world):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + \
+            env.get("PYTHONPATH", "")
+        env.pop(runner.KILL_ENV, None)
+        if kill_rank is not None and r == kill_rank:
+            env[runner.KILL_ENV] = str(kill_after)
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", _SWEEP_DRILL, out_dir, coord_dir,
+             session, str(r), str(world)],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+            text=True))
+    done = [p.communicate(timeout=600) for p in procs]
+    return [(p.returncode, out, err) for p, (out, err) in zip(procs, done)]
+
+
+def test_multihost_sweep_drill(tmp_path):
+    """The full multi-rank sweep rendezvous: 2 ranks descend a 2-stage
+    schedule, the WRITER is SIGKILLed mid-stage-1, and the relaunch (fresh
+    session) broadcast-skips the completed stage 0, resumes stage 1 from
+    rank 0's lineage, and both ranks finish with stage fingerprints
+    identical to a single-process sweep of the same schedule."""
+    # single-process reference
+    from repro.launch import sweep as sweep_lib
+    masks = {"a": np.ones((24,), np.float32),
+             "b": np.ones((24,), np.float32)}
+    holder = {"params": {"w": np.arange(4, dtype=np.float32)}}
+    pio = (lambda: holder["params"],
+           lambda p: holder.__setitem__("params", p))
+    ref = sweep_lib.run_sweep(
+        sweep_lib.SweepConfig(budgets=[36, 28],
+                              out_dir=str(tmp_path / "ref"), name="mh"),
+        lambda b: bcd.BCDConfig(b_target=b, drc=4, rt=6, adt=-1.0,
+                                chunk_size=2, seed=0),
+        _toy_eval_acc, init={"kind": "snl", "masks": masks,
+                             "params": holder["params"]},
+        params_io=pio, stage_eval=lambda m, p: _toy_eval_acc(m))
+    ref_fps = [s["mask_fingerprint"] for s in ref["stages"]]
+
+    out = str(tmp_path / "mh")
+    coord = str(tmp_path / "coord")
+    # stage 0 is 3 accepted blocks; kill the writer after 4 → mid-stage-1.
+    res = _launch_sweep_ranks(out, coord, "a1", kill_rank=0)
+    assert res[0][0] == -9, res[0][2][-2000:]
+    assert res[1][0] not in (0, -9), res[1][2][-2000:]
+
+    res = _launch_sweep_ranks(out, coord, "a2")
+    assert all(rc == 0 for rc, _, _ in res), \
+        [e[-1500:] for _, _, e in res]
+    for rc, stdout, _ in res:
+        fps = json.loads(stdout.split("_SWEEPFPS=", 1)[1])
+        assert fps == ref_fps
+    art = json.load(open(os.path.join(out, "SWEEP_mh.json")))
+    assert art["complete"]
+    assert [s["mask_fingerprint"] for s in art["stages"]] == ref_fps
+    assert all("test_acc" in s for s in art["stages"])
+
+
+@pytest.fixture(scope="module")
+def drill_reference():
+    """The uninterrupted single-process reference run (masks + logs)."""
+    masks = _toy_masks(48)
+    ref = bcd.run_bcd(masks, bcd.BCDConfig(b_target=28, drc=4, rt=6,
+                                           adt=-1.0, chunk_size=2, seed=0),
+                      _toy_eval_acc)
+    hist = []
+    for h in ref.history:
+        d = dataclasses.asdict(h)
+        d.pop("wall_s")
+        hist.append(d)
+    return M.fingerprint(ref.masks), hist
+
+
+def test_multihost_drill_sigkill_non_writer(tmp_path, drill_reference):
+    """SIGKILL a reader rank mid-run: the writer owns every commit and
+    never waits on readers, so it finishes; a full relaunch (fresh session)
+    restores the completed lineage on both ranks, fingerprint-verified and
+    bit-identical to the uninterrupted reference."""
+    ref_fp, ref_hist = drill_reference
+    ckpt = str(tmp_path / "ckpt")
+    coord = str(tmp_path / "coord")
+
+    res = _launch_ranks(ckpt, coord, "attempt1", kill_rank=1)
+    assert res[1][0] == -9, res[1][2][-2000:]          # reader SIGKILLed
+    assert res[0][0] == 0, res[0][2][-2000:]           # writer completed
+    assert _parse(res[0][1])["FP"] == ref_fp
+    _assert_single_lineage(ckpt)
+
+    res = _launch_ranks(ckpt, coord, "attempt2")
+    assert all(rc == 0 for rc, _, _ in res), \
+        [e[-1000:] for _, _, e in res]
+    got0, got1 = _parse(res[0][1]), _parse(res[1][1])
+    assert got0["FP"] == got1["FP"] == ref_fp
+    assert got0["HIST"] == got1["HIST"] == ref_hist
+    _assert_single_lineage(ckpt)
+
+
+def test_multihost_drill_sigkill_writer(tmp_path, drill_reference):
+    """SIGKILL the WRITER mid-run: the reader's wait_for_step times out on
+    the dead writer and exits with a CheckpointError (no hang, no takeover
+    — a reader must never start a second lineage).  Relaunching all ranks
+    under a fresh session resumes rank 0's lineage where it stopped and
+    replays bit-identically."""
+    ref_fp, ref_hist = drill_reference
+    ckpt = str(tmp_path / "ckpt")
+    coord = str(tmp_path / "coord")
+
+    res = _launch_ranks(ckpt, coord, "attempt1", kill_rank=0)
+    assert res[0][0] == -9, res[0][2][-2000:]          # writer SIGKILLed
+    assert res[1][0] not in (0, -9), res[1][2][-2000:]
+    assert "CheckpointError" in res[1][2] or "timed out" in res[1][2]
+    _assert_single_lineage(ckpt)
+    resumed_at = checkpoint.latest_valid_step(ckpt)
+    assert resumed_at is not None and resumed_at < 5   # genuinely partial
+
+    res = _launch_ranks(ckpt, coord, "attempt2")
+    assert all(rc == 0 for rc, _, _ in res), \
+        [e[-1000:] for _, _, e in res]
+    got0, got1 = _parse(res[0][1]), _parse(res[1][1])
+    assert got0["FP"] == got1["FP"] == ref_fp
+    assert got0["HIST"] == got1["HIST"] == ref_hist
+    _assert_single_lineage(ckpt)

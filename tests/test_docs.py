@@ -1,0 +1,45 @@
+"""Docs hygiene: every in-repo Markdown link must resolve.
+
+Runs the same checker the CI ``docs`` job runs (tools/check_docs_links.py),
+so a renamed module or deleted doc page fails tier-1 locally — docs cannot
+silently rot between doc-focused PRs.
+"""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CHECKER = os.path.join(REPO, "tools", "check_docs_links.py")
+
+
+def _run(*args):
+    return subprocess.run([sys.executable, CHECKER, *args],
+                          capture_output=True, text=True, timeout=120)
+
+
+def test_repo_markdown_links_resolve():
+    out = _run(REPO)
+    assert out.returncode == 0, f"\n{out.stdout}{out.stderr}"
+    assert "0 broken" in out.stdout
+
+
+def test_checker_flags_broken_and_absolute_links(tmp_path):
+    (tmp_path / "ok.md").write_text("see [real](other.md) and "
+                                    "[web](https://example.com) and "
+                                    "[anchor](#sec)\n")
+    (tmp_path / "other.md").write_text("see [gone](nope/missing.md) and "
+                                       "[abs](/etc/hosts)\n"
+                                       "```\n[not a link](ignored.md)\n```\n")
+    out = _run(str(tmp_path))
+    assert out.returncode == 1
+    assert "nope/missing.md" in out.stdout
+    assert "absolute path" in out.stdout
+    assert "ignored.md" not in out.stdout       # fenced block skipped
+    assert "2 broken" in out.stdout
+
+
+def test_checker_handles_anchored_file_links(tmp_path):
+    (tmp_path / "a.md").write_text("[sec](b.md#some-section)\n")
+    (tmp_path / "b.md").write_text("# some section\n")
+    out = _run(str(tmp_path))
+    assert out.returncode == 0, out.stdout

@@ -383,6 +383,92 @@ def test_sweep_interrupted_mid_stage_matches_uninterrupted(tmp_path):
         [s["history"] for s in ref["stages"]]
 
 
+def test_overlap_sweep_bit_identical_to_serial(tmp_path):
+    """The overlap acceptance criterion: with the reporting tail
+    (stage_finetune + stage_eval) running concurrently with the next
+    stage's descent, the sweep emits masks, step histories, AND scores
+    bit-identical to the serial sweep on the same schedule."""
+    def run(name, overlap):
+        masks, holder, pio, cfg, mk, init = _sweep_ctx(tmp_path, name)
+        cfg = sweep_lib.SweepConfig(
+            budgets=cfg.budgets, out_dir=cfg.out_dir, name=name,
+            overlap=overlap)
+        # a reporting finetune that really transforms params, and a score
+        # that depends on both inputs — pure in (params, masks)
+        sft = lambda p, m: {"w": p["w"] + np.float32(M.count(m))}
+        sev = lambda m, p: _toy_eval_acc(m) + float(np.sum(p["w"]))
+        return sweep_lib.run_sweep(cfg, mk, _toy_eval_acc, init=init,
+                                   params_io=pio, stage_finetune=sft,
+                                   stage_eval=sev)
+
+    serial = run("serial", overlap=False)
+    over = run("over", overlap=True)
+    assert serial["complete"] and over["complete"]
+    for a, b in zip(serial["stages"], over["stages"]):
+        assert a["mask_fingerprint"] == b["mask_fingerprint"]
+        assert a["history"] == b["history"]
+        assert a["test_acc"] == b["test_acc"]
+    # the overlapped artifact on disk converged to fully-scored too
+    art = json.load(open(over["artifact"]))
+    assert art["complete"]
+    assert [s.get("test_acc") for s in art["stages"]] == \
+        [s["test_acc"] for s in serial["stages"]]
+
+
+def test_overlap_rejects_impure_eval_test(tmp_path):
+    masks, holder, pio, cfg, mk, init = _sweep_ctx(tmp_path)
+    cfg = sweep_lib.SweepConfig(budgets=cfg.budgets, out_dir=cfg.out_dir,
+                                name=cfg.name, overlap=True)
+    with pytest.raises(ValueError, match="stage_eval"):
+        sweep_lib.run_sweep(cfg, mk, _toy_eval_acc, init=init,
+                            params_io=pio, eval_test=_toy_eval_acc)
+
+
+def test_resumed_sweep_scores_unscored_stages(tmp_path):
+    """A crash after result.json but before the reporting tail leaves a
+    completed-but-unscored stage; the resume path must finish scoring it
+    rather than shipping an artifact with holes."""
+    masks, holder, pio, cfg, mk, init = _sweep_ctx(tmp_path)
+    res = sweep_lib.run_sweep(cfg, mk, _toy_eval_acc, init=init,
+                              params_io=pio,
+                              stage_eval=lambda m, p: _toy_eval_acc(m))
+    # simulate the crash window: strip stage 0's score on disk
+    rp = os.path.join(sweep_lib._stage_dir(cfg, 0), "result.json")
+    stage = json.load(open(rp))
+    want = stage.pop("test_acc")
+    json.dump(stage, open(rp, "w"))
+    res2 = sweep_lib.run_sweep(cfg, mk, _toy_eval_acc, init=init,
+                               params_io=pio,
+                               stage_eval=lambda m, p: _toy_eval_acc(m))
+    assert res2["stages"][0]["test_acc"] == want
+    assert json.load(open(rp))["test_acc"] == want
+    assert [s["mask_fingerprint"] for s in res2["stages"]] == \
+        [s["mask_fingerprint"] for s in res["stages"]]
+
+
+def test_rescore_does_not_truncate_artifact(tmp_path):
+    """The resume re-score path folds its score into the EXISTING artifact:
+    when the on-disk artifact already describes more stages than the resume
+    loop has revisited, the reporter must patch the stage in place, not
+    clobber the artifact with a one-stage partial list."""
+    cfg = sweep_lib.SweepConfig(budgets=[36, 28],
+                                out_dir=str(tmp_path / "t"), name="t")
+    s0 = {"stage": 0, "budget": 36, "mask_fingerprint": "aaa"}
+    s1 = {"stage": 1, "budget": 28, "mask_fingerprint": "bbb",
+          "test_acc": 9.0}
+    os.makedirs(sweep_lib._stage_dir(cfg, 0), exist_ok=True)
+    sweep_lib._write_artifact(cfg, [s0, s1], True)
+
+    reporter = sweep_lib._StageReporter(cfg, [s0], None,
+                                        lambda m, p: 5.0, None, None)
+    reporter.submit(0, s0, _toy_masks(), None)
+    reporter.join()
+    art = json.load(open(sweep_lib.artifact_path(cfg)))
+    assert len(art["stages"]) == 2 and art["complete"]   # not truncated
+    assert art["stages"][0]["test_acc"] == 5.0           # score folded in
+    assert art["stages"][1] == s1
+
+
 def test_sweep_validates_schedule(tmp_path):
     masks, holder, pio, cfg, mk, init = _sweep_ctx(tmp_path)
     for bad in ([], [28, 36], [36, 36], [-1], [M.count(masks)]):

@@ -1,0 +1,104 @@
+"""Check in-repo relative links in every tracked Markdown file.
+
+    python tools/check_docs_links.py [root]
+
+Walks the repo for ``*.md`` (skipping VCS/cache/run-output directories),
+extracts inline Markdown links/images ``[text](target)``, and verifies that
+every non-external target resolves to an existing file or directory:
+
+- ``http(s)://`` / ``mailto:`` targets are skipped (no network in CI);
+- pure in-page anchors (``#section``) are skipped;
+- ``path#anchor`` targets are checked for the *file* part;
+- absolute paths (``/...``) are rejected outright — they break the moment
+  the repo is cloned anywhere else.
+
+Exit code 0 when every link resolves, 1 with one ``BROKEN`` line per bad
+link otherwise — the CI ``docs`` job runs this so a renamed or deleted doc
+cannot leave dangling references behind.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", ".ruff_cache",
+             "node_modules", ".venv", "venv", "runs"}
+
+# inline links and images: [text](target "title") — non-greedy, one line;
+# fenced code blocks are stripped before matching.
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)>\s]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def iter_md_files(root: str):
+    """Yield every ``.md`` path under ``root``, skipping SKIP_DIRS."""
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in sorted(dirnames) if d not in SKIP_DIRS]
+        for fn in sorted(filenames):
+            if fn.endswith(".md"):
+                yield os.path.join(dirpath, fn)
+
+
+def iter_links(md_path: str):
+    """Yield ``(line_number, target)`` for each inline link/image, with
+    fenced code blocks excluded (they hold example syntax, not links)."""
+    in_fence = False
+    with open(md_path, encoding="utf-8") as f:
+        for i, line in enumerate(f, 1):
+            if _FENCE_RE.match(line.strip()):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in _LINK_RE.finditer(line):
+                yield i, m.group(1)
+
+
+def check_file(md_path: str):
+    """Check one file; returns ``(problems, n_links)`` where problems is a
+    list of ``(line, target, reason)`` tuples (single parse per file)."""
+    problems = []
+    n_links = 0
+    base = os.path.dirname(md_path)
+    for line_no, target in iter_links(md_path):
+        n_links += 1
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            continue                      # in-page anchor
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if path.startswith("/"):
+            problems.append((line_no, target,
+                             "absolute path (breaks outside this clone)"))
+            continue
+        resolved = os.path.normpath(os.path.join(base, path))
+        if not os.path.exists(resolved):
+            problems.append((line_no, target, f"missing: {resolved}"))
+    return problems, n_links
+
+
+def main(argv=None) -> int:
+    """CLI entry; returns 0 iff every in-repo link resolves."""
+    argv = sys.argv[1:] if argv is None else argv
+    root = os.path.abspath(argv[0] if argv else ".")
+    n_files = n_links = 0
+    broken = []
+    for md in iter_md_files(root):
+        n_files += 1
+        rel = os.path.relpath(md, root)
+        problems, count = check_file(md)
+        n_links += count
+        for line_no, target, reason in problems:
+            broken.append(f"BROKEN {rel}:{line_no}: ({target}) — {reason}")
+    for b in broken:
+        print(b)
+    print(f"checked {n_links} links in {n_files} markdown files: "
+          f"{len(broken)} broken")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
