@@ -1,26 +1,42 @@
 """Candidate-evaluation engine throughput: sequential vs batched vs sharded
-vs pipelined.
+vs pipelined vs suffix (prefix-reuse).
 
 Measures candidates/sec for each core.engine backend on the mini ResNet
 config — the number that bounds BCD wall-clock (Alg. 2 evaluates up to RT
 candidates per outer step).  The timed loop reproduces ``run_bcd``'s real
 trial loop: chunk mask trees are *materialized from removal indices inside
-the loop* and driven through ``engine.evaluate_prefetched``, so the
-pipelined backend's overlap of chunk k+1's host materialization + transfer
-with chunk k's compute shows up in the number (the chunk-serial backends pay
-those phases back-to-back).  Emits the repo's CSV row format plus a
-machine-readable ``BENCH_bcd_eval.json`` so future PRs can track the
-candidates/sec trajectory (CI gates on it — see
-benchmarks/check_bench_regression.py).
+the loop* and driven through ``engine.evaluate_prefetched`` (site-aware
+backends additionally run the real site-major plan + per-step prefix
+computation), so every backend pays exactly what the real loop pays.
+
+Two workloads:
+
+* the main ``backends`` table samples removal blocks from the GLOBAL active
+  set (the Alg. 2 default).  Global blocks almost always touch a shallow
+  site, so the suffix backend's cost model falls most chunks back to the
+  full forward — its row measures that fallback overhead, not the reuse win;
+* ``per_site_depth`` samples *site-local* blocks at a shallow / middle /
+  deep site and times suffix vs batched on each — the regime where
+  candidates are local edits and the prefix-reuse engine shines.  The
+  headline ``speedup_suffix_vs_batched`` is the deep-site ratio (CI gates
+  it: benchmarks/check_bench_regression.py --gate-speedup).
+
+Emits the repo's CSV row format plus a machine-readable
+``BENCH_bcd_eval.json``, and appends one line per run to the append-only
+``BENCH_history.jsonl`` so the perf trajectory is recorded across PRs.
 
     PYTHONPATH=src python -m benchmarks.bench_bcd_eval \
         [--rt 32] [--chunk-size 8] [--prefetch 2] [--repeats 3] \
-        [--out BENCH_bcd_eval.json]
+        [--out BENCH_bcd_eval.json] [--history BENCH_history.jsonl] \
+        [--compile-cache DIR]
 """
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
+import os
+import subprocess
 import time
 
 import numpy as np
@@ -28,7 +44,7 @@ import jax
 
 from repro.core import engine, linearize, masks as M
 from repro.data import ImageDatasetCfg, SyntheticImages
-from repro.launch import mesh as mesh_lib
+from repro.launch import compile_cache, mesh as mesh_lib
 from repro.models.resnet import CNN, CNNConfig
 
 
@@ -46,18 +62,28 @@ def build_pipeline(image_size=16, eval_batch=128):
 
 def time_backend(evaluator, masks0, indices, chunk_size, repeats,
                  warmup=True):
-    """Drive the real trial loop (materialize per chunk, prefetch-aware);
-    return (cands/sec, us/cand).  warmup=False skips the untimed
-    compile-and-cache sweep (the evaluator was already warmed)."""
+    """Drive the real trial loop (materialize per chunk, prefetch-aware;
+    site-aware backends run the site-major plan with per-sweep prefix
+    recomputation — the per-BCD-step cost); return (cands/sec, us/cand).
+    warmup=False skips the untimed compile-and-cache sweep (the evaluator
+    was already warmed)."""
     # Match _select_block's chunk policy so the benchmark pays the same
     # per-chunk materialization cost the real loop pays.
     chunk_size = engine.effective_chunk(evaluator, chunk_size)
     flat, layout = M._flatten(masks0)
     n = indices.shape[0]
+    sited = getattr(evaluator, "site_aware", False)
 
     def sweep():
-        chunks = M.materialize_chunks(flat, layout, indices, chunk_size)
-        for accs in engine.evaluate_prefetched(evaluator, chunks):
+        if sited:
+            evaluator.begin_step(masks0)
+            order, chunks = engine.plan_sited_chunks(
+                evaluator, indices, layout, chunk_size)
+            gen = engine.materialize_sited(flat, layout, indices, order,
+                                           chunks)
+        else:
+            gen = M.materialize_chunks(flat, layout, indices, chunk_size)
+        for accs in engine.evaluate_prefetched(evaluator, gen):
             pass
 
     if warmup:
@@ -68,6 +94,35 @@ def time_backend(evaluator, masks0, indices, chunk_size, repeats,
     dt = time.perf_counter() - t0
     total = n * repeats
     return total / dt, dt / total * 1e6
+
+
+def depth_sites(model):
+    """Representative shallow / middle / deep cut sites (forward order)."""
+    order = model.site_order()
+    return {"shallow": order[0], "middle": order[len(order) // 2],
+            "deep": order[-1]}
+
+
+def append_history(path, report):
+    """Append one compact line to the append-only perf-trajectory log."""
+    try:
+        git = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True,
+                             timeout=10).stdout.strip() or None
+    except Exception:
+        git = None
+    entry = {
+        "utc": datetime.datetime.now(datetime.timezone.utc)
+        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+        "git": git,
+        "config": report["config"],
+        "cands_per_s": {k: v["cands_per_s"]
+                        for k, v in report["backends"].items()},
+        **{k: v for k, v in report.items() if k.startswith("speedup_")},
+    }
+    with open(path, "a") as f:
+        json.dump(entry, f, separators=(",", ":"))
+        f.write("\n")
 
 
 def main():
@@ -92,7 +147,18 @@ def main():
     ap.add_argument("--drc", type=int, default=64)
     ap.add_argument("--eval-batch", type=int, default=4)
     ap.add_argument("--out", default="BENCH_bcd_eval.json")
+    ap.add_argument("--history", default=None,
+                    help="append-only perf log (default: BENCH_history.jsonl"
+                         " next to --out; pass 'none' to skip)")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="enable the jax persistent compilation cache at "
+                         "DIR (re-runs skip re-jit; hit counts are logged)")
     args = ap.parse_args()
+
+    counter = None
+    if args.compile_cache:
+        compile_cache.enable(args.compile_cache)
+        counter = compile_cache.hit_counter()
 
     model, params, batch, masks0 = build_pipeline(
         eval_batch=args.eval_batch)
@@ -105,6 +171,8 @@ def main():
 
     eval_acc = model.make_eval_acc(params, batch)
     eval_fn = model.make_eval_fn(params, batch)
+    suffix_ctx = {"params": params,
+                  "batch": {k: np.asarray(v) for k, v in batch.items()}}
     backends = {
         "sequential": engine.SequentialEvaluator(eval_acc),
         "batched": engine.BatchedEvaluator(eval_fn, pad_to=chunk),
@@ -112,6 +180,9 @@ def main():
             eval_fn, mesh_lib.make_candidate_mesh(), pad_to=chunk),
         "pipelined": engine.PipelinedEvaluator(
             eval_fn, pad_to=chunk, prefetch=args.prefetch),
+        "suffix": engine.SuffixEvaluator(
+            model.make_suffix_eval_fns(), pad_to=chunk, context=suffix_ctx,
+            prefetch=args.prefetch),
     }
 
     trials = {name: [] for name in backends}
@@ -127,6 +198,32 @@ def main():
                          "us_per_cand": round(1e6 / cps, 2)}
         print(f"bcd_eval_{name},{1e6 / cps:.1f},{cps:.1f}")
 
+    # --- per-site-depth breakdown: site-local removal blocks, the regime
+    # where every candidate in a chunk shares a deep prefix
+    fractions = model.site_prefix_fractions()
+    per_depth = {}
+    for depth, site in depth_sites(model).items():
+        site_idx = M.sample_removal_indices_within(
+            np.random.default_rng(1), masks0, args.drc, args.rt, [site])
+        rows = {"batched": [], "suffix": []}
+        for trial in range(max(1, args.trials)):
+            for name in rows:
+                cps, _ = time_backend(backends[name], masks0, site_idx,
+                                      chunk, args.repeats,
+                                      warmup=(trial == 0))
+                rows[name].append(cps)
+        b = float(np.median(rows["batched"]))
+        s = float(np.median(rows["suffix"]))
+        per_depth[depth] = {
+            "site": site,
+            "prefix_fraction": round(float(fractions[site]), 4),
+            "batched_cands_per_s": round(b, 2),
+            "suffix_cands_per_s": round(s, 2),
+            "speedup_suffix_vs_batched": round(s / b, 2),
+        }
+        print(f"bcd_eval_suffix_{depth},{site},"
+              f"{per_depth[depth]['speedup_suffix_vs_batched']:.2f}x")
+
     def speedup(a, b):
         return round(results[a]["cands_per_s"] / results[b]["cands_per_s"], 2)
 
@@ -141,18 +238,36 @@ def main():
                    "n_devices": jax.device_count(),
                    "backend": jax.default_backend()},
         "backends": results,
+        "per_site_depth": per_depth,
         "speedup_batched_vs_sequential": speedup("batched", "sequential"),
         "speedup_sharded_vs_sequential": speedup("sharded", "sequential"),
         "speedup_pipelined_vs_sequential": speedup("pipelined", "sequential"),
         "speedup_pipelined_vs_batched": speedup("pipelined", "batched"),
+        # headline prefix-reuse numbers (site-local workload): deep cut and
+        # the mean over the depth classes — both CI-gated
+        "speedup_suffix_vs_batched":
+            per_depth["deep"]["speedup_suffix_vs_batched"],
+        "speedup_suffix_vs_batched_mean": round(
+            float(np.mean([d["speedup_suffix_vs_batched"]
+                           for d in per_depth.values()])), 2),
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
+    history = args.history
+    if history is None:
+        history = os.path.join(os.path.dirname(args.out) or ".",
+                               "BENCH_history.jsonl")
+    if history != "none":
+        append_history(history, report)
     print(f"batched vs sequential: "
           f"{report['speedup_batched_vs_sequential']:.2f}x; "
-          f"pipelined vs batched: "
-          f"{report['speedup_pipelined_vs_batched']:.2f}x  -> {args.out}")
+          f"suffix vs batched (deep site): "
+          f"{report['speedup_suffix_vs_batched']:.2f}x "
+          f"(mean {report['speedup_suffix_vs_batched_mean']:.2f}x)"
+          f"  -> {args.out}")
+    if counter is not None:
+        print(counter.log_line())
     return report
 
 

@@ -87,6 +87,39 @@ def compare(baseline: dict, fresh: dict, tolerance: float,
     return failures, lines
 
 
+def compare_speedup_keys(baseline: dict, fresh: dict, keys, tolerance: float):
+    """Gate top-level ``speedup_*`` report keys (e.g.
+    ``speedup_suffix_vs_batched``).
+
+    These are *within-report* backend ratios, so they are hardware-robust
+    the same way ``--relative-to`` normalization is: a uniformly slower CI
+    runner scales numerator and denominator alike.  A key missing from
+    either report fails loudly (exit 2 path) — gating a speedup that
+    silently stopped being measured would be a green lie.
+
+    Returns (failures, missing, lines).
+    """
+    failures, missing, lines = [], [], []
+    for key in keys:
+        old, new = baseline.get(key), fresh.get(key)
+        if not isinstance(old, (int, float)) or \
+                not isinstance(new, (int, float)):
+            missing.append(key)
+            lines.append(f"  {key}: missing or non-numeric "
+                         f"(baseline={old!r} fresh={new!r})")
+            continue
+        ratio = new / old if old > 0 else float("inf")
+        status = "OK"
+        if ratio < 1.0 - tolerance - _EPS:
+            status = "REGRESSION"
+            failures.append(key)
+        elif ratio > 1.0 + tolerance:
+            status = "faster (consider refreshing the baseline)"
+        lines.append(f"  {key}: {old:.2f}x -> {new:.2f}x "
+                     f"({ratio:.2f} of baseline)  {status}")
+    return failures, missing, lines
+
+
 def load_report(path: str, which: str):
     """Load one benchmark report; returns None after printing a clear FAIL
     line when the file is missing, unreadable, or not a report-shaped dict
@@ -136,6 +169,11 @@ def main(argv=None):
                     help="normalize by this backend's candidates/sec within "
                          "each report (hardware-robust cross-backend ratio "
                          "gate; e.g. 'sequential')")
+    ap.add_argument("--gate-speedup", action="append", default=[],
+                    metavar="KEY",
+                    help="also gate this top-level speedup_* report key "
+                         "(within-report ratio, so hardware-robust); "
+                         "repeatable.  e.g. speedup_suffix_vs_batched")
     args = ap.parse_args(argv)
     baseline = load_report(args.baseline, "baseline")
     fresh = load_report(args.fresh, "fresh")
@@ -164,8 +202,21 @@ def main(argv=None):
           f"({mode}, tolerance {args.tolerance:.0%}):")
     for line in lines:
         print(line)
-    if failures:
-        print(f"FAIL: candidates/sec regression in {', '.join(failures)}")
+    key_failures, key_missing = [], []
+    if args.gate_speedup:
+        key_failures, key_missing, key_lines = compare_speedup_keys(
+            baseline, fresh, args.gate_speedup, args.tolerance)
+        print(f"speedup-key gate (tolerance {args.tolerance:.0%}):")
+        for line in key_lines:
+            print(line)
+    if key_missing:
+        print(f"FAIL: gated speedup key(s) missing from a report: "
+              f"{', '.join(key_missing)} — regenerate with the current "
+              "benchmarks.bench_bcd_eval (or drop the --gate-speedup flag)")
+        return 2
+    if failures or key_failures:
+        print("FAIL: regression in "
+              f"{', '.join(failures + key_failures)}")
         return 1
     print("PASS")
     return 0

@@ -3,18 +3,24 @@ vs SNL(B_target) head-to-head (Fig. 1 / Table 3 protocol, synthetic CIFAR).
 
     PYTHONPATH=src python examples/resnet18_bcd_pipeline.py \
         [--image-size 16] [--ref-frac 0.6] [--target-frac 0.4] [--full] \
-        [--engine batched] [--chunk-size 8] [--prefetch 2|auto]
+        [--engine batched] [--chunk-size 8] [--prefetch 2|auto] \
+        [--compile-cache DIR]
 
 --full uses the real ResNet18 geometry at 32x32 (slow on CPU); the default
 uses a reduced stage plan with the same code path.  --engine selects the BCD
 candidate-evaluation backend (core.engine): 'sequential' is the reference,
 'batched' vmaps candidate chunks into one jitted call, 'sharded' additionally
-lays the candidate axis out across all local devices, and 'pipelined'
+lays the candidate axis out across all local devices, 'pipelined'
 double-buffers candidate staging — while the device evaluates chunk k, the
 host materializes and transfers chunk k+1 (--prefetch chunks stay in flight;
 ``--prefetch auto`` measures producer vs consumer rates on the first chunks
-and picks the depth itself).  Selection is bit-identical across engines for
-a fixed seed.
+and picks the depth itself) — and 'suffix' adds prefix reuse: candidate
+chunks are grouped by the segment of their earliest mutated mask site, the
+shared forward prefix is computed once per site per step, and only the
+suffix is vmapped per candidate (docs/bcd_engine.md).  Selection is
+bit-identical across engines for a fixed seed.  --compile-cache DIR turns
+on jax's persistent compilation cache so re-runs and resumed sweeps skip
+re-jit (hit counts print at exit).
 
 Sweep mode (the paper's accuracy-vs-budget curve, Fig. 4 protocol):
 
@@ -42,12 +48,14 @@ manifest fingerprint.  Unset, the run is plain single-process.
 import argparse
 import os
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import bcd, engine, linearize, masks as M, runner
 from repro.core.snl import SNLConfig, finetune, run_snl
 from repro.data import ImageDatasetCfg, SyntheticImages
+from repro.launch import compile_cache
 from repro.launch import coordinator as coord_lib
 from repro.launch import sweep as sweep_lib
 from repro.models.resnet import CNN, CNNConfig
@@ -62,11 +70,16 @@ def parse_args():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--engine", default="batched",
                     choices=["sequential", "batched", "sharded",
-                             "pipelined"])
+                             "pipelined", "suffix"])
     ap.add_argument("--chunk-size", type=int, default=8)
     ap.add_argument("--prefetch", default="2",
-                    help="chunks kept staged ahead (pipelined engine), or "
-                         "'auto' to pick from measured rates")
+                    help="chunks kept staged ahead (pipelined/suffix "
+                         "engines), or 'auto' to pick from measured rates "
+                         "(pipelined only)")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="enable the jax persistent compilation cache at "
+                         "DIR — sweep restarts stop paying re-jit (cache "
+                         "hit counts are logged at exit)")
     ap.add_argument("--sweep", default=None,
                     help="comma-separated descending budget fractions "
                          "(e.g. '0.55,0.4'): run the multi-budget sweep "
@@ -142,20 +155,33 @@ def train_base(model, step, opt, batches, masks0):
 
 def make_bcd_evaluator(args, model, eval_b, holder, chunk_size, rt):
     """The candidate engine: params are evaluator *context* (a jit input)
-    because finetuning rewrites them between outer steps."""
+    because finetuning rewrites them between outer steps.
+
+    Returns (evaluator, eval_acc, set_ctx): call ``set_ctx(params)`` after
+    every finetune — engines differ in context shape (the suffix engine
+    carries the eval batch alongside params), so callers never touch
+    ``set_context`` directly."""
     eval_fn_p = model.make_param_eval_fn(eval_b)
     acc_jit = jax.jit(eval_fn_p)
     eval_acc = lambda m: float(acc_jit(M.as_device(m), holder["params"]))
     if args.engine == "sequential":
         return engine.make_evaluator("sequential", eval_acc=eval_acc), \
-            eval_acc
+            eval_acc, lambda p: None
+    # don't let ragged-chunk padding exceed RT (sharded may still
+    # round up to the device count; extras are sliced off)
+    pad = min(chunk_size, rt)
+    if args.engine == "suffix":
+        batch_np = {k: np.asarray(v) for k, v in eval_b.items()}
+        evaluator = engine.make_evaluator(
+            "suffix", split=model.make_suffix_eval_fns(),
+            context={"params": holder["params"], "batch": batch_np},
+            pad_to=pad, prefetch=args.prefetch)
+        return evaluator, eval_acc, lambda p: evaluator.set_context(
+            {"params": p, "batch": batch_np})
     evaluator = engine.make_evaluator(
-        args.engine, eval_fn=eval_fn_p,
-        # don't let ragged-chunk padding exceed RT (sharded may still
-        # round up to the device count; extras are sliced off)
-        pad_to=min(chunk_size, rt),
+        args.engine, eval_fn=eval_fn_p, pad_to=pad,
         context=holder["params"], prefetch=args.prefetch)
-    return evaluator, eval_acc
+    return evaluator, eval_acc, evaluator.set_context
 
 
 def run_sweep_mode(args):
@@ -191,13 +217,12 @@ def run_sweep_mode(args):
 
     holder = {"params": init["params"]}
     eval_b = data.train_eval_set(128)
-    evaluator, eval_acc = make_bcd_evaluator(
+    evaluator, eval_acc, set_ctx = make_bcd_evaluator(
         args, model, eval_b, holder, args.chunk_size, rt=6)
 
     def set_params(p):
         holder["params"] = p
-        if args.engine != "sequential":
-            evaluator.set_context(p)
+        set_ctx(p)
 
     def ft(m):
         set_params(finetune(holder["params"], m, sloss, batches,
@@ -271,14 +296,13 @@ def run_head_to_head(args):
     bcd_cfg = bcd.BCDConfig(
         b_target=b_target, drc=max(1, (b_ref - b_target) // 5), rt=6,
         adt=0.3, chunk_size=args.chunk_size)
-    evaluator, eval_acc = make_bcd_evaluator(
+    evaluator, eval_acc, set_ctx = make_bcd_evaluator(
         args, model, eval_b, holder, bcd_cfg.chunk_size, bcd_cfg.rt)
 
     def ft(m):
         holder["params"] = finetune(holder["params"], m, sloss, batches,
                                     steps=12, lr=1e-2)
-        if args.engine != "sequential":
-            evaluator.set_context(holder["params"])
+        set_ctx(holder["params"])
 
     res_bcd = bcd.run_bcd(res_ref.masks, bcd_cfg, eval_acc, finetune=ft,
                           evaluator=evaluator, verbose=True)
@@ -292,10 +316,19 @@ def run_head_to_head(args):
 
 def main():
     args = parse_args()
+    counter = None
+    if args.compile_cache:
+        # before any jit: re-runs and resumed sweeps then reuse compiled
+        # executables instead of paying re-jit (the cache key covers
+        # jax/XLA versions + options, so stale dirs are cold, not wrong)
+        compile_cache.enable(args.compile_cache)
+        counter = compile_cache.hit_counter()
     if args.sweep is not None:
         run_sweep_mode(args)
     else:
         run_head_to_head(args)
+    if counter is not None:
+        print(counter.log_line())
 
 
 if __name__ == "__main__":

@@ -214,6 +214,106 @@ def model_flops(cfg, shape, mode: str) -> float:
     return 2.0 * n_active * tokens
 
 
+def block_fwd_flops(cfg, blk, new_tokens: float, ctx: float,
+                    mode: str = "prefill"):
+    """Analytic forward cost of ONE block: (flops, weight_bytes,
+    decode_cache_bytes).
+
+    The per-block term :func:`analytic_cell` sums over the whole stack;
+    exposed separately so per-layer *fractions* (the suffix cost model's
+    prefix_fraction — models' ``site_prefix_fractions``) share the same
+    arithmetic.  ``new_tokens`` is batch×new positions, ``ctx`` the
+    attention context length.
+    """
+    d = cfg.d_model
+    hd, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    k = blk.kind
+    cache_bytes = 0.0
+    if k in ("dense", "moe", "attn_only"):
+        f_attn_proj = 2 * new_tokens * d * (H + 2 * KV) * hd \
+            + 2 * new_tokens * H * hd * d
+        kv_len = min(ctx, blk.window or ctx)
+        if mode == "decode":
+            f_sc = 2 * new_tokens * H * hd * kv_len * 2
+        else:
+            # causal: average key span ~ kv_len/2 (full) or window
+            span = (ctx / 2) if blk.window is None else \
+                min(blk.window, ctx / 2)
+            f_sc = 2 * new_tokens * H * hd * span * 2
+        f = f_attn_proj + f_sc
+        wb = (d * (H + 2 * KV) * hd + H * hd * d) * 2
+        if mode == "decode":
+            cache_bytes += new_tokens * kv_len * KV * hd * 2 * 2
+        if k == "dense":
+            nf = 3 if cfg.gated_ffn else 2
+            f += 2 * new_tokens * d * cfg.d_ff * nf
+            wb += d * cfg.d_ff * nf * 2
+        elif k == "moe":
+            cap = cfg.top_k * cfg.capacity_factor
+            f += 2 * new_tokens * d * cfg.n_experts          # router
+            f += 2 * new_tokens * cap * 3 * d * cfg.d_ff_expert
+            wb += 3 * cfg.n_experts * d * cfg.d_ff_expert * 2
+            if cfg.n_shared_experts:
+                f += 2 * new_tokens * 3 * d * cfg.d_ff_shared
+                wb += 3 * d * cfg.d_ff_shared * 2
+    elif k == "mamba":
+        di = cfg.d_inner
+        nh = di // cfg.mamba_head_dim
+        N, mh = cfg.ssm_state, cfg.mamba_head_dim
+        chunk = 64 if mode != "decode" else 1
+        f = 2 * new_tokens * d * 2 * di \
+            + 2 * new_tokens * d * (2 * N + nh) \
+            + 2 * new_tokens * di * d \
+            + 4 * new_tokens * di  # conv
+        # chunked SSD: scores (chunk·N) + y (chunk·mh) + state (2·N·mh)
+        f += 2 * new_tokens * nh * (chunk * N + chunk * mh + 2 * N * mh)
+        wb = (d * 2 * di + d * (2 * N + nh) + di * d) * 2
+        if mode == "decode":
+            cache_bytes += new_tokens * nh * N * mh * 4
+    elif k == "rwkv":
+        f_ff = cfg.d_ff
+        rh = cfg.rwkv_head_dim
+        Hr = d // rh
+        chunk = 32 if mode != "decode" else 1
+        f = 2 * new_tokens * d * d * 6 \
+            + 2 * new_tokens * d * f_ff * 2 + 2 * new_tokens * d * d
+        f += 2 * new_tokens * Hr * (chunk * rh * 2 + 2 * rh * rh)
+        wb = (7 * d * d + 2 * d * f_ff) * 2
+        if mode == "decode":
+            cache_bytes += new_tokens * Hr * rh * rh * 4
+    else:
+        raise ValueError(k)
+    return f, wb, cache_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class SuffixCostModel:
+    """Per-site decision: suffix-mode (prefix once + vmapped suffix) vs the
+    full-forward backends, for a chunk of ``n`` candidates cutting at a
+    site with ``prefix_fraction`` f of forward FLOPs above it.
+
+    Per-chunk cost ratio:  suffix / full = (f + (1 - f)·n) / n — always <1
+    for n > 1, so the *model* says "always suffix"; the thresholds price
+    what it can't see: a shallow cut's win (f·(n-1) forwards) is smaller
+    than its fixed overheads (one extra jit per segment, the cached-acts
+    residency, per-chunk plan/slice work), so those sites fall back to the
+    full path (``use_suffix() == False`` -> the evaluator's inner
+    batched/sharded/pipelined backend evaluates the chunk).
+    """
+
+    min_prefix_fraction: float = 0.05   # below this the reuse is noise
+    min_chunk: int = 2                  # n=1 reuses nothing
+
+    def speedup(self, prefix_fraction: float, n: int) -> float:
+        """Predicted candidates/sec gain of suffix mode for one chunk."""
+        f = min(max(prefix_fraction, 0.0), 1.0)
+        return n / (f + (1.0 - f) * n)
+
+    def use_suffix(self, prefix_fraction: float, n: int) -> bool:
+        return (n >= self.min_chunk
+                and prefix_fraction >= self.min_prefix_fraction)
+
+
 def analytic_cell(cfg, shape, mode: str, *, remat: bool = True):
     """Analytic (HLO-faithful) FLOPs and HBM bytes for one cell, GLOBAL.
 
@@ -222,7 +322,8 @@ def analytic_cell(cfg, shape, mode: str, *, remat: bool = True):
     unrolled small model in tests/test_roofline.py).  Counts matmul FLOPs as
     2mnk, attention with the causal 1/2 factor, MoE at capacity (the real
     dispatched compute incl. padding waste), and the chunked linear-attention
-    intra-chunk matmuls for mamba/rwkv.
+    intra-chunk matmuls for mamba/rwkv (block_fwd_flops owns the per-block
+    arithmetic).
 
     Bytes model (per step, global): weights read (fwd + bwd + remat re-fwd for
     train) + optimizer state r/w (train) + activation stream traffic
@@ -241,66 +342,11 @@ def analytic_cell(cfg, shape, mode: str, *, remat: bool = True):
     f_layer = 0.0       # forward flops for all layers, per step (global)
     w_bytes = 0.0       # weight bytes (bf16), all layers
     cache_bytes = 0.0   # decode-state bytes read per step
-    hd, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
     for blk in kinds:
-        k = blk.kind
-        if k in ("dense", "moe", "attn_only"):
-            f_attn_proj = 2 * new_tokens * d * (H + 2 * KV) * hd \
-                + 2 * new_tokens * H * hd * d
-            if mode == "decode":
-                kv_len = min(ctx, blk.window or ctx)
-                f_sc = 2 * new_tokens * H * hd * kv_len * 2
-            else:
-                kv_len = min(ctx, blk.window or ctx)
-                # causal: average key span ~ kv_len/2 (full) or window
-                span = (ctx / 2) if blk.window is None else \
-                    min(blk.window, ctx / 2)
-                f_sc = 2 * new_tokens * H * hd * span * 2
-            f = f_attn_proj + f_sc
-            wb = (d * (H + 2 * KV) * hd + H * hd * d) * 2
-            if mode == "decode":
-                cache_bytes += B * kv_len * KV * hd * 2 * 2
-            if k == "dense":
-                nf = 3 if cfg.gated_ffn else 2
-                f += 2 * new_tokens * d * cfg.d_ff * nf
-                wb += d * cfg.d_ff * nf * 2
-            elif k == "moe":
-                cap = cfg.top_k * cfg.capacity_factor
-                f += 2 * new_tokens * d * cfg.n_experts          # router
-                f += 2 * new_tokens * cap * 3 * d * cfg.d_ff_expert
-                wb += 3 * cfg.n_experts * d * cfg.d_ff_expert * 2
-                if cfg.n_shared_experts:
-                    f += 2 * new_tokens * 3 * d * cfg.d_ff_shared
-                    wb += 3 * d * cfg.d_ff_shared * 2
-        elif k == "mamba":
-            di = cfg.d_inner
-            nh = di // cfg.mamba_head_dim
-            N, mh = cfg.ssm_state, cfg.mamba_head_dim
-            chunk = 64 if mode != "decode" else 1
-            f = 2 * new_tokens * d * 2 * di \
-                + 2 * new_tokens * d * (2 * N + nh) \
-                + 2 * new_tokens * di * d \
-                + 4 * new_tokens * di  # conv
-            # chunked SSD: scores (chunk·N) + y (chunk·mh) + state (2·N·mh)
-            f += 2 * new_tokens * nh * (chunk * N + chunk * mh + 2 * N * mh)
-            wb = (d * 2 * di + d * (2 * N + nh) + di * d) * 2
-            if mode == "decode":
-                cache_bytes += B * nh * N * mh * 4
-        elif k == "rwkv":
-            f_ff = cfg.d_ff
-            rh = cfg.rwkv_head_dim
-            Hr = d // rh
-            chunk = 32 if mode != "decode" else 1
-            f = 2 * new_tokens * d * d * 6 \
-                + 2 * new_tokens * d * f_ff * 2 + 2 * new_tokens * d * d
-            f += 2 * new_tokens * Hr * (chunk * rh * 2 + 2 * rh * rh)
-            wb = (7 * d * d + 2 * d * f_ff) * 2
-            if mode == "decode":
-                cache_bytes += B * Hr * rh * rh * 4
-        else:
-            raise ValueError(k)
+        f, wb, cb = block_fwd_flops(cfg, blk, new_tokens, ctx, mode)
         f_layer += f
         w_bytes += wb
+        cache_bytes += cb
 
     f_logits = 2 * new_tokens * d * V
     w_bytes += V * d * 2

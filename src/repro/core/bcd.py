@@ -123,6 +123,13 @@ def _select_block(
     over all RT.  The rng always burns exactly RT draws per step so early
     exit does not desynchronize subsequent steps across backends.
 
+    Site-aware backends (``engine.SuffixEvaluator``) evaluate in *site-major*
+    order instead — candidates grouped by the segment of their earliest
+    touched site, so each group shares one cached forward prefix — and
+    :func:`_scan_sited` replays the sampling-order selection rules on the
+    reordered results; the returned (winner, best_drop, trials, found) are
+    provably identical to the sampling-order loop (see its docstring).
+
     Returns (candidate_tree, best_idx, best_drop, trials_evaluated, found).
     """
     from . import engine
@@ -132,24 +139,30 @@ def _select_block(
     # Backends may cap the chunk (engine.effective_chunk); selection is
     # invariant under chunking either way.
     chunk_size = engine.effective_chunk(evaluator, cfg.chunk_size)
-    bounds = M.chunk_bounds(cfg.rt, chunk_size)
-    best_idx, best_drop, found, n_done = -1, float("inf"), False, 0
-    results = engine.evaluate_prefetched(
-        evaluator, M.materialize_chunks(flat, layout, indices, chunk_size))
-    try:
-        for (start, _), accs in zip(bounds, results):
-            drops = acc_base - np.asarray(accs, dtype=np.float64)
-            for j, drop in enumerate(drops):
-                n_done += 1
-                if drop < best_drop:
-                    best_idx, best_drop = start + j, float(drop)
-                if drop < cfg.adt:
-                    found = True
+    if getattr(evaluator, "site_aware", False):
+        best_idx, best_drop, n_done, found = _scan_sited(
+            masks, cfg, evaluator, flat, layout, indices, chunk_size,
+            acc_base)
+    else:
+        bounds = M.chunk_bounds(cfg.rt, chunk_size)
+        best_idx, best_drop, found, n_done = -1, float("inf"), False, 0
+        results = engine.evaluate_prefetched(
+            evaluator,
+            M.materialize_chunks(flat, layout, indices, chunk_size))
+        try:
+            for (start, _), accs in zip(bounds, results):
+                drops = acc_base - np.asarray(accs, dtype=np.float64)
+                for j, drop in enumerate(drops):
+                    n_done += 1
+                    if drop < best_drop:
+                        best_idx, best_drop = start + j, float(drop)
+                    if drop < cfg.adt:
+                        found = True
+                        break
+                if found:
                     break
-            if found:
-                break
-    finally:
-        results.close()          # drop any staged-but-unread chunks
+        finally:
+            results.close()      # drop any staged-but-unread chunks
     if best_idx < 0:
         raise RuntimeError(
             "BCD trial loop produced no candidate: evaluator returned "
@@ -157,6 +170,58 @@ def _select_block(
     cand = M.materialize_from_flat(flat, layout,
                                    indices[best_idx:best_idx + 1])
     return M.index_stacked(cand, 0), best_idx, best_drop, n_done, found
+
+
+def _scan_sited(masks, cfg, evaluator, flat, layout, indices, chunk_size,
+                acc_base):
+    """Site-major trial scan with sampling-order selection replay.
+
+    Chunks are evaluated grouped by cut segment (one cached prefix per
+    group — ``engine.plan_sited_chunks``), which permutes *evaluation*
+    order.  Selection stays bit-identical to the sampling-order loop
+    because its outcome is a pure function of the drop vector:
+
+    * if any candidate has drop < adt, the sampling-order loop stops at the
+      FIRST such index ``i*`` and returns it (every earlier candidate has
+      drop >= adt > impossible-to-win), with trials = i* + 1;
+    * otherwise it returns the first-occurrence argmin with trials = RT.
+
+    This scan accumulates drops in sampling positions and applies exactly
+    those rules.  Early exit: once some evaluated index i* has
+    drop < adt AND all sampling positions before i* are evaluated, no
+    unevaluated candidate can change the outcome — stop (at most the
+    staged-ahead chunks are wasted, same bound as the prefetch loop).
+
+    Returns (best_idx, best_drop, trials, found).
+    """
+    from . import engine
+
+    rt = indices.shape[0]
+    evaluator.begin_step(masks)
+    order, chunks = engine.plan_sited_chunks(evaluator, indices, layout,
+                                             chunk_size)
+    drops = np.full(rt, np.inf)
+    evaluated = np.zeros(rt, dtype=bool)
+    hit = rt                       # min sampling index with drop < adt
+    results = engine.evaluate_prefetched(
+        evaluator,
+        engine.materialize_sited(flat, layout, indices, order, chunks))
+    try:
+        for (_, s, e), accs in zip(chunks, results):
+            pos = order[s:e]
+            d = acc_base - np.asarray(accs, dtype=np.float64)
+            drops[pos] = d
+            evaluated[pos] = True
+            below = pos[d < cfg.adt]
+            if below.size:
+                hit = min(hit, int(below.min()))
+            if hit < rt and evaluated[:hit].all():
+                break
+    finally:
+        results.close()          # drop any staged-but-unread chunks
+    if hit < rt and evaluated[:hit].all():
+        return hit, float(drops[hit]), hit + 1, True
+    return int(np.argmin(drops)), float(drops.min()), rt, False
 
 
 def total_steps(b_ref: int, cfg: BCDConfig) -> int:

@@ -33,10 +33,24 @@ One BCD outer step evaluates up to RT candidate mask trees; the engine decides
     so the trial loop (:func:`evaluate_prefetched`) materializes and stages
     chunk k+1 while the device still computes chunk k.
 
+``SuffixEvaluator``
+    Prefix-reuse (split-forward) evaluation: candidates are local mask
+    edits, so for a chunk whose candidates all first differ from the base
+    masks at/after one site, everything *before* that site is recomputed
+    identically per candidate by the backends above.  This backend computes
+    that shared prefix ONCE per (site, step) via the model's
+    ``forward_prefix`` (kept device-resident, batch-sharded on a 2-D mesh so
+    it never gathers) and vmaps only ``forward_suffix`` over the candidate
+    axis.  Site-aware: ``core.bcd._select_block`` feeds it site-grouped
+    chunks (:class:`SitedChunk`) in site-major order, and a cost model
+    (``analysis.roofline.SuffixCostModel``) falls shallow-cut chunks back to
+    the inner full-forward backend.
+
 Backends must rank candidates identically: ``run_bcd`` breaks ties by first
 occurrence, and all backends evaluate candidates in sampling order, so for a
 given seed/config every backend selects the same block (tested in
-``tests/test_bcd_parallel.py``).
+``tests/test_bcd_parallel.py``; the site-aware path reorders *evaluation*
+but replays selection in sampling order — ``tests/test_split_forward.py``).
 """
 from __future__ import annotations
 
@@ -44,14 +58,23 @@ import collections
 import functools
 import statistics
 import time
-from typing import (Callable, Iterable, Iterator, NamedTuple, Optional,
-                    Protocol, Union, runtime_checkable)
+from typing import (Any, Callable, Dict, Iterable, Iterator, NamedTuple,
+                    Optional, Protocol, Tuple, Union, runtime_checkable)
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from . import masks as M
+
+
+def _donate_mask_arg():
+    """``donate_argnums`` for the per-chunk mask stack (argument 0 of the
+    vmapped eval): donating lets XLA reuse the stack's buffers, so a staged
+    pipeline stops holding two live copies of every padded chunk.  CPU
+    backends don't implement donation and would warn per dispatch, so the
+    hint is only emitted where it can be honored."""
+    return () if jax.default_backend() == "cpu" else (0,)
 
 # eval_fn: traceable (device mask tree) -> scalar accuracy in percent.
 EvalFn = Callable[[dict], jnp.ndarray]
@@ -250,10 +273,15 @@ class BatchedEvaluator:
         self._has_ctx = context is not None
         self.context = context
         routed = _with_stacked_route(eval_fn)
+        # the mask stack (arg 0) is donated: each staged chunk's stack is a
+        # fresh buffer (_device_batch copies) read by exactly one dispatch,
+        # so XLA may reuse it in place of a second live copy
         if self._has_ctx:
-            self._vmapped = jax.jit(jax.vmap(routed, in_axes=(0, None)))
+            self._vmapped = jax.jit(jax.vmap(routed, in_axes=(0, None)),
+                                    donate_argnums=_donate_mask_arg())
         else:
-            self._vmapped = jax.jit(jax.vmap(routed))
+            self._vmapped = jax.jit(jax.vmap(routed),
+                                    donate_argnums=_donate_mask_arg())
         self._pad_to = pad_to
 
     def set_context(self, context) -> None:
@@ -263,7 +291,11 @@ class BatchedEvaluator:
         self.context = context
 
     def _device_batch(self, stacked: M.MaskTree):
-        return {k: jnp.asarray(v, dtype=jnp.float32)
+        # copy=True: the stack is donated into the vmapped eval, so leaves
+        # must be buffers this evaluator owns — jnp.asarray would alias a
+        # caller's already-on-device float32 array and donation would
+        # delete it out from under them
+        return {k: jnp.array(v, dtype=jnp.float32, copy=True)
                 for k, v in stacked.items()}
 
     # -------------------------------------------------------------- staging
@@ -433,6 +465,244 @@ class PipelinedEvaluator(ShardedEvaluator):
         return ShardedEvaluator._device_batch(self, stacked)
 
 
+# ----------------------------------------------------- prefix-reuse backend
+
+
+class SplitEval(NamedTuple):
+    """A model's split-forward closure bundle (``make_suffix_eval_fns``).
+
+    ``prefix(site, masks, ctx) -> cached`` and
+    ``suffix(site, masks, cached, ctx) -> acc[%]`` satisfy the trace-time
+    contract ``suffix(site, m, prefix(site, m, x)) == full(m)`` bitwise for
+    every site; ``site`` is Python-level (static) — the evaluator compiles
+    one prefix/suffix pair per cut segment.
+    """
+    prefix: Callable[..., Any]
+    suffix: Callable[..., Any]
+    full: EvalFn                       # (masks, ctx) -> acc: fallback path
+    site_order: Tuple[str, ...]        # topological site order
+    site_segment: Dict[str, int]       # site -> cut segment (prefix key)
+    suffix_sites: Callable[[str], Tuple[str, ...]]
+    prefix_fraction: Dict[str, float]  # site -> fwd-FLOP fraction above it
+
+
+class SitedChunk(NamedTuple):
+    """A candidate chunk annotated with its shared cut site.
+
+    ``site is None`` routes the chunk down the full-forward fallback (the
+    cost model declined suffix mode, or the caller had no site info)."""
+    site: Optional[str]
+    stacked: M.MaskTree
+
+
+class SuffixEvaluator:
+    """Prefix-reuse backend: one shared prefix per (site, step), vmapped
+    suffix per candidate.
+
+    The trial loop (``core.bcd._select_block``) calls :meth:`begin_step`
+    with the step's base masks, then feeds :class:`SitedChunk`\\ s grouped
+    site-major (``plan_sited_chunks``).  For each chunk the cut segment's
+    prefix is computed once from the base masks — candidates never mutate
+    sites above their cut — kept device-resident (batch-sharded on a 2-D
+    ``("cand", "batch")`` mesh, so it is never gathered), and reused by
+    every suffix dispatch of that segment.  Suffix dispatches ship only the
+    *suffix-site* mask slices (sharded over ``"cand"``), so deep-site chunks
+    also transfer a fraction of the mask bytes.
+
+    Plain (un-sited) chunks and cost-model fallbacks delegate to an inner
+    :class:`PipelinedEvaluator` sharing the same context/placement, so this
+    backend composes batched / sharded / pipelined behavior: ``prefetch``
+    staging works identically for sited chunks (stage = slice + pad +
+    transfer + dispatch suffix).
+    """
+
+    name = "suffix"
+    site_aware = True
+    preferred_chunk = None
+
+    def __init__(self, split: SplitEval, *, pad_to: Optional[int] = None,
+                 context=None, mesh=None, context_specs=None,
+                 prefetch: int = 0, cost_model=None):
+        if not isinstance(context, dict) or "params" not in context \
+                or "batch" not in context:
+            raise ValueError(
+                "SuffixEvaluator needs context={'params': …, 'batch': …} — "
+                "prefix and suffix consume the eval batch and params as jit "
+                "inputs (models' make_suffix_eval_fns contract)")
+        if isinstance(prefetch, str):
+            raise ValueError(
+                "prefetch='auto' tuning belongs to the pipelined backend; "
+                "the suffix backend takes an integer staging depth")
+        if cost_model is None:
+            from repro.analysis.roofline import SuffixCostModel
+            cost_model = SuffixCostModel()
+        self._split = split
+        self.cost_model = cost_model
+        self._inner = PipelinedEvaluator(
+            split.full, pad_to=pad_to, context=context,
+            prefetch=int(prefetch), mesh=mesh, context_specs=context_specs)
+        self.prefetch_depth = int(prefetch)
+        self._pad_to = pad_to
+        self._mesh = mesh
+        # one representative site per segment: sites cutting at the same
+        # segment share the prefix cache entry and the prefix/suffix jits
+        self._segment_site: Dict[int, str] = {}
+        for s in split.site_order:
+            self._segment_site.setdefault(split.site_segment[s], s)
+        self._prefix_jits: Dict[int, Callable] = {}
+        self._suffix_jits: Dict[int, Callable] = {}
+        self._prefix_cache: Dict[int, Any] = {}
+        self._base_masks: Optional[M.MaskTree] = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            axes = tuple(mesh.axis_names)
+            cand_axes = tuple(a for a in axes if a != "batch") or axes
+            self._cand = int(np.prod([mesh.shape[a] for a in cand_axes]))
+            self._cand_sharding = NamedSharding(mesh, P(cand_axes))
+            self._cache_sharding = NamedSharding(
+                mesh, P("batch") if "batch" in axes else P())
+
+    # context lives on the inner evaluator (single source of truth; it owns
+    # the device placement / context_specs resharding)
+    @property
+    def context(self):
+        return self._inner.context
+
+    def set_context(self, context) -> None:
+        """Swap params/batch context; cached prefixes are invalidated."""
+        self._inner.set_context(context)
+        self._prefix_cache.clear()
+
+    def begin_step(self, base_masks: M.MaskTree) -> None:
+        """Fix the outer step's base mask tree (what prefixes are computed
+        from) and drop cached prefixes.  The trial loop calls this once per
+        step, before any sited chunk is staged."""
+        self._base_masks = {k: np.asarray(v, dtype=np.float32)
+                            for k, v in base_masks.items()}
+        self._prefix_cache.clear()
+
+    def prefix_fraction(self, site: str) -> float:
+        return self._split.prefix_fraction[site]
+
+    # ----------------------------------------------------------- internals
+
+    def _prefix_for(self, site: str):
+        seg = self._split.site_segment[site]
+        cached = self._prefix_cache.get(seg)
+        if cached is not None:
+            return cached
+        if self._base_masks is None:
+            raise RuntimeError(
+                "SuffixEvaluator.begin_step(base_masks) must be called "
+                "before sited evaluation (the prefix needs the step's base "
+                "mask tree)")
+        jit_fn = self._prefix_jits.get(seg)
+        if jit_fn is None:
+            jit_fn = jax.jit(
+                functools.partial(self._split.prefix, self._segment_site[seg]))
+            self._prefix_jits[seg] = jit_fn
+        base = {k: jnp.asarray(v) for k, v in self._base_masks.items()}
+        cached = jit_fn(base, self.context)
+        if self._mesh is not None:
+            # pin the cache batch-sharded: suffix dispatches read it in
+            # place (in_axes=None) — it is never gathered across "batch"
+            cached = jax.device_put(cached, self._cache_sharding)
+        # site-major consumption: chunks of earlier segments are already
+        # staged, and their in-flight dispatches keep their own references —
+        # dropping ours lets the device free each prefix as soon as its
+        # group drains
+        for old in [k for k in self._prefix_cache if k < seg]:
+            del self._prefix_cache[old]
+        self._prefix_cache[seg] = cached
+        return cached
+
+    def _suffix_for(self, site: str):
+        seg = self._split.site_segment[site]
+        jit_fn = self._suffix_jits.get(seg)
+        if jit_fn is None:
+            routed = _with_stacked_route(
+                functools.partial(self._split.suffix,
+                                  self._segment_site[seg]))
+            # masks stack donated, prefix cache and context read-only
+            jit_fn = jax.jit(jax.vmap(routed, in_axes=(0, None, None)),
+                             donate_argnums=_donate_mask_arg())
+            self._suffix_jits[seg] = jit_fn
+        return jit_fn
+
+    def _stage_sited(self, site: str, stacked: M.MaskTree) -> StagedChunk:
+        n = M.stacked_len(stacked)
+        # ship only the masks the suffix consumes (sites at/after the cut)
+        sub = {k: stacked[k] for k in self._split.suffix_sites(site)}
+        n_pad = max(n, self._pad_to or 0)
+        if self._mesh is not None:
+            n_pad += -n_pad % self._cand
+        if n_pad > n:
+            sub = M.pad_stacked(sub, n_pad)
+        put = (jax.device_put if self._mesh is None else
+               functools.partial(jax.device_put,
+                                 device=self._cand_sharding))
+        batch = {k: put(np.asarray(v, dtype=np.float32))
+                 for k, v in sub.items()}
+        cached = self._prefix_for(site)
+        accs = self._suffix_for(site)(batch, cached, self.context)
+        return StagedChunk(n, accs)
+
+    # ------------------------------------------------------------- protocol
+
+    def stage(self, item) -> StagedChunk:
+        """Stage a chunk: ``SitedChunk`` with a site takes the suffix path;
+        everything else (plain stacked trees, cost-model fallbacks) stages
+        on the inner full-forward pipeline."""
+        if isinstance(item, SitedChunk):
+            if item.site is None:
+                return self._inner.stage(item.stacked)
+            return self._stage_sited(item.site, item.stacked)
+        return self._inner.stage(item)
+
+    def evaluate_staged(self, staged: StagedChunk) -> np.ndarray:
+        return self._inner.evaluate_staged(staged)
+
+    def evaluate(self, item) -> np.ndarray:
+        return self.evaluate_staged(self.stage(item))
+
+
+def plan_sited_chunks(evaluator: SuffixEvaluator, indices: np.ndarray,
+                      layout: list, chunk_size: int):
+    """Site-major evaluation plan for the suffix backend.
+
+    Returns ``(order, chunks)``: ``order`` is a permutation of candidate
+    positions — grouped by the *cut segment* of each candidate's earliest
+    touched site, sampling order preserved within a group — and ``chunks``
+    is ``[(site | None, start, stop)]`` bounds into ``order`` that never
+    straddle a group, so every chunk shares one prefix.  ``site is None``
+    marks chunks the cost model sent down the full-forward fallback
+    (shallow cut or undersized chunk)."""
+    split = evaluator._split
+    order, groups = M.group_blocks_by_site(indices, layout,
+                                           split.site_segment)
+    chunks = []
+    for seg, g0, g1 in groups:
+        site = evaluator._segment_site.get(seg)
+        frac = split.prefix_fraction[site] if site is not None else 0.0
+        for s, e in M.chunk_bounds(g1 - g0, chunk_size):
+            n = e - s
+            use = site is not None and \
+                evaluator.cost_model.use_suffix(frac, n)
+            chunks.append((site if use else None, g0 + s, g0 + e))
+    return order, chunks
+
+
+def materialize_sited(flat: np.ndarray, layout: list, indices: np.ndarray,
+                      order: np.ndarray, chunks) -> Iterator[SitedChunk]:
+    """Lazy :class:`SitedChunk` producer over a ``plan_sited_chunks`` plan
+    (the site-aware counterpart of ``masks.materialize_chunks`` — same
+    laziness contract: the prefetch pipeline pulls it, early exit closes
+    it)."""
+    for site, s, e in chunks:
+        yield SitedChunk(site, M.materialize_from_flat(
+            flat, layout, indices[order[s:e]]))
+
+
 def make_evaluator(
     backend: str,
     *,
@@ -443,16 +713,22 @@ def make_evaluator(
     context=None,
     context_specs=None,
     prefetch: Union[int, str] = 1,
+    split: Optional[SplitEval] = None,
+    cost_model=None,
 ) -> CandidateEvaluator:
-    """Factory: ``backend`` in {'sequential','batched','sharded','pipelined'}.
+    """Factory: ``backend`` in {'sequential','batched','sharded',
+    'pipelined','suffix'}.
 
-    sequential needs ``eval_acc`` (host callable); the rest need ``eval_fn``
-    (traceable).  sharded defaults to a mesh over all local devices when
-    ``mesh`` is None; pipelined keeps single-device placement unless a mesh
-    is passed.  ``context_specs`` (see :func:`context_batch_specs`) shards
-    the context over the mesh — the joint candidate×batch layout.
-    ``prefetch`` is a depth or ``"auto"`` (measured-rate tuning, pipelined
-    only).
+    sequential needs ``eval_acc`` (host callable); batched/sharded/pipelined
+    need ``eval_fn`` (traceable); suffix needs ``split`` (the model's
+    ``make_suffix_eval_fns()`` bundle) plus a ``context`` carrying params
+    AND the eval batch.  sharded defaults to a mesh over all local devices
+    when ``mesh`` is None; pipelined/suffix keep single-device placement
+    unless a mesh is passed.  ``context_specs`` (see
+    :func:`context_batch_specs`) shards the context over the mesh — the
+    joint candidate×batch layout.  ``prefetch`` is a depth or ``"auto"``
+    (measured-rate tuning, pipelined only).  ``cost_model`` overrides the
+    suffix backend's per-site fallback policy.
     """
     if backend != "pipelined" and prefetch == "auto":
         raise ValueError(
@@ -463,6 +739,13 @@ def make_evaluator(
         if eval_acc is None:
             raise ValueError("sequential backend needs eval_acc")
         return SequentialEvaluator(eval_acc)
+    if backend == "suffix":
+        if split is None:
+            raise ValueError("suffix backend needs split= — the model's "
+                             "make_suffix_eval_fns() bundle")
+        return SuffixEvaluator(split, pad_to=pad_to, context=context,
+                               mesh=mesh, context_specs=context_specs,
+                               prefetch=prefetch, cost_model=cost_model)
     if backend in ("batched", "sharded", "pipelined"):
         if eval_fn is None:
             raise ValueError(f"{backend} backend needs a traceable eval_fn")
@@ -479,4 +762,5 @@ def make_evaluator(
                                   prefetch=prefetch, mesh=mesh,
                                   context_specs=context_specs)
     raise ValueError(f"unknown evaluator backend {backend!r}; expected "
-                     "'sequential' | 'batched' | 'sharded' | 'pipelined'")
+                     "'sequential' | 'batched' | 'sharded' | 'pipelined' | "
+                     "'suffix'")

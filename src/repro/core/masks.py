@@ -148,6 +148,63 @@ def materialize_chunks(flat: np.ndarray, layout: list, indices: np.ndarray,
         yield materialize_from_flat(flat, layout, indices[start:stop])
 
 
+def group_blocks_by_site(indices: np.ndarray, layout: list,
+                         rank_of_site: Dict[str, int]):
+    """Group candidate removal blocks by their *earliest* touched site rank.
+
+    ``indices``: (n, k) flat removal coordinates (``sample_removal_indices``
+    output); ``layout``: the matching ``_flatten`` layout; ``rank_of_site``:
+    site name -> group rank — pass the model's segment indices so candidates
+    that share a forward prefix land in the same group (the prefix-reuse
+    engine's chunking contract: chunks never straddle a group).
+
+    Returns ``(order, groups)``: ``order`` is an (n,) permutation of
+    candidate positions sorted by group rank (stable, so sampling order
+    survives within a group), and ``groups`` is ``[(rank, start, stop)]``
+    bounds into ``order``.
+    """
+    n = indices.shape[0]
+    if n == 0 or indices.size == 0:
+        return np.arange(n, dtype=np.int64), \
+            ([] if n == 0 else [(0, 0, n)])
+    offs = np.array([off for _, off, _, _ in layout], dtype=np.int64)
+    ranks = np.array([rank_of_site[k] for k, _, _, _ in layout],
+                     dtype=np.int64)
+    site_of = np.searchsorted(offs, indices.reshape(-1), side="right") - 1
+    cand_rank = ranks[site_of].reshape(indices.shape).min(axis=1)
+    order = np.argsort(cand_rank, kind="stable").astype(np.int64)
+    sorted_ranks = cand_rank[order]
+    cuts = np.flatnonzero(np.diff(sorted_ranks)) + 1
+    bounds = [0, *cuts.tolist(), n]
+    groups = [(int(sorted_ranks[s]), s, e)
+              for s, e in zip(bounds[:-1], bounds[1:])]
+    return order, groups
+
+
+def sample_removal_indices_within(
+    rng: np.random.Generator, masks: MaskTree, drc: int, n: int,
+    sites: Iterable[str]
+) -> np.ndarray:
+    """:func:`sample_removal_indices` restricted to the given sites'
+    coordinates — site-local candidate blocks for the per-site-depth
+    benchmark.  NOT part of Alg. 2's rng discipline (the real sampler draws
+    from the global active set); returns (n, min(drc, #active-in-sites)).
+    """
+    sites = set(sites)
+    flat, layout = _flatten(masks)
+    sel = np.zeros(flat.size, dtype=bool)
+    for k, off, sz, _ in layout:
+        if k in sites:
+            sel[off:off + sz] = True
+    if not sel.any():
+        raise ValueError(f"no mask coordinates in sites {sorted(sites)}")
+    active = np.nonzero((flat > 0.5) & sel)[0]
+    k = min(drc, active.size)
+    return np.stack([rng.choice(active, size=k, replace=False)
+                     for _ in range(n)]) if n else \
+        np.zeros((0, k), dtype=np.int64)
+
+
 def sample_removal_blocks(
     rng: np.random.Generator, masks: MaskTree, drc: int, n: int
 ) -> MaskTree:

@@ -97,6 +97,13 @@ def masked_act_sited_batched(x, masks, *, kind: str = "relu", poly=None,
 # inside VMEM.  custom_vmap does not support differentiation, so this entry
 # is opt-in (core.linearize.stacked_kernel_route): training forwards keep the
 # plain kernel.
+#
+# Suffix entry (the prefix-reuse engine, core.engine.SuffixEvaluator): the
+# vmapped *suffix* forward receives the cached prefix activation with
+# in_axes=None, so at the cut segment's first mask site the rule sees a
+# batched mask over an UNBATCHED x.  _to_batched broadcasts x across the
+# candidate axis before handing the site to the stacked kernel — the one
+# extra layout the split forward needs (tests/test_kernels.py pins it).
 
 
 @functools.lru_cache(maxsize=None)

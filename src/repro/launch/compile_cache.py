@@ -1,0 +1,102 @@
+"""Opt-in JAX persistent compilation cache for sweep/bench restarts.
+
+A resumed sweep (or a repeated benchmark run) re-traces the exact same
+jitted evaluators and pays full XLA re-compilation for every one of them —
+on the CPU containers this repo's smoke sweeps run in, recompiles dominate
+restart latency.  :func:`enable` points jax's persistent compilation cache
+at a directory (with the entry-size / compile-time thresholds dropped to
+zero so the small smoke-scale executables qualify), and :func:`hit_counter`
+subscribes to jax's cache telemetry so runners can log how much a restart
+actually reused.
+
+Wired behind ``--compile-cache DIR`` in ``examples/resnet18_bcd_pipeline.py``
+and ``benchmarks/bench_bcd_eval.py``.  Cache keys include jax/XLA versions
+and compile options, so a stale directory is never incorrect — just cold.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional
+
+_HIT_EVENT = "/jax/compilation_cache/cache_hits"
+_MISS_EVENT = "/jax/compilation_cache/cache_misses"
+
+
+def enable(cache_dir: str) -> None:
+    """Turn on jax's persistent compilation cache rooted at ``cache_dir``.
+
+    Safe to call before or after the first jit; creates the directory.
+    Thresholds are zeroed so every executable is cached — the sweeps this
+    serves re-jit many small programs, exactly the population the default
+    "only big/slow compiles" policy would skip.
+    """
+    import jax
+
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    try:
+        # jax latches "is the cache used?" on the first compile of the
+        # process; if any jit ran before enable(), unlatch it so the new
+        # directory takes effect (no-op on a fresh process)
+        from jax._src import compilation_cache
+        compilation_cache.reset_cache()
+    except Exception:
+        pass
+
+
+class HitCounter:
+    """Counts persistent-cache hits/misses via jax's monitoring events.
+
+    jax only exposes the persistent compilation cache's effectiveness as
+    telemetry events; this adapter turns them into a queryable counter so
+    runners can print "N of M compiles served from cache" at exit.
+    """
+
+    def __init__(self) -> None:
+        """Subscribe to the cache-hit/miss monitoring events."""
+        self.hits = 0
+        self.misses = 0
+        self._ok = False
+        try:
+            from jax._src import monitoring
+
+            def _on_event(event: str, **kw) -> None:
+                if event == _HIT_EVENT:
+                    self.hits += 1
+                elif event == _MISS_EVENT:
+                    self.misses += 1
+
+            monitoring.register_event_listener(_on_event)
+            self._ok = True
+        except Exception:           # jax internals moved: count nothing,
+            pass                    # never break the run for telemetry
+
+    def summary(self) -> Dict[str, int]:
+        """``{"hits": N, "misses": M}`` observed since construction."""
+        return {"hits": self.hits, "misses": self.misses}
+
+    def log_line(self) -> str:
+        """One human-readable line for the runner's exit log."""
+        if not self._ok:
+            return "[compile-cache] hit telemetry unavailable in this jax"
+        total = self.hits + self.misses
+        return (f"[compile-cache] {self.hits}/{total} compile requests "
+                f"served from the persistent cache")
+
+
+def hit_counter() -> HitCounter:
+    """Construct a :class:`HitCounter` (call before the jits you care
+    about; events fired earlier are not replayed)."""
+    return HitCounter()
+
+
+def entry_count(cache_dir: Optional[str]) -> int:
+    """Number of cached executables under ``cache_dir`` (0 if unset or
+    missing) — a coarse cross-process complement to :class:`HitCounter`.
+    """
+    if not cache_dir or not os.path.isdir(cache_dir):
+        return 0
+    return sum(1 for name in os.listdir(cache_dir)
+               if not name.startswith("."))

@@ -54,6 +54,12 @@ def _rwkv_cfg(cfg: ArchConfig) -> ssm.RWKVCfg:
                        head_dim=cfg.rwkv_head_dim)
 
 
+def _sub(tree: Dict, prefix: str) -> Dict:
+    """Sub-tree of a ``"<prefix>.<suffix>"``-keyed dict, keys stripped."""
+    return {k.split(".", 1)[1]: v for k, v in tree.items()
+            if k.startswith(prefix + ".")}
+
+
 def _sites_for(cfg: ArchConfig, blk: Block) -> Dict[str, linearize.MaskSite]:
     rep = cfg.act_when_masked
     if blk.kind == "dense":
@@ -222,42 +228,15 @@ class LM:
 
     # ------------------------------------------------------------ forward
 
-    def forward(self, params, masks, tokens, *, prefix_embeds=None,
-                poly=None, soft=False, cache=None, cache_len=0, remat=False,
-                return_hidden=False):
-        """Returns (logits (B,S,V), new_cache); with return_hidden=True the
-        first element is the final-norm hidden state (B,S,D) instead (the
-        caller owns the head matmul — e.g. chunked CE, §Perf)."""
+    def _run_stack(self, params, masks, x, positions, *, poly, soft,
+                   cache=None, cache_len=0, remat=False):
+        """The scanned repeat stack: returns (x, scanned_cache).
+
+        Shared verbatim by :meth:`forward` and the split forwards
+        (:meth:`forward_prefix` / :meth:`forward_suffix`), so both trace
+        the identical scan — the bitwise split-forward contract depends on
+        it."""
         cfg = self.cfg
-        poly = poly or {}
-        x = jnp.take(params["embed"], tokens, axis=0)
-        if prefix_embeds is not None:
-            x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
-        x = self._constrain(x)
-        B, S, _ = x.shape
-        positions = jnp.broadcast_to(
-            (jnp.arange(S) + cache_len)[None, :], (B, S))
-
-        def msk_of(prefix):
-            return {k.split(".", 1)[1]: v for k, v in masks.items()
-                    if k.startswith(prefix + ".")}
-
-        def ply_of(prefix):
-            return {k.split(".", 1)[1]: v for k, v in poly.items()
-                    if k.startswith(prefix + ".")}
-
-        new_cache = {"head": [], "stack": {}, "tail": []} \
-            if cache is not None else None
-
-        for i, blk in enumerate(cfg.head_blocks):
-            c = None if cache is None else cache["head"][i]
-            x, nc = self._layer_apply(blk, params["head"][i], x,
-                                      msk_of(f"h{i}"), ply_of(f"h{i}"), soft,
-                                      positions, c, cache_len)
-            if cache is not None:
-                new_cache["head"].append(nc)
-
-        # ---- scanned stack
         pattern = cfg.pattern
         R = cfg.n_repeats
         xs = {"params": {str(p): params["stack"][str(p)]
@@ -278,10 +257,8 @@ class LM:
             for p, blk in enumerate(pattern):
                 lp = (params["stack"][str(p)] if blk.shared
                       else sl["params"][str(p)])
-                msk = {k.split(".", 1)[1]: v for k, v in sl["masks"].items()
-                       if k.startswith(f"s{p}.")}
-                pl = {k.split(".", 1)[1]: v for k, v in sl["poly"].items()
-                      if k.startswith(f"s{p}.")}
+                msk = _sub(sl["masks"], f"s{p}")
+                pl = _sub(sl["poly"], f"s{p}")
                 c = sl["cache"][str(p)] if cache is not None else None
                 x, nc = self._layer_apply(blk, lp, x, msk, pl, soft,
                                           positions, c, cache_len)
@@ -303,18 +280,49 @@ class LM:
                     x, _ = inner(x, jax.tree.map(lambda a: a[g], slG))
                 return x, None
 
-            x, scanned_cache = jax.lax.scan(jax.checkpoint(group_body), x,
-                                            xsG)
-        else:
-            body_fn = jax.checkpoint(body) if remat else body
-            x, scanned_cache = jax.lax.scan(body_fn, x, xs)
+            return jax.lax.scan(jax.checkpoint(group_body), x, xsG)
+        body_fn = jax.checkpoint(body) if remat else body
+        return jax.lax.scan(body_fn, x, xs)
+
+    def forward(self, params, masks, tokens, *, prefix_embeds=None,
+                poly=None, soft=False, cache=None, cache_len=0, remat=False,
+                return_hidden=False):
+        """Returns (logits (B,S,V), new_cache); with return_hidden=True the
+        first element is the final-norm hidden state (B,S,D) instead (the
+        caller owns the head matmul — e.g. chunked CE, §Perf)."""
+        cfg = self.cfg
+        poly = poly or {}
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        x = self._constrain(x)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(
+            (jnp.arange(S) + cache_len)[None, :], (B, S))
+
+        new_cache = {"head": [], "stack": {}, "tail": []} \
+            if cache is not None else None
+
+        for i, blk in enumerate(cfg.head_blocks):
+            c = None if cache is None else cache["head"][i]
+            x, nc = self._layer_apply(blk, params["head"][i], x,
+                                      _sub(masks, f"h{i}"),
+                                      _sub(poly, f"h{i}"), soft,
+                                      positions, c, cache_len)
+            if cache is not None:
+                new_cache["head"].append(nc)
+
+        x, scanned_cache = self._run_stack(
+            params, masks, x, positions, poly=poly, soft=soft, cache=cache,
+            cache_len=cache_len, remat=remat)
         if cache is not None:
             new_cache["stack"] = scanned_cache
 
         for i, blk in enumerate(cfg.tail):
             c = None if cache is None else cache["tail"][i]
             x, nc = self._layer_apply(blk, params["tail"][i], x,
-                                      msk_of(f"t{i}"), ply_of(f"t{i}"), soft,
+                                      _sub(masks, f"t{i}"),
+                                      _sub(poly, f"t{i}"), soft,
                                       positions, c, cache_len)
             if cache is not None:
                 new_cache["tail"].append(nc)
@@ -324,6 +332,158 @@ class LM:
             return x, new_cache
         logits = x @ params["embed"].T.astype(x.dtype)
         return logits, new_cache
+
+    # ------------------------------------------------------- split forward
+    #
+    # Segment boundaries for prefix-reuse candidate evaluation
+    # (core.engine.SuffixEvaluator): embed | head block i … | scanned stack
+    # | tail block i … | final norm + logits.  Every site inside the scanned
+    # stack maps to the *stack* segment (the scan is one compiled unit — a
+    # candidate mutating repeat r still re-runs the whole scan, but reuses
+    # embed + head), head/tail sites cut at their own block.  The split
+    # forwards reuse _layer_apply and _run_stack verbatim, so
+    # suffix(prefix(x)) traces the same primitives as forward(x) (eval
+    # path: no cache / remat / prefix_embeds).
+
+    def _segment_of_site(self) -> Dict[str, int]:
+        cfg = self.cfg
+        H = len(cfg.head_blocks)
+        out = {}
+        for i, blk in enumerate(cfg.head_blocks):
+            for suf in _sites_for(cfg, blk):
+                out[f"h{i}.{suf}"] = 1 + i
+        for pos, blk in enumerate(cfg.pattern):
+            for suf in _sites_for(cfg, blk):
+                out[f"s{pos}.{suf}"] = 1 + H
+        for i, blk in enumerate(cfg.tail):
+            for suf in _sites_for(cfg, blk):
+                out[f"t{i}.{suf}"] = 2 + H + i
+        return out
+
+    def site_order(self) -> Tuple[str, ...]:
+        """All mask sites in forward (topological) order."""
+        seg = self._segment_of_site()
+        return tuple(sorted(seg, key=lambda s: (seg[s], s)))
+
+    def site_segments(self) -> Dict[str, int]:
+        """site -> segment index (sites sharing a segment share a prefix)."""
+        return self._segment_of_site()
+
+    def suffix_sites(self, site: str) -> Tuple[str, ...]:
+        """Sites consumed by :meth:`forward_suffix` for this cut."""
+        seg = self._segment_of_site()
+        cut = seg[site]
+        return tuple(s for s in self.site_order() if seg[s] >= cut)
+
+    def forward_prefix(self, params, masks, tokens, site, *, poly=None,
+                       soft=False):
+        """Forward up to (excluding) the segment applying ``site``; returns
+        the cached (B, S, D) boundary hidden state."""
+        cfg = self.cfg
+        poly = poly or {}
+        cut = self._segment_of_site()[site]
+        H = len(cfg.head_blocks)
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = self._constrain(x)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        for i, blk in enumerate(cfg.head_blocks):
+            if 1 + i >= cut:
+                break
+            x, _ = self._layer_apply(blk, params["head"][i], x,
+                                     _sub(masks, f"h{i}"),
+                                     _sub(poly, f"h{i}"), soft,
+                                     positions, None, 0)
+        if 1 + H < cut:
+            x, _ = self._run_stack(params, masks, x, positions, poly=poly,
+                                   soft=soft)
+        for i, blk in enumerate(cfg.tail):
+            if 2 + H + i >= cut:
+                break
+            x, _ = self._layer_apply(blk, params["tail"][i], x,
+                                     _sub(masks, f"t{i}"),
+                                     _sub(poly, f"t{i}"), soft,
+                                     positions, None, 0)
+        return x
+
+    def forward_suffix(self, params, masks, cached, site, *, poly=None,
+                       soft=False):
+        """Finish forward from a :meth:`forward_prefix` cache -> logits."""
+        cfg = self.cfg
+        poly = poly or {}
+        cut = self._segment_of_site()[site]
+        H = len(cfg.head_blocks)
+        x = cached
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        for i, blk in enumerate(cfg.head_blocks):
+            if 1 + i < cut:
+                continue
+            x, _ = self._layer_apply(blk, params["head"][i], x,
+                                     _sub(masks, f"h{i}"),
+                                     _sub(poly, f"h{i}"), soft,
+                                     positions, None, 0)
+        if 1 + H >= cut:
+            x, _ = self._run_stack(params, masks, x, positions, poly=poly,
+                                   soft=soft)
+        for i, blk in enumerate(cfg.tail):
+            if 2 + H + i < cut:
+                continue
+            x, _ = self._layer_apply(blk, params["tail"][i], x,
+                                     _sub(masks, f"t{i}"),
+                                     _sub(poly, f"t{i}"), soft,
+                                     positions, None, 0)
+        x = layers.rmsnorm(params["final_norm"], x)
+        return x @ params["embed"].T.astype(x.dtype)
+
+    def site_prefix_fractions(self, *, seq_len: int = 64) -> Dict[str, float]:
+        """site -> fraction of forward FLOPs strictly before its segment.
+
+        Analytic (roofline.block_fwd_flops, prefill mode, per-sample); the
+        suffix cost model thresholds on it.  ``seq_len`` only matters
+        through the attention quadratic term."""
+        from repro.analysis import roofline
+        cfg = self.cfg
+        H = len(cfg.head_blocks)
+
+        def f(blk):
+            return roofline.block_fwd_flops(cfg, blk, seq_len, seq_len,
+                                            "prefill")[0]
+        # per-segment flops: embed(≈0) | head… | stack | tail… | logits
+        seg_flops = ([0.0] + [f(b) for b in cfg.head_blocks]
+                     + [sum(f(b) for b in cfg.pattern) * cfg.n_repeats]
+                     + [f(b) for b in cfg.tail]
+                     + [2.0 * seq_len * cfg.d_model * cfg.vocab])
+        total = max(sum(seg_flops), 1.0)
+        before, cum = [], 0.0
+        for v in seg_flops:
+            before.append(cum / total)
+            cum += v
+        return {s: before[i] for s, i in self._segment_of_site().items()}
+
+    def make_suffix_eval_fns(self):
+        """Split-forward closure bundle for ``engine.SuffixEvaluator`` —
+        same contract as ``CNN.make_suffix_eval_fns`` (ctx = {"params",
+        "batch"}; the metric is next-token accuracy [%])."""
+        from repro.core import engine
+
+        def prefix_fn(site, masks, ctx):
+            return self.forward_prefix(ctx["params"], masks,
+                                       ctx["batch"]["tokens"][:, :-1], site)
+
+        def suffix_fn(site, masks, cached, ctx):
+            logits = self.forward_suffix(ctx["params"], masks, cached, site)
+            pred = jnp.argmax(logits, -1)
+            return jnp.mean((pred == ctx["batch"]["tokens"][:, 1:])
+                            .astype(jnp.float32)) * 100.0
+
+        return engine.SplitEval(
+            prefix=prefix_fn, suffix=suffix_fn,
+            full=self.make_joint_eval_fn(),
+            site_order=self.site_order(),
+            site_segment=self.site_segments(),
+            suffix_sites=self.suffix_sites,
+            prefix_fraction=self.site_prefix_fractions())
 
     # ------------------------------------------------------- eval closures
     #

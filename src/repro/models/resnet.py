@@ -69,6 +69,9 @@ class CNN:
     def __init__(self, cfg: CNNConfig):
         self.cfg = cfg
         self._site_shapes = self._compute_site_shapes()
+        self._segs = self._build_segments()
+        self._seg_of_site = {s: i for i, (_, sites, _) in
+                             enumerate(self._segs) for s in sites}
 
     # ---------------------------------------------------------- structure
 
@@ -140,6 +143,15 @@ class CNN:
         return p
 
     # ---------------------------------------------------------- forward
+    #
+    # The forward is a fold over an ordered *segment* list.  Each segment is
+    # (name, sites_it_applies, fn(params, masks, x, poly, soft) -> x); the
+    # full forward, forward_prefix, and forward_suffix all fold the same
+    # list, so the split-forward contract
+    #     forward_suffix(p, m, forward_prefix(p, m, x, site), site)
+    #         == forward(p, m, x)
+    # holds bitwise *by construction* — prefix/suffix trace exactly the
+    # primitives forward traces (core.engine.SuffixEvaluator relies on it).
 
     def _relu(self, x, masks, name, poly, soft):
         site = linearize.MaskSite(self._site_shapes[name], "relu")
@@ -147,35 +159,129 @@ class CNN:
             x, masks[name], site,
             poly=None if poly is None else poly.get(name), soft=soft)
 
-    def forward(self, params, masks, images, *, poly=None, soft=False):
+    def _build_segments(self):
         cfg = self.cfg
-        x = images
+        segs = []
         if cfg.wide:
-            x = _conv(x, params["stem"]["conv"])
-            for si, bi, cin, cout, s, hw in self._block_plan():
-                blk = params[f"g{si}b{bi}"]
-                h = self._relu(_bn(blk["bn1"], x), masks,
-                               f"g{si}b{bi}.relu1", poly, soft)
-                y = _conv(h, blk["conv1"], s)
-                y = self._relu(_bn(blk["bn2"], y), masks,
-                               f"g{si}b{bi}.relu2", poly, soft)
-                y = _conv(y, blk["conv2"])
-                sc = _conv(h, blk["proj"], s) if "proj" in blk else x
-                x = y + sc
-            x = self._relu(_bn(params["final_bn"], x), masks, "final.relu",
-                           poly, soft)
+            segs.append(("stem", (),
+                         lambda p, m, x, ply, soft:
+                         _conv(x, p["stem"]["conv"])))
         else:
-            x = _bn(params["stem"]["bn"], _conv(x, params["stem"]["conv"]))
-            x = self._relu(x, masks, "stem.relu", poly, soft)
-            for si, bi, cin, cout, s, hw in self._block_plan():
-                blk = params[f"g{si}b{bi}"]
-                y = self._relu(_bn(blk["bn1"], _conv(x, blk["conv1"], s)),
-                               masks, f"g{si}b{bi}.relu1", poly, soft)
-                y = _bn(blk["bn2"], _conv(y, blk["conv2"]))
-                sc = _conv(x, blk["proj"], s) if "proj" in blk else x
-                x = self._relu(y + sc, masks, f"g{si}b{bi}.relu2", poly, soft)
-        x = jnp.mean(x, axis=(1, 2))
-        return x @ params["fc"]["w"] + params["fc"]["b"]
+            def stem_fn(p, m, x, ply, soft):
+                x = _bn(p["stem"]["bn"], _conv(x, p["stem"]["conv"]))
+                return self._relu(x, m, "stem.relu", ply, soft)
+            segs.append(("stem", ("stem.relu",), stem_fn))
+        for si, bi, cin, cout, s, hw in self._block_plan():
+            name = f"g{si}b{bi}"
+            if cfg.wide:
+                def blk_fn(p, m, x, ply, soft, name=name, s=s):
+                    blk = p[name]
+                    h = self._relu(_bn(blk["bn1"], x), m,
+                                   f"{name}.relu1", ply, soft)
+                    y = _conv(h, blk["conv1"], s)
+                    y = self._relu(_bn(blk["bn2"], y), m,
+                                   f"{name}.relu2", ply, soft)
+                    y = _conv(y, blk["conv2"])
+                    sc = _conv(h, blk["proj"], s) if "proj" in blk else x
+                    return y + sc
+            else:
+                def blk_fn(p, m, x, ply, soft, name=name, s=s):
+                    blk = p[name]
+                    y = self._relu(_bn(blk["bn1"], _conv(x, blk["conv1"], s)),
+                                   m, f"{name}.relu1", ply, soft)
+                    y = _bn(blk["bn2"], _conv(y, blk["conv2"]))
+                    sc = _conv(x, blk["proj"], s) if "proj" in blk else x
+                    return self._relu(y + sc, m, f"{name}.relu2", ply, soft)
+            segs.append((name, (f"{name}.relu1", f"{name}.relu2"), blk_fn))
+
+        def head_fn(p, m, x, ply, soft):
+            if cfg.wide:
+                x = self._relu(_bn(p["final_bn"], x), m, "final.relu",
+                               ply, soft)
+            x = jnp.mean(x, axis=(1, 2))
+            return x @ p["fc"]["w"] + p["fc"]["b"]
+        segs.append(("head", ("final.relu",) if cfg.wide else (), head_fn))
+        return segs
+
+    def forward(self, params, masks, images, *, poly=None, soft=False):
+        x = images
+        for _, _, fn in self._segs:
+            x = fn(params, masks, x, poly, soft)
+        return x
+
+    # ------------------------------------------------------- split forward
+    #
+    # BCD candidates are local mask edits: a candidate whose earliest
+    # touched site sits in segment k shares everything before segment k with
+    # the base masks.  forward_prefix computes that shared part once;
+    # forward_suffix finishes the net from the cached activation.  ``site``
+    # is a Python-level (static) argument — the engine jits one suffix per
+    # cut segment.
+
+    def site_order(self) -> Tuple[str, ...]:
+        """All mask sites in forward (topological) order."""
+        return tuple(s for _, sites, _ in self._segs for s in sites)
+
+    def site_segments(self) -> Dict[str, int]:
+        """site name -> index of the segment that applies it.  Sites that
+        share a segment share a prefix (and a suffix jit cache entry)."""
+        return dict(self._seg_of_site)
+
+    def suffix_sites(self, site: str) -> Tuple[str, ...]:
+        """The sites forward_suffix(site) consumes: every site applied by
+        the cut segment or later (the candidate mask values the suffix
+        evaluator must ship per candidate)."""
+        cut = self._seg_of_site[site]
+        return tuple(s for _, sites, _ in self._segs[cut:] for s in sites)
+
+    def forward_prefix(self, params, masks, images, site, *, poly=None,
+                       soft=False):
+        """Run forward up to (excluding) the segment that applies ``site``;
+        returns the cached boundary activation (the suffix's input)."""
+        x = images
+        for _, _, fn in self._segs[:self._seg_of_site[site]]:
+            x = fn(params, masks, x, poly, soft)
+        return x
+
+    def forward_suffix(self, params, masks, cached, site, *, poly=None,
+                       soft=False):
+        """Finish forward from a :meth:`forward_prefix` cache: folds the
+        segment applying ``site`` and everything after it to logits."""
+        x = cached
+        for _, _, fn in self._segs[self._seg_of_site[site]:]:
+            x = fn(params, masks, x, poly, soft)
+        return x
+
+    def _segment_flops(self) -> List[float]:
+        """Per-sample forward FLOPs per segment (conv + fc terms only —
+        the >99% of the work; used by the suffix cost model)."""
+        cfg = self.cfg
+        flops = [0.0] * len(self._segs)
+        seg_idx = {name: i for i, (name, _, _) in enumerate(self._segs)}
+        flops[seg_idx["stem"]] = (
+            2.0 * 9 * 3 * cfg.stem_channels * cfg.image_size ** 2)
+        for si, bi, cin, cout, s, hw in self._block_plan():
+            f = 2.0 * 9 * cin * cout * hw ** 2          # conv1 (stride s)
+            f += 2.0 * 9 * cout * cout * hw ** 2        # conv2
+            if s != 1 or cin != cout:
+                f += 2.0 * cin * cout * hw ** 2         # 1x1 proj
+            flops[seg_idx[f"g{si}b{bi}"]] += f
+        flops[seg_idx["head"]] = 2.0 * cfg.stages[-1][0] * cfg.n_classes
+        return flops
+
+    def site_prefix_fractions(self) -> Dict[str, float]:
+        """site -> fraction of full-forward FLOPs strictly before its
+        segment.  0.0 for first-segment sites (suffix mode buys nothing),
+        approaching 1.0 for the deepest sites — the suffix cost model
+        (analysis.roofline.SuffixCostModel) thresholds on this."""
+        seg_flops = self._segment_flops()
+        total = max(sum(seg_flops), 1.0)
+        cum = 0.0
+        before = []
+        for f in seg_flops:
+            before.append(cum / total)
+            cum += f
+        return {s: before[i] for s, i in self._seg_of_site.items()}
 
     # ------------------------------------------------------- eval closures
     #
@@ -220,6 +326,36 @@ class CNN:
             return jnp.mean((jnp.argmax(logits, -1) == batch["labels"])
                             .astype(jnp.float32)) * 100.0
         return eval_fn
+
+    def make_suffix_eval_fns(self):
+        """Split-forward closure bundle for ``engine.SuffixEvaluator``.
+
+        ``prefix(site, masks, ctx) -> cached`` runs the shared part of the
+        net once per (site, step); ``suffix(site, masks, cached, ctx) ->
+        acc[%]`` is what the engine vmaps over the candidate axis —
+        per-candidate work shrinks to the layers at/after the mutated site.
+        ``ctx = {"params", "batch"}`` rides as evaluator context exactly
+        like :meth:`make_joint_eval_fn` (batch-shardable on a
+        ``("cand", "batch")`` mesh, so the cached prefix never gathers).
+        """
+        from repro.core import engine
+
+        def prefix_fn(site, masks, ctx):
+            return self.forward_prefix(ctx["params"], masks,
+                                       ctx["batch"]["images"], site)
+
+        def suffix_fn(site, masks, cached, ctx):
+            logits = self.forward_suffix(ctx["params"], masks, cached, site)
+            return jnp.mean((jnp.argmax(logits, -1) == ctx["batch"]["labels"])
+                            .astype(jnp.float32)) * 100.0
+
+        return engine.SplitEval(
+            prefix=prefix_fn, suffix=suffix_fn,
+            full=self.make_joint_eval_fn(),
+            site_order=self.site_order(),
+            site_segment=self.site_segments(),
+            suffix_sites=self.suffix_sites,
+            prefix_fraction=self.site_prefix_fractions())
 
     def make_eval_acc(self, params, batch):
         """Host callable ``mask_tree -> float`` (jitted single-candidate

@@ -112,3 +112,43 @@ def test_one_sided_backends_never_fail(tmp_path, capsys):
     fresh = _write(tmp_path, "fresh.json", _report({"seq": 95.0, "new": 9.0}))
     rc, out = _run([base, fresh], capsys)
     assert rc == 0 and "skipped" in out
+
+
+def _speedup_report(rates, **keys):
+    rep = _report(rates)
+    rep.update(keys)
+    return rep
+
+
+def test_gate_speedup_key_pass_and_regression(tmp_path, capsys):
+    """--gate-speedup compares a top-level within-report ratio (the
+    prefix-reuse headline): fine within tolerance, fails strictly beyond."""
+    base = _write(tmp_path, "base.json", _speedup_report(
+        {"seq": 100.0}, speedup_suffix_vs_batched=4.0))
+    ok = _write(tmp_path, "ok.json", _speedup_report(
+        {"seq": 100.0}, speedup_suffix_vs_batched=3.0))
+    rc, out = _run([base, ok, "--gate-speedup", "speedup_suffix_vs_batched"],
+                   capsys)
+    assert rc == 0, out
+    assert "speedup-key gate" in out
+
+    slow = _write(tmp_path, "slow.json", _speedup_report(
+        {"seq": 100.0}, speedup_suffix_vs_batched=2.0))
+    rc, out = _run([base, slow, "--gate-speedup",
+                    "speedup_suffix_vs_batched"], capsys)
+    assert rc == 1, out
+    assert "REGRESSION" in out and "speedup_suffix_vs_batched" in out
+
+
+def test_gate_speedup_missing_key_is_loud(tmp_path, capsys):
+    """A gated key that vanished from a report must fail the unusable-input
+    way (exit 2) — silently skipping it would un-gate the very number the
+    flag exists to protect."""
+    base = _write(tmp_path, "base.json", _speedup_report(
+        {"seq": 100.0}, speedup_suffix_vs_batched=4.0))
+    fresh = _write(tmp_path, "fresh.json", _speedup_report({"seq": 100.0}))
+    rc, out = _run([base, fresh, "--gate-speedup",
+                    "speedup_suffix_vs_batched"], capsys)
+    assert rc == 2, out
+    assert "missing" in out and "speedup_suffix_vs_batched" in out
+    assert "Traceback" not in out

@@ -173,6 +173,33 @@ def test_masked_act_sited_routed_vmaps_to_stacked_kernel():
                                rtol=1e-6, atol=1e-6)
 
 
+def test_suffix_route_unbatched_cache_batched_masks():
+    """The prefix-reuse engine's layout: a vmapped suffix forward maps
+    masks over the candidate axis while the cached prefix activation rides
+    in_axes=None (shared across candidates) and feeds further ops.  The
+    custom-vmap rule must broadcast x across the candidate axis into the
+    stacked kernel and agree with the per-candidate reference."""
+    from repro.kernels.ops import masked_act_sited, masked_act_sited_routed
+    rng = np.random.default_rng(11)
+    n, B, site_shape = 3, 2, (4, 4, 8)
+    cached = jnp.asarray(rng.normal(size=(B,) + site_shape)
+                         .astype(np.float32))
+    masks = jnp.asarray((rng.random((n,) + site_shape) > 0.5)
+                        .astype(np.float32))
+
+    def suffix_fn(m, x):
+        y = masked_act_sited_routed(x, m, kind="relu", interpret=True)
+        return y.reshape(B, -1).sum(-1)          # downstream suffix ops
+
+    got = jax.jit(jax.vmap(suffix_fn, in_axes=(0, None)))(masks, cached)
+    want = jnp.stack([
+        masked_act_sited(cached, masks[i], kind="relu", force_pallas=True,
+                         interpret=True).reshape(B, -1).sum(-1)
+        for i in range(n)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_stacked_kernel_route_hint_is_scoped():
     """linearize.stacked_kernel_route flips the trace-time flag and always
     restores it (exceptions included)."""

@@ -1,0 +1,439 @@
+"""Prefix-reuse candidate evaluation: split-forward contract + suffix engine.
+
+Three layers of guarantees under test:
+
+1. **Model contract** — ``forward_suffix(p, m, forward_prefix(p, m, x, s), s)
+   == forward(p, m, x)`` *bitwise* for every site ``s``, both model
+   families.  Prefix/suffix fold the same segment list / reuse the same
+   layer helpers as forward, so a composed trace emits identical
+   primitives; this suite pins that down.
+2. **Selection equivalence** — the suffix backend evaluates in site-major
+   order (one cached prefix per group) but replays Alg. 2's sampling-order
+   selection rules; ``run_bcd`` must pick bit-identical blocks vs the
+   sequential reference at every prefetch depth, with identical trial
+   counts and early-exit flags.
+3. **Plumbing** — site grouping/chunking never straddles a segment, the
+   cost model falls shallow cuts back to the full forward, and the prefix
+   cache is batch-sharded (never gathered) on a forced 4-device
+   ``("cand", "batch")`` mesh.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.analysis.roofline import SuffixCostModel
+from repro.configs.base import ArchConfig, Block
+from repro.core import bcd, engine, linearize, masks as M
+from repro.data import ImageDatasetCfg, SyntheticImages
+from repro.models.lm import LM
+from repro.models.resnet import CNN, CNNConfig
+
+
+# ------------------------------------------------------- model contract
+
+
+def _assert_split_bitwise(model, params, masks, forward_args, sites):
+    md = M.as_device(masks)
+    full = np.asarray(jax.jit(model.forward)(params, md, *forward_args))
+    for site in sites:
+        def composed(p, m, x, site=site):
+            return model.forward_suffix(
+                p, m, model.forward_prefix(p, m, x, site), site)
+        out = jax.jit(composed)(params, md, *forward_args)
+        np.testing.assert_array_equal(
+            np.asarray(out), full,
+            err_msg=f"prefix∘suffix != forward at site {site}")
+
+
+def test_cnn_split_forward_bitwise_per_site():
+    model = CNN(CNNConfig("tiny", 4, 16, ((8, 1, 1), (16, 1, 2)),
+                          stem_channels=8))
+    params = model.init(jax.random.PRNGKey(0))
+    masks = linearize.init_masks(model.mask_sites())
+    # zero a few coordinates so masks are non-trivial
+    rng = np.random.default_rng(0)
+    masks = M.sample_removal_block(rng, masks, 64)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    assert set(model.site_order()) == set(model.mask_sites())
+    _assert_split_bitwise(model, params, masks, (x,), model.site_order())
+
+
+def test_wide_cnn_split_forward_bitwise_per_site():
+    model = CNN(CNNConfig("wrn-mini", 4, 16,
+                          ((8, 1, 1), (16, 1, 2), (16, 1, 2)),
+                          stem_channels=8, wide=True))
+    params = model.init(jax.random.PRNGKey(0))
+    masks = linearize.init_masks(model.mask_sites())
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    _assert_split_bitwise(model, params, masks, (x,), model.site_order())
+
+
+def _tiny_lm():
+    # 1 head block + scanned (2 patterns x 2 repeats) + 1 tail block: every
+    # segment kind (head / stack / tail) gets a cut
+    cfg = ArchConfig(
+        name="tiny-split", family="dense", n_layers=6, d_model=32,
+        n_heads=2, n_kv_heads=2, d_ff=48, vocab=64, head_dim=16,
+        pattern=(Block("dense"), Block("dense")),
+        head_blocks=(Block("dense"),), dtype="float32")
+    assert cfg.n_repeats == 2 and len(cfg.tail) == 1
+    return LM(cfg)
+
+
+def test_lm_split_forward_bitwise_per_site():
+    model = _tiny_lm()
+    params = model.init(jax.random.PRNGKey(0))
+    masks = linearize.init_masks(model.mask_sites())
+    rng = np.random.default_rng(0)
+    masks = M.sample_removal_block(rng, masks, 16)
+    tokens = np.asarray(rng.integers(0, model.cfg.vocab, (2, 17),
+                                     dtype=np.int32))
+    md = M.as_device(masks)
+    full = np.asarray(
+        jax.jit(lambda p, m, t: model.forward(p, m, t)[0])(params, md,
+                                                           tokens))
+    assert model.site_order() == ("h0.ffn", "s0.ffn", "s1.ffn", "t0.ffn")
+    for site in model.site_order():
+        def composed(p, m, t, site=site):
+            return model.forward_suffix(
+                p, m, model.forward_prefix(p, m, t, site), site)
+        out = np.asarray(jax.jit(composed)(params, md, tokens))
+        np.testing.assert_array_equal(out, full, err_msg=site)
+
+
+def test_suffix_sites_and_fractions_are_monotone():
+    model = CNN(CNNConfig("tiny", 4, 16, ((8, 1, 1), (16, 1, 2)),
+                          stem_channels=8))
+    order = model.site_order()
+    fr = model.site_prefix_fractions()
+    segs = model.site_segments()
+    prev = -1.0
+    for site in order:
+        # suffix consumes exactly the sites in segments >= the cut
+        assert model.suffix_sites(site) == tuple(
+            s for s in order if segs[s] >= segs[site])
+        assert fr[site] >= prev - 1e-12     # deeper cut, larger prefix
+        prev = fr[site]
+    assert fr[order[0]] == 0.0
+    assert fr[order[-1]] > 0.5
+    lm = _tiny_lm()
+    lfr = lm.site_prefix_fractions()
+    assert lfr["h0.ffn"] == 0.0
+    assert lfr["t0.ffn"] > lfr["s0.ffn"] > lfr["h0.ffn"]
+    assert lm.suffix_sites("s1.ffn") == ("s0.ffn", "s1.ffn", "t0.ffn")
+
+
+# -------------------------------------------------- grouping / planning
+
+
+def test_group_blocks_by_site():
+    masks = {"a": np.ones((4,), np.float32), "b": np.ones((4,), np.float32),
+             "c": np.ones((4,), np.float32)}
+    _, layout = M._flatten(masks)       # a:[0,4) b:[4,8) c:[8,12)
+    rank = {"a": 0, "b": 1, "c": 2}
+    indices = np.array([[9, 10],        # earliest c -> rank 2
+                        [5, 11],        # earliest b -> rank 1
+                        [1, 9],         # earliest a -> rank 0
+                        [6, 7],         # rank 1
+                        [8, 11]])       # rank 2
+    order, groups = M.group_blocks_by_site(indices, layout, rank)
+    np.testing.assert_array_equal(order, [2, 1, 3, 0, 4])  # stable in-group
+    assert groups == [(0, 0, 1), (1, 1, 3), (2, 3, 5)]
+    # empty-candidate edge
+    order0, groups0 = M.group_blocks_by_site(
+        np.zeros((0, 2), np.int64), layout, rank)
+    assert order0.size == 0 and groups0 == []
+
+
+def test_plan_sited_chunks_never_straddles_and_respects_cost_model():
+    model = CNN(CNNConfig("tiny", 4, 16, ((8, 1, 1), (16, 1, 2)),
+                          stem_channels=8))
+    masks = linearize.init_masks(model.mask_sites())
+    flat, layout = M._flatten(masks)
+    order_sites = model.site_order()
+    deep, shallow = order_sites[-1], order_sites[0]
+    rng = np.random.default_rng(0)
+    idx = np.concatenate([
+        M.sample_removal_indices_within(rng, masks, 8, 5, [deep]),
+        M.sample_removal_indices_within(rng, masks, 8, 3, [shallow])])
+    ctx = {"params": {}, "batch": {}}
+    ev = engine.SuffixEvaluator(model.make_suffix_eval_fns(), context=ctx,
+                                cost_model=SuffixCostModel(
+                                    min_prefix_fraction=0.05, min_chunk=2))
+    order, chunks = engine.plan_sited_chunks(ev, idx, layout, chunk_size=2)
+    segs = model.site_segments()
+    cand_seg = [min(segs[s] for s in (deep,)) for _ in range(5)] + \
+               [segs[shallow]] * 3
+    for site, s, e in chunks:
+        grp = {cand_seg[i] for i in order[s:e]}
+        assert len(grp) == 1, "chunk straddles a segment group"
+        if site is not None:
+            assert segs[site] == grp.pop()
+    # shallow group (prefix fraction 0) must fall back to the full forward
+    shallow_chunks = [c for c in chunks
+                     if all(cand_seg[i] == segs[shallow]
+                            for i in order[c[1]:c[2]])]
+    assert shallow_chunks and all(c[0] is None for c in shallow_chunks)
+    # deep group runs in suffix mode except any cost-model-undersized tail
+    deep_chunks = [c for c in chunks
+                   if all(cand_seg[i] == segs[deep]
+                          for i in order[c[1]:c[2]])]
+    assert deep_chunks
+    for site, s, e in deep_chunks:
+        # plan labels chunks with the segment's representative site
+        assert (site is not None and segs[site] == segs[deep]) \
+            == (e - s >= 2)
+    # a prohibitive cost model sends everything down the fallback
+    ev_off = engine.SuffixEvaluator(
+        model.make_suffix_eval_fns(), context=ctx,
+        cost_model=SuffixCostModel(min_prefix_fraction=1.1))
+    _, chunks_off = engine.plan_sited_chunks(ev_off, idx, layout, 2)
+    assert all(site is None for site, _, _ in chunks_off)
+
+
+def test_suffix_cost_model_formula():
+    cm = SuffixCostModel(min_prefix_fraction=0.05, min_chunk=2)
+    assert cm.speedup(0.0, 8) == pytest.approx(1.0)
+    assert cm.speedup(1.0, 8) == pytest.approx(8.0)
+    assert cm.speedup(0.5, 8) == pytest.approx(8 / 4.5)
+    assert not cm.use_suffix(0.9, 1)        # nothing to reuse across n=1
+    assert not cm.use_suffix(0.01, 8)       # shallow cut
+    assert cm.use_suffix(0.5, 2)
+
+
+# --------------------------------------------- selection equivalence
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = CNN(CNNConfig("tiny", 4, 16, ((8, 1, 1), (16, 1, 2)),
+                          stem_channels=8))
+    data = SyntheticImages(ImageDatasetCfg(n_classes=4, image_size=16,
+                                           n_train=256, n_test=64))
+    params = model.init(jax.random.PRNGKey(0))
+    batch = data.train_eval_set(128)
+    masks0 = linearize.init_masks(model.mask_sites())
+    return model, params, batch, masks0
+
+
+def _run(model, params, batch, masks0, evaluator, chunk_size=4, adt=0.5):
+    total = M.count(masks0)
+    cfg = bcd.BCDConfig(b_target=total - 3 * 16, drc=16, rt=8, adt=adt,
+                        finetune_every_step=False, seed=3,
+                        chunk_size=chunk_size)
+    eval_acc = model.make_eval_acc(params, batch)
+    return bcd.run_bcd(masks0, cfg, eval_acc, evaluator=evaluator)
+
+
+def _assert_same_result(a, b):
+    for k in a.masks:
+        np.testing.assert_array_equal(a.masks[k], b.masks[k])
+    assert len(a.history) == len(b.history)
+    for ha, hb in zip(a.history, b.history):
+        assert (ha.trials, ha.found_early) == (hb.trials, hb.found_early)
+        assert ha.best_drop == pytest.approx(hb.best_drop, abs=1e-4)
+        assert (ha.budget_before, ha.budget_after) == \
+            (hb.budget_before, hb.budget_after)
+
+
+def _suffix_ev(model, params, batch, **kw):
+    ctx = {"params": params,
+           "batch": {k: np.asarray(v) for k, v in batch.items()}}
+    return engine.make_evaluator("suffix",
+                                 split=model.make_suffix_eval_fns(),
+                                 context=ctx, **kw)
+
+
+@pytest.mark.parametrize("prefetch", [0, 1, 2])
+def test_suffix_matches_sequential_bitwise(setup, prefetch):
+    """Site-major evaluation + sampling-order selection replay: the suffix
+    backend selects bit-identical blocks (and identical trial counts /
+    early-exit flags) at every prefetch depth.  chunk_size=3 vs rt=8 forces
+    ragged chunks."""
+    model, params, batch, masks0 = setup
+    seq = _run(model, params, batch, masks0,
+               engine.SequentialEvaluator(model.make_eval_acc(params, batch)),
+               chunk_size=3)
+    suf = _run(model, params, batch, masks0,
+               _suffix_ev(model, params, batch, pad_to=3, prefetch=prefetch),
+               chunk_size=3)
+    _assert_same_result(seq, suf)
+
+
+def test_suffix_matches_batched_without_early_exit(setup):
+    """adt=-1 disables the ADT exit: the full RT argmin path, where every
+    candidate is evaluated — suffix vs batched must agree exactly."""
+    model, params, batch, masks0 = setup
+    bat = _run(model, params, batch, masks0,
+               engine.BatchedEvaluator(model.make_eval_fn(params, batch),
+                                       pad_to=4), adt=-1.0)
+    suf = _run(model, params, batch, masks0,
+               _suffix_ev(model, params, batch, pad_to=4, prefetch=1),
+               adt=-1.0)
+    _assert_same_result(bat, suf)
+
+
+def test_suffix_cost_model_fallback_is_still_equivalent(setup):
+    """min_prefix_fraction > 1 sends every chunk down the inner
+    full-forward pipeline — selection must be unchanged (the cost model is
+    a pure performance policy)."""
+    model, params, batch, masks0 = setup
+    seq = _run(model, params, batch, masks0,
+               engine.SequentialEvaluator(model.make_eval_acc(params, batch)))
+    suf = _run(model, params, batch, masks0,
+               _suffix_ev(model, params, batch, pad_to=4, prefetch=1,
+                          cost_model=SuffixCostModel(
+                              min_prefix_fraction=1.1)))
+    _assert_same_result(seq, suf)
+
+
+def test_suffix_site_local_candidates_use_prefix_cache(setup):
+    """Deep-site-local chunks run in suffix mode: accuracies match the
+    sequential reference and the evaluator holds a cached prefix for the
+    deep segment afterwards."""
+    model, params, batch, masks0 = setup
+    deep = model.site_order()[-1]
+    idx = M.sample_removal_indices_within(
+        np.random.default_rng(0), masks0, 16, 6, [deep])
+    stacked = M.materialize_candidates(masks0, idx)
+    ev = _suffix_ev(model, params, batch, pad_to=6)
+    ev.begin_step(masks0)
+    accs = ev.evaluate(engine.SitedChunk(deep, stacked))
+    seq = engine.SequentialEvaluator(model.make_eval_acc(params, batch))
+    np.testing.assert_allclose(accs, seq.evaluate(stacked), atol=1e-4)
+    assert model.site_segments()[deep] in ev._prefix_cache
+    # begin_step invalidates (masks/params changed between outer steps)
+    ev.begin_step(masks0)
+    assert not ev._prefix_cache
+
+
+def test_suffix_set_context_invalidates_prefix_cache(setup):
+    model, params, batch, masks0 = setup
+    ev = _suffix_ev(model, params, batch, pad_to=4)
+    deep = model.site_order()[-1]
+    idx = M.sample_removal_indices_within(
+        np.random.default_rng(0), masks0, 16, 4, [deep])
+    ev.begin_step(masks0)
+    a = ev.evaluate(engine.SitedChunk(
+        deep, M.materialize_candidates(masks0, idx)))
+    assert ev._prefix_cache
+    # perturb params through the shared context: results must change and
+    # the stale prefix must be dropped
+    new_params = jax.tree.map(lambda v: v * 0.5, params)
+    ev.set_context({"params": new_params,
+                    "batch": {k: np.asarray(v) for k, v in batch.items()}})
+    assert not ev._prefix_cache
+    b = ev.evaluate(engine.SitedChunk(
+        deep, M.materialize_candidates(masks0, idx)))
+    seq = engine.SequentialEvaluator(
+        model.make_eval_acc(new_params, batch))
+    np.testing.assert_allclose(
+        b, seq.evaluate(M.materialize_candidates(masks0, idx)), atol=1e-4)
+    assert a.shape == b.shape
+
+
+def test_suffix_evaluator_validates_inputs(setup):
+    model, params, batch, masks0 = setup
+    split = model.make_suffix_eval_fns()
+    with pytest.raises(ValueError, match="context"):
+        engine.SuffixEvaluator(split, context=None)
+    with pytest.raises(ValueError, match="context"):
+        engine.SuffixEvaluator(split, context={"params": params})
+    ctx = {"params": params,
+           "batch": {k: np.asarray(v) for k, v in batch.items()}}
+    with pytest.raises(ValueError, match="pipelined"):
+        engine.SuffixEvaluator(split, context=ctx, prefetch="auto")
+    with pytest.raises(ValueError, match="split"):
+        engine.make_evaluator("suffix", context=ctx)
+    ev = engine.SuffixEvaluator(split, context=ctx)
+    with pytest.raises(RuntimeError, match="begin_step"):
+        ev.evaluate(engine.SitedChunk(
+            model.site_order()[-1],
+            M.sample_removal_blocks(np.random.default_rng(0), masks0,
+                                    4, 2)))
+
+
+# ----------------------------------------- forced multi-device sharding
+
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax
+from repro.core import engine, linearize, masks as M
+from repro.data import ImageDatasetCfg, SyntheticImages
+from repro.launch import mesh as mesh_lib
+from repro.models.resnet import CNN, CNNConfig
+
+model = CNN(CNNConfig("tiny", 4, 8, ((4, 1, 1), (8, 1, 2)),
+                      stem_channels=4))
+data = SyntheticImages(ImageDatasetCfg(n_classes=4, image_size=8,
+                                       n_train=64, n_test=32))
+params = model.init(jax.random.PRNGKey(0))
+batch = data.train_eval_set(16)
+masks0 = linearize.init_masks(model.mask_sites())
+mesh = mesh_lib.make_cand_batch_mesh(cand=2, batch=2)
+ctx = {"params": params,
+       "batch": {k: np.asarray(v) for k, v in batch.items()}}
+ev = engine.SuffixEvaluator(model.make_suffix_eval_fns(), context=ctx,
+                            context_specs=engine.context_batch_specs(ctx),
+                            mesh=mesh, pad_to=4, prefetch=1)
+seq = engine.SequentialEvaluator(model.make_eval_acc(params, batch))
+
+deep = model.site_order()[-1]
+idx = M.sample_removal_indices_within(np.random.default_rng(0), masks0,
+                                      8, 6, [deep])
+stacked = M.materialize_candidates(masks0, idx)
+ev.begin_step(masks0)
+accs = ev.evaluate(engine.SitedChunk(deep, stacked))
+np.testing.assert_allclose(accs, seq.evaluate(stacked), atol=1e-4)
+
+# the cached prefix is batch-sharded (never gathered across "batch")
+cached = next(iter(ev._prefix_cache.values()))
+assert "batch" in str(cached.sharding.spec), cached.sharding
+# fallback (un-sited) chunks ride the inner sharded pipeline
+accs2 = ev.evaluate(engine.SitedChunk(None, stacked))
+np.testing.assert_allclose(accs2, seq.evaluate(stacked), atol=1e-4)
+print("SUFFIX_MESH_OK")
+"""
+
+
+def test_suffix_prefix_cache_batch_sharded_on_forced_mesh():
+    """4 forced host devices, ("cand", "batch") = (2, 2): suffix chunks
+    shard candidates over "cand" while the cached prefix stays
+    batch-sharded; results match the sequential reference."""
+    import os
+    import subprocess
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _MESH_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SUFFIX_MESH_OK" in out.stdout
+
+
+# -------------------------------------------------------- compile cache
+
+
+def test_compile_cache_enable_and_hit_counter(tmp_path):
+    """enable() + clear_caches() round trip: the second compile of an
+    identical program is served from the persistent cache and the counter
+    sees it."""
+    from repro.launch import compile_cache
+    d = str(tmp_path / "cc")
+    compile_cache.enable(d)
+    ctr = compile_cache.hit_counter()
+    import jax.numpy as jnp
+    f = jax.jit(lambda x: (x * 3).sum())
+    f(jnp.ones((4, 4)))
+    assert compile_cache.entry_count(d) > 0
+    before_hits = ctr.hits
+    jax.clear_caches()
+    jax.jit(lambda x: (x * 3).sum())(jnp.ones((4, 4)))
+    assert ctr.hits > before_hits
+    assert "served from the persistent cache" in ctr.log_line()
+    assert set(ctr.summary()) == {"hits", "misses"}
+    assert compile_cache.entry_count(None) == 0
