@@ -8,6 +8,10 @@ trial loop: chunk mask trees are *materialized from removal indices inside
 the loop* and driven through ``engine.evaluate_prefetched`` (site-aware
 backends additionally run the real site-major plan + per-step prefix
 computation), so every backend pays exactly what the real loop pays.
+Every vmapped backend is constructed at the finetune-ready operating
+point the example pipeline uses (``make_param_eval_fn`` +
+``context=params``): params are a jit input swapped via ``set_context``,
+not a closure constant XLA could fold the mask-independent stem through.
 
 Two workloads:
 
@@ -18,15 +22,26 @@ Two workloads:
 * ``per_site_depth`` samples *site-local* blocks at a shallow / middle /
   deep site and times suffix vs batched on each — the regime where
   candidates are local edits and the prefix-reuse engine shines.  The
-  headline ``speedup_suffix_vs_batched`` is the deep-site ratio (CI gates
-  it: benchmarks/check_bench_regression.py --gate-speedup).
+  headline keys are explicit about what they summarize:
+  ``speedup_suffix_vs_batched_deep`` (deep-site ratio),
+  ``..._shallow`` (all-fallback floor), ``..._mean`` (mean over the three
+  depth classes) and ``..._aggregate`` (global workload, the main table's
+  suffix/batched ratio).  CI gates deep+mean relative to the committed
+  baseline and floors mean/shallow absolutely
+  (benchmarks/check_bench_regression.py --gate-speedup / --floor).
+
+When a ``BENCH_history.jsonl`` is present, the suffix evaluator's cost
+model is calibrated from its per-depth measurements
+(``SuffixCostModel.calibrated`` — EWMA per site over entries matching
+this run's config fingerprint), so the bench exercises the measured
+decision path; a first run (no history) uses the analytic prior.
 
 Emits the repo's CSV row format plus a machine-readable
 ``BENCH_bcd_eval.json``, and appends one line per run to the append-only
 ``BENCH_history.jsonl`` so the perf trajectory is recorded across PRs.
 
     PYTHONPATH=src python -m benchmarks.bench_bcd_eval \
-        [--rt 32] [--chunk-size 8] [--prefetch 2] [--repeats 3] \
+        [--rt 32] [--chunk-size 8] [--prefetch auto] [--repeats 3] \
         [--out BENCH_bcd_eval.json] [--history BENCH_history.jsonl] \
         [--compile-cache DIR]
 """
@@ -42,6 +57,7 @@ import time
 import numpy as np
 import jax
 
+from repro.analysis.roofline import SuffixCostModel
 from repro.core import engine, linearize, masks as M
 from repro.data import ImageDatasetCfg, SyntheticImages
 from repro.launch import compile_cache, mesh as mesh_lib
@@ -118,6 +134,8 @@ def append_history(path, report):
         "config": report["config"],
         "cands_per_s": {k: v["cands_per_s"]
                         for k, v in report["backends"].items()},
+        # per-depth rows feed SuffixCostModel.calibrated on later runs
+        "per_site_depth": report["per_site_depth"],
         **{k: v for k, v in report.items() if k.startswith("speedup_")},
     }
     with open(path, "a") as f:
@@ -136,14 +154,26 @@ def main():
     # one-call-per-sweep operating point.
     ap.add_argument("--rt", type=int, default=32)
     ap.add_argument("--chunk-size", type=int, default=8)
-    ap.add_argument("--prefetch", type=int, default=2)
-    ap.add_argument("--repeats", type=int, default=5)
+    # "auto" = measured-rate tuning (PrefetchAutoTuner): the depth locks
+    # during the untimed warmup sweep, so timed sweeps run at the tuned
+    # depth — same flag the example pipeline's sweep jobs pass.
+    ap.add_argument("--prefetch",
+                    type=lambda v: v if v == "auto" else int(v),
+                    default="auto")
+    # repeats: timed sweeps per measurement.  8 makes each timing window
+    # ~0.3 s on the mini config — long enough that scheduler noise on a
+    # 1-2 core host averages out instead of dominating a single sweep.
+    ap.add_argument("--repeats", type=int, default=8)
     # Trials interleave across backends and each backend reports its MEDIAN
     # trial: on shared/noisy hosts (CI, this 2-core container) a single
     # measurement can swing ±30%, and a best-of would bias the committed
     # baseline to its upper envelope — making the CI regression gate fire
-    # on ordinary noise.
-    ap.add_argument("--trials", type=int, default=3)
+    # on ordinary noise.  The default is 5 so the committed baseline's
+    # cross-backend ratios settle near their true values (the suffix
+    # fallback path sits within a few percent of batched, so 3-trial
+    # medians of the aggregate ratio still wander either side of parity);
+    # CI's PR gate passes --trials 3 to trade precision for runtime.
+    ap.add_argument("--trials", type=int, default=5)
     ap.add_argument("--drc", type=int, default=64)
     ap.add_argument("--eval-batch", type=int, default=4)
     ap.add_argument("--out", default="BENCH_bcd_eval.json")
@@ -169,19 +199,48 @@ def main():
     # exist (sharded may still round up to the device count).
     chunk = min(args.chunk_size, args.rt)
 
+    history = args.history
+    if history is None:
+        history = os.path.join(os.path.dirname(args.out) or ".",
+                               "BENCH_history.jsonl")
+    # Calibrate the suffix cost model from prior runs at this operating
+    # point (missing/legacy history -> analytic prior, measured=None).
+    fingerprint = {"model": model.cfg.name, "chunk_size": chunk,
+                   "eval_batch": args.eval_batch,
+                   "n_devices": jax.device_count(),
+                   "backend": jax.default_backend()}
+    cost_model = SuffixCostModel() if history == "none" else \
+        SuffixCostModel.calibrated(history, fingerprint=fingerprint)
+    if cost_model.measured:
+        print(f"suffix cost model: calibrated from {history} "
+              f"({len(cost_model.measured)} site points)")
+
     eval_acc = model.make_eval_acc(params, batch)
-    eval_fn = model.make_eval_fn(params, batch)
+    # All vmapped backends run at the finetune-ready operating point the
+    # example pipeline uses (examples/resnet18_bcd_pipeline.py): params ride
+    # as evaluator *context* (a jit input swapped via set_context after each
+    # finetune), never a baked closure constant.  Closure-of-params lets XLA
+    # constant-fold the whole mask-independent stem (and delete init-valued
+    # bn affines outright) — a compiled graph no real run ever executes, and
+    # one that skews every cross-backend ratio.
+    eval_fn_p = model.make_param_eval_fn(batch)
     suffix_ctx = {"params": params,
                   "batch": {k: np.asarray(v) for k, v in batch.items()}}
+    # Measurement order per trial: suffix runs back-to-back with batched —
+    # their paired ratio is the headline number, and adjacency minimizes the
+    # host-drift window inside each pair.
     backends = {
         "sequential": engine.SequentialEvaluator(eval_acc),
-        "batched": engine.BatchedEvaluator(eval_fn, pad_to=chunk),
-        "sharded": engine.ShardedEvaluator(
-            eval_fn, mesh_lib.make_candidate_mesh(), pad_to=chunk),
-        "pipelined": engine.PipelinedEvaluator(
-            eval_fn, pad_to=chunk, prefetch=args.prefetch),
+        "batched": engine.BatchedEvaluator(eval_fn_p, pad_to=chunk,
+                                           context=params),
         "suffix": engine.SuffixEvaluator(
             model.make_suffix_eval_fns(), pad_to=chunk, context=suffix_ctx,
+            prefetch=args.prefetch, cost_model=cost_model),
+        "sharded": engine.ShardedEvaluator(
+            eval_fn_p, mesh_lib.make_candidate_mesh(), pad_to=chunk,
+            context=params),
+        "pipelined": engine.PipelinedEvaluator(
+            eval_fn_p, pad_to=chunk, context=params,
             prefetch=args.prefetch),
     }
 
@@ -198,6 +257,17 @@ def main():
                          "us_per_cand": round(1e6 / cps, 2)}
         print(f"bcd_eval_{name},{1e6 / cps:.1f},{cps:.1f}")
 
+    def paired_speedup(a, b):
+        """median over trials of the within-trial a/b ratio.
+
+        Backends interleave inside each trial (seconds apart), so a paired
+        ratio cancels the minutes-scale host-speed drift that a
+        ratio-of-medians is exposed to — on shared/throttled hosts the two
+        estimators can disagree by several percent on backends that are
+        near parity."""
+        return round(float(np.median([x / y for x, y
+                                      in zip(trials[a], trials[b])])), 2)
+
     # --- per-site-depth breakdown: site-local removal blocks, the regime
     # where every candidate in a chunk shares a deep prefix
     fractions = model.site_prefix_fractions()
@@ -206,26 +276,37 @@ def main():
         site_idx = M.sample_removal_indices_within(
             np.random.default_rng(1), masks0, args.drc, args.rt, [site])
         rows = {"batched": [], "suffix": []}
-        for trial in range(max(1, args.trials)):
+        for name in rows:                     # compile + tune, untimed
+            time_backend(backends[name], masks0, site_idx, chunk, 1)
+        # sweep-level pairing: alternate single batched / suffix sweeps so
+        # each ratio sample spans ~2 sweeps of wall-clock — host-speed
+        # drift (minutes-scale on shared runners) cancels inside the pair,
+        # which trial-level pairing can't do for near-parity rows
+        for _ in range(max(1, args.trials) * args.repeats):
             for name in rows:
                 cps, _ = time_backend(backends[name], masks0, site_idx,
-                                      chunk, args.repeats,
-                                      warmup=(trial == 0))
+                                      chunk, 1, warmup=False)
                 rows[name].append(cps)
         b = float(np.median(rows["batched"]))
         s = float(np.median(rows["suffix"]))
+        ratio = round(float(np.median([x / y for x, y
+                                       in zip(rows["suffix"],
+                                              rows["batched"])])), 2)
+        frac = float(fractions[site])
+        # what the evaluator's cost model decided for this site-local
+        # workload (cold trie): "suffix" rows are real prefix-reuse
+        # measurements — the only ones calibration may consume
+        mode = "suffix" if cost_model.use_suffix(frac, chunk) else "fallback"
         per_depth[depth] = {
             "site": site,
-            "prefix_fraction": round(float(fractions[site]), 4),
+            "prefix_fraction": round(frac, 4),
+            "mode": mode,
             "batched_cands_per_s": round(b, 2),
             "suffix_cands_per_s": round(s, 2),
-            "speedup_suffix_vs_batched": round(s / b, 2),
+            "speedup_suffix_vs_batched": ratio,
         }
-        print(f"bcd_eval_suffix_{depth},{site},"
+        print(f"bcd_eval_suffix_{depth},{site},{mode},"
               f"{per_depth[depth]['speedup_suffix_vs_batched']:.2f}x")
-
-    def speedup(a, b):
-        return round(results[a]["cands_per_s"] / results[b]["cands_per_s"], 2)
 
     report = {
         "bench": "bcd_eval",
@@ -236,35 +317,51 @@ def main():
                    "eval_batch": args.eval_batch,
                    "model": model.cfg.name,
                    "n_devices": jax.device_count(),
-                   "backend": jax.default_backend()},
+                   "backend": jax.default_backend(),
+                   "calibrated": bool(cost_model.measured),
+                   # provenance: identifies what produced a committed
+                   # baseline without entering the operating-point compare
+                   "provenance": {
+                       "jax": jax.__version__,
+                       "platform": jax.default_backend(),
+                       "device_kind": jax.devices()[0].device_kind,
+                   }},
         "backends": results,
         "per_site_depth": per_depth,
-        "speedup_batched_vs_sequential": speedup("batched", "sequential"),
-        "speedup_sharded_vs_sequential": speedup("sharded", "sequential"),
-        "speedup_pipelined_vs_sequential": speedup("pipelined", "sequential"),
-        "speedup_pipelined_vs_batched": speedup("pipelined", "batched"),
-        # headline prefix-reuse numbers (site-local workload): deep cut and
-        # the mean over the depth classes — both CI-gated
-        "speedup_suffix_vs_batched":
+        "speedup_batched_vs_sequential":
+            paired_speedup("batched", "sequential"),
+        "speedup_sharded_vs_sequential":
+            paired_speedup("sharded", "sequential"),
+        "speedup_pipelined_vs_sequential":
+            paired_speedup("pipelined", "sequential"),
+        "speedup_pipelined_vs_batched":
+            paired_speedup("pipelined", "batched"),
+        # headline prefix-reuse numbers, each with an explicit suffix: the
+        # deep-site ratio, the shallow all-fallback floor, the mean over
+        # depth classes (deep+mean CI-gated vs baseline; mean+shallow
+        # floored absolutely), and the global-workload aggregate
+        "speedup_suffix_vs_batched_deep":
             per_depth["deep"]["speedup_suffix_vs_batched"],
+        "speedup_suffix_vs_batched_shallow":
+            per_depth["shallow"]["speedup_suffix_vs_batched"],
         "speedup_suffix_vs_batched_mean": round(
             float(np.mean([d["speedup_suffix_vs_batched"]
                            for d in per_depth.values()])), 2),
+        "speedup_suffix_vs_batched_aggregate":
+            paired_speedup("suffix", "batched"),
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
-    history = args.history
-    if history is None:
-        history = os.path.join(os.path.dirname(args.out) or ".",
-                               "BENCH_history.jsonl")
     if history != "none":
         append_history(history, report)
     print(f"batched vs sequential: "
           f"{report['speedup_batched_vs_sequential']:.2f}x; "
-          f"suffix vs batched (deep site): "
-          f"{report['speedup_suffix_vs_batched']:.2f}x "
-          f"(mean {report['speedup_suffix_vs_batched_mean']:.2f}x)"
+          f"suffix vs batched: deep "
+          f"{report['speedup_suffix_vs_batched_deep']:.2f}x, shallow "
+          f"{report['speedup_suffix_vs_batched_shallow']:.2f}x, mean "
+          f"{report['speedup_suffix_vs_batched_mean']:.2f}x, aggregate "
+          f"{report['speedup_suffix_vs_batched_aggregate']:.2f}x"
           f"  -> {args.out}")
     if counter is not None:
         print(counter.log_line())

@@ -8,11 +8,19 @@ backend does not require a lockstep baseline refresh).  Faster-than-baseline
 results print a note suggesting a refresh.
 
     PYTHONPATH=src python -m benchmarks.check_bench_regression \
-        BENCH_bcd_eval.json BENCH_new.json [--tolerance 0.30]
+        BENCH_bcd_eval.json BENCH_new.json [--tolerance 0.30] \
+        [--gate-speedup KEY ...] [--floor KEY=MIN ...]
 
-Exit codes: 0 pass, 1 candidates/sec regression, 2 unusable input (missing
-or malformed report, incomparable operating points) — always with a
-human-readable FAIL line, never a traceback, so CI logs say what to fix.
+``--floor speedup_suffix_vs_batched_mean=2.0`` gates a top-level speedup
+key of the FRESH report against an absolute minimum (no baseline
+involved — within-report ratios are hardware-robust, so an absolute
+floor is meaningful even on a slow CI runner).  Repeatable; a floored
+key missing from the fresh report is exit 2, like --gate-speedup.
+
+Exit codes: 0 pass, 1 candidates/sec regression or floor violation,
+2 unusable input (missing or malformed report, incomparable operating
+points, malformed/missing gate key) — always with a human-readable FAIL
+line, never a traceback, so CI logs say what to fix.
 A backend sitting exactly at the threshold (ratio == 1 - tolerance) passes:
 the gate fails only on drops strictly beyond the tolerance, with a small
 epsilon so float rounding cannot flip an at-threshold result.
@@ -120,6 +128,38 @@ def compare_speedup_keys(baseline: dict, fresh: dict, keys, tolerance: float):
     return failures, missing, lines
 
 
+def check_floors(fresh: dict, floors):
+    """Gate top-level speedup keys of the fresh report against absolute
+    minima.  ``floors``: [(key, min_value)].  Returns (failures, missing,
+    lines); a floored key sitting exactly at its minimum passes."""
+    failures, missing, lines = [], [], []
+    for key, floor in floors:
+        val = fresh.get(key)
+        if not isinstance(val, (int, float)):
+            missing.append(key)
+            lines.append(f"  {key}: missing or non-numeric ({val!r})")
+            continue
+        ok = float(val) >= floor - _EPS
+        lines.append(f"  {key}: {val:.2f}x (floor {floor:.2f}x)  "
+                     f"{'OK' if ok else 'BELOW FLOOR'}")
+        if not ok:
+            failures.append(key)
+    return failures, missing, lines
+
+
+def parse_floor(spec: str):
+    """``KEY=MIN`` -> (key, float(min)); raises argparse-friendly errors."""
+    key, sep, val = spec.partition("=")
+    if not sep or not key:
+        raise argparse.ArgumentTypeError(
+            f"--floor expects KEY=MIN, got {spec!r}")
+    try:
+        return key, float(val)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"--floor {key}: minimum {val!r} is not a number")
+
+
 def load_report(path: str, which: str):
     """Load one benchmark report; returns None after printing a clear FAIL
     line when the file is missing, unreadable, or not a report-shaped dict
@@ -173,7 +213,12 @@ def main(argv=None):
                     metavar="KEY",
                     help="also gate this top-level speedup_* report key "
                          "(within-report ratio, so hardware-robust); "
-                         "repeatable.  e.g. speedup_suffix_vs_batched")
+                         "repeatable.  e.g. speedup_suffix_vs_batched_deep")
+    ap.add_argument("--floor", action="append", default=[],
+                    metavar="KEY=MIN", type=parse_floor,
+                    help="absolute minimum for a top-level speedup_* key of "
+                         "the FRESH report (no baseline); repeatable.  e.g. "
+                         "speedup_suffix_vs_batched_mean=2.0")
     args = ap.parse_args(argv)
     baseline = load_report(args.baseline, "baseline")
     fresh = load_report(args.fresh, "fresh")
@@ -209,14 +254,22 @@ def main(argv=None):
         print(f"speedup-key gate (tolerance {args.tolerance:.0%}):")
         for line in key_lines:
             print(line)
-    if key_missing:
+    floor_failures, floor_missing = [], []
+    if args.floor:
+        floor_failures, floor_missing, floor_lines = check_floors(
+            fresh, args.floor)
+        print("absolute speedup floors (fresh report):")
+        for line in floor_lines:
+            print(line)
+    if key_missing or floor_missing:
         print(f"FAIL: gated speedup key(s) missing from a report: "
-              f"{', '.join(key_missing)} — regenerate with the current "
-              "benchmarks.bench_bcd_eval (or drop the --gate-speedup flag)")
+              f"{', '.join(key_missing + floor_missing)} — regenerate with "
+              "the current benchmarks.bench_bcd_eval (or drop the "
+              "--gate-speedup/--floor flag)")
         return 2
-    if failures or key_failures:
+    if failures or key_failures or floor_failures:
         print("FAIL: regression in "
-              f"{', '.join(failures + key_failures)}")
+              f"{', '.join(failures + key_failures + floor_failures)}")
         return 1
     print("PASS")
     return 0

@@ -75,7 +75,7 @@ def parse_args():
     ap.add_argument("--prefetch", default="2",
                     help="chunks kept staged ahead (pipelined/suffix "
                          "engines), or 'auto' to pick from measured rates "
-                         "(pipelined only)")
+                         "(pipelined and suffix)")
     ap.add_argument("--compile-cache", default=None, metavar="DIR",
                     help="enable the jax persistent compilation cache at "
                          "DIR — sweep restarts stop paying re-jit (cache "
@@ -100,8 +100,8 @@ def parse_args():
         except ValueError:
             ap.error(f"--prefetch must be an integer or 'auto', got "
                      f"{args.prefetch!r}")
-    elif args.engine != "pipelined":
-        ap.error("--prefetch auto requires --engine pipelined")
+    elif args.engine not in ("pipelined", "suffix"):
+        ap.error("--prefetch auto requires --engine pipelined or suffix")
     if args.sweep is not None:
         if args.out_dir is None:
             ap.error("--sweep requires --out-dir")

@@ -176,10 +176,13 @@ def _scan_sited(masks, cfg, evaluator, flat, layout, indices, chunk_size,
                 acc_base):
     """Site-major trial scan with sampling-order selection replay.
 
-    Chunks are evaluated grouped by cut segment (one cached prefix per
-    group — ``engine.plan_sited_chunks``), which permutes *evaluation*
-    order.  Selection stays bit-identical to the sampling-order loop
-    because its outcome is a pure function of the drop vector:
+    Chunks are evaluated grouped by cut segment in depth-ascending order
+    (one cached prefix per group — ``engine.plan_sited_chunks``; ascending
+    depth lets the suffix engine's prefix trie extend each cached prefix
+    into the next group's deeper one instead of recomputing from the
+    input), which permutes *evaluation* order.  Selection stays
+    bit-identical to the sampling-order loop because its outcome is a pure
+    function of the drop vector:
 
     * if any candidate has drop < adt, the sampling-order loop stops at the
       FIRST such index ``i*`` and returns it (every earlier candidate has

@@ -221,16 +221,23 @@ def evaluate_prefetched(evaluator, chunks: Iterable[M.MaskTree]
         yield evaluator.evaluate_staged(staged.popleft())
 
 
-def _with_stacked_route(eval_fn):
+def _with_stacked_route(eval_fn, *, fused: bool = False):
     """Trace eval_fn under linearize.stacked_kernel_route so the TPU
     hard-mask dispatch emits the custom-vmap routed op: vmapping the
     candidate axis then lowers to the stacked Pallas kernel
     (kernels.masked_act_2d_batched) instead of vmapping the per-candidate
-    kernel's grid.  Trace-time only — a no-op off TPU."""
+    kernel's grid.  ``fused=True`` additionally arms
+    linearize.fused_suffix_route, so models fold the masked-activation gate
+    into the adjacent conv/matmul (kernels.ops fused entry points) instead
+    of round-tripping the gated tensor through HBM.  Trace-time only — both
+    hints are no-ops off TPU."""
     @functools.wraps(eval_fn)
     def routed(*args):
         from . import linearize
         with linearize.stacked_kernel_route():
+            if fused:
+                with linearize.fused_suffix_route():
+                    return eval_fn(*args)
             return eval_fn(*args)
     return routed
 
@@ -271,7 +278,10 @@ class BatchedEvaluator:
         between outer steps update it via :meth:`set_context` and the
         compiled executable picks up the new values without retracing."""
         self._has_ctx = context is not None
-        self.context = context
+        # commit the context to device once: leaving numpy leaves in the
+        # tree makes every dispatch re-transfer them (and re-hash the host
+        # arrays), which is pure per-chunk overhead on the hot path
+        self.context = None if context is None else jax.device_put(context)
         routed = _with_stacked_route(eval_fn)
         # the mask stack (arg 0) is donated: each staged chunk's stack is a
         # fresh buffer (_device_batch copies) read by exactly one dispatch,
@@ -288,7 +298,7 @@ class BatchedEvaluator:
         """Swap the auxiliary context (same treedef/shapes: no recompile)."""
         if not self._has_ctx:
             raise ValueError("evaluator was built without a context")
-        self.context = context
+        self.context = jax.device_put(context)
 
     def _device_batch(self, stacked: M.MaskTree):
         # copy=True: the stack is donated into the vmapped eval, so leaves
@@ -476,6 +486,24 @@ class SplitEval(NamedTuple):
     contract ``suffix(site, m, prefix(site, m, x)) == full(m)`` bitwise for
     every site; ``site`` is Python-level (static) — the evaluator compiles
     one prefix/suffix pair per cut segment.
+
+    ``prefix_ext(from_site, to_site, masks, cached, ctx) -> cached`` extends
+    an already-computed prefix by only the segments between the two cuts,
+    satisfying ``prefix_ext(a, b, m, prefix(a, m, x)) == prefix(b, m, x)``
+    (same fold over the same segment list, so the composition is exact under
+    one jit; across jit boundaries the segment outputs are materialized f32
+    either way).  Optional: ``None`` disables incremental extension and the
+    trie recomputes every prefix from the input.
+
+    ``pre(ctx) -> pre_act`` is the *mask-independent head* of the network
+    (input to the first gate's pre-activation — e.g. the stem conv+bn, or
+    the LM embed fold).  It depends only on the context, never on candidate
+    masks, so the evaluator computes it ONCE per context and ships it inside
+    the context as ``ctx["pre"]``; ``full`` then resumes from it, sparing
+    every fallback candidate the recompute (``full(m, {**ctx, "pre":
+    pre(ctx)}) == full(m, ctx)`` bitwise — the depth-0 analogue of the
+    prefix-trie contract).  Optional: ``None`` keeps ``full`` folding from
+    the raw input.
     """
     prefix: Callable[..., Any]
     suffix: Callable[..., Any]
@@ -484,6 +512,8 @@ class SplitEval(NamedTuple):
     site_segment: Dict[str, int]       # site -> cut segment (prefix key)
     suffix_sites: Callable[[str], Tuple[str, ...]]
     prefix_fraction: Dict[str, float]  # site -> fwd-FLOP fraction above it
+    prefix_ext: Optional[Callable[..., Any]] = None
+    pre: Optional[Callable[..., Any]] = None
 
 
 class SitedChunk(NamedTuple):
@@ -495,6 +525,109 @@ class SitedChunk(NamedTuple):
     stacked: M.MaskTree
 
 
+def tree_nbytes(tree) -> int:
+    """Total device bytes of a pytree's leaves (global logical bytes for
+    sharded arrays — the trie budget is a per-model-replica figure)."""
+    return int(sum(np.asarray(leaf).nbytes if not hasattr(leaf, "nbytes")
+                   else leaf.nbytes for leaf in jax.tree.leaves(tree)))
+
+
+class PrefixTrie:
+    """Byte-budgeted cache of device-resident prefix activations, keyed by
+    cut-segment depth.
+
+    Because every segment has exactly one successor, the "trie" of prefixes
+    is a chain: the entry at depth ``d`` is the fold of segments ``[0, d)``
+    and is an ancestor of every entry at depth > d.  :meth:`lookup` returns
+    the *deepest* cached entry at or above a requested depth, so a chunk
+    cutting at ``d`` either hits exactly (reuse), hits an ancestor (extend by
+    the segments in between — ``SplitEval.prefix_ext``), or misses (compute
+    from the input).
+
+    Eviction is LRU with a site-major (shallow-first) tie-break, bounded by
+    ``budget_bytes``: after every insert the total strictly respects the
+    budget, evicting least-recently-used entries first and the just-inserted
+    entry last (an entry that alone exceeds the budget is dropped too — the
+    caller still holds the returned reference for its in-flight dispatches).
+    ``budget_bytes=None`` disables eviction.  Counters (``hits`` /
+    ``extensions`` / ``misses`` / ``evictions``) feed the bench report.
+    """
+
+    def __init__(self, budget_bytes: Optional[int] = None):
+        if budget_bytes is not None and budget_bytes < 0:
+            raise ValueError(f"budget_bytes must be >= 0, got {budget_bytes}")
+        self.budget_bytes = budget_bytes
+        self._entries: Dict[int, Any] = {}
+        self._nbytes: Dict[int, int] = {}
+        self._tick: Dict[int, int] = {}
+        self._clock = 0
+        self.hits = 0
+        self.extensions = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, depth: int) -> bool:
+        return depth in self._entries
+
+    def depths(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._entries))
+
+    def items(self):
+        return self._entries.items()
+
+    def total_bytes(self) -> int:
+        return sum(self._nbytes.values())
+
+    def lookup(self, depth: int) -> Optional[Tuple[int, Any]]:
+        """Deepest cached ancestor at depth <= ``depth`` -> (depth, cached),
+        or None.  Touches the entry's LRU tick."""
+        live = [d for d in self._entries if d <= depth]
+        if not live:
+            return None
+        d = max(live)
+        self._clock += 1
+        self._tick[d] = self._clock
+        return d, self._entries[d]
+
+    def insert(self, depth: int, cached, nbytes: Optional[int] = None) -> None:
+        self._entries[depth] = cached
+        self._nbytes[depth] = tree_nbytes(cached) if nbytes is None else nbytes
+        self._clock += 1
+        self._tick[depth] = self._clock
+        self._evict(newest=depth)
+
+    def keep_where(self, pred: Callable[[int], bool]) -> None:
+        """Drop every entry whose depth fails ``pred`` (cross-step
+        invalidation: keep depths unaffected by changed base masks)."""
+        for d in [d for d in self._entries if not pred(d)]:
+            self._drop(d)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._nbytes.clear()
+        self._tick.clear()
+
+    def _drop(self, depth: int) -> None:
+        del self._entries[depth]
+        del self._nbytes[depth]
+        del self._tick[depth]
+
+    def _evict(self, newest: int) -> None:
+        if self.budget_bytes is None:
+            return
+        while self.total_bytes() > self.budget_bytes:
+            victims = sorted((d for d in self._entries if d != newest),
+                             key=lambda d: (self._tick[d], d))
+            victim = victims[0] if victims else newest
+            self._drop(victim)
+            self.evictions += 1
+            if victim == newest:
+                break
+
+
 class SuffixEvaluator:
     """Prefix-reuse backend: one shared prefix per (site, step), vmapped
     suffix per candidate.
@@ -502,18 +635,41 @@ class SuffixEvaluator:
     The trial loop (``core.bcd._select_block``) calls :meth:`begin_step`
     with the step's base masks, then feeds :class:`SitedChunk`\\ s grouped
     site-major (``plan_sited_chunks``).  For each chunk the cut segment's
-    prefix is computed once from the base masks — candidates never mutate
-    sites above their cut — kept device-resident (batch-sharded on a 2-D
-    ``("cand", "batch")`` mesh, so it is never gathered), and reused by
-    every suffix dispatch of that segment.  Suffix dispatches ship only the
-    *suffix-site* mask slices (sharded over ``"cand"``), so deep-site chunks
-    also transfer a fraction of the mask bytes.
+    prefix comes from a :class:`PrefixTrie` of device-resident activations:
+    an exact-depth hit is reused outright; otherwise the deepest cached
+    *ancestor* is extended by only the segments between its depth and the
+    cut (``SplitEval.prefix_ext``), so consuming chunks shallow-to-deep
+    turns the step's prefix work into one incremental pass over the network
+    instead of one full prefix per segment.  Candidates never mutate sites
+    above their cut, so prefixes depend only on the step's *base* masks —
+    which also lets entries survive across outer steps: :meth:`begin_step`
+    diffs the new base tree against the old one and keeps every entry whose
+    depth is at or above no changed site (selective invalidation).  Entries
+    stay batch-sharded on a 2-D ``("cand", "batch")`` mesh — lookup,
+    extension, and eviction never gather them.  Residency is bounded by
+    ``trie_budget_bytes`` (LRU, site-major tie-break).  Suffix dispatches
+    ship only the *suffix-site* mask slices (sharded over ``"cand"``), so
+    deep-site chunks also transfer a fraction of the mask bytes.
 
     Plain (un-sited) chunks and cost-model fallbacks delegate to an inner
     :class:`PipelinedEvaluator` sharing the same context/placement, so this
     backend composes batched / sharded / pipelined behavior: ``prefetch``
     staging works identically for sited chunks (stage = slice + pad +
-    transfer + dispatch suffix).
+    transfer + dispatch suffix), and ``prefetch="auto"`` hands the depth to
+    the inner pipeline's :class:`PrefetchAutoTuner` (measured producer vs
+    consumer rates — locks 0 where overlap can't help, >0 where it does).
+    The fallback pipeline is built once and kept warm: consecutive fallback
+    chunks reuse its jit executable and its device-committed context — no
+    per-chunk re-staging cost.  When the model provides ``SplitEval.pre``
+    (the mask-independent head fold — stem conv+bn / embed), it is computed
+    once per context and shipped as ``ctx["pre"]``, so even fallback
+    candidates skip the head recompute: the depth-0 analogue of the prefix
+    trie.
+
+    ``fused_kernels`` traces the suffix jits under
+    ``linearize.fused_suffix_route`` so TPU hard-mask sites fuse the gate
+    into the adjacent conv/matmul (kernels.ops fused entry points); inert
+    off-TPU, where dispatch falls through to the reference path.
     """
 
     name = "suffix"
@@ -522,37 +678,23 @@ class SuffixEvaluator:
 
     def __init__(self, split: SplitEval, *, pad_to: Optional[int] = None,
                  context=None, mesh=None, context_specs=None,
-                 prefetch: int = 0, cost_model=None):
+                 prefetch: int = 0, cost_model=None,
+                 trie_budget_bytes: Optional[int] = None,
+                 fused_kernels: bool = True):
         if not isinstance(context, dict) or "params" not in context \
                 or "batch" not in context:
             raise ValueError(
                 "SuffixEvaluator needs context={'params': …, 'batch': …} — "
                 "prefix and suffix consume the eval batch and params as jit "
                 "inputs (models' make_suffix_eval_fns contract)")
-        if isinstance(prefetch, str):
-            raise ValueError(
-                "prefetch='auto' tuning belongs to the pipelined backend; "
-                "the suffix backend takes an integer staging depth")
         if cost_model is None:
             from repro.analysis.roofline import SuffixCostModel
             cost_model = SuffixCostModel()
         self._split = split
         self.cost_model = cost_model
-        self._inner = PipelinedEvaluator(
-            split.full, pad_to=pad_to, context=context,
-            prefetch=int(prefetch), mesh=mesh, context_specs=context_specs)
-        self.prefetch_depth = int(prefetch)
+        self.fused_kernels = bool(fused_kernels)
         self._pad_to = pad_to
         self._mesh = mesh
-        # one representative site per segment: sites cutting at the same
-        # segment share the prefix cache entry and the prefix/suffix jits
-        self._segment_site: Dict[int, str] = {}
-        for s in split.site_order:
-            self._segment_site.setdefault(split.site_segment[s], s)
-        self._prefix_jits: Dict[int, Callable] = {}
-        self._suffix_jits: Dict[int, Callable] = {}
-        self._prefix_cache: Dict[int, Any] = {}
-        self._base_masks: Optional[M.MaskTree] = None
         if mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
             axes = tuple(mesh.axis_names)
@@ -561,6 +703,71 @@ class SuffixEvaluator:
             self._cand_sharding = NamedSharding(mesh, P(cand_axes))
             self._cache_sharding = NamedSharding(
                 mesh, P("batch") if "batch" in axes else P())
+        # mask-independent head fold (SplitEval.pre): computed once per
+        # context and shipped INSIDE the inner context, so every fallback
+        # full-forward resumes from it instead of re-tracing the stem/embed
+        self._pre_jit = None if split.pre is None else jax.jit(split.pre)
+        context = self._with_pre(context)
+        if context_specs is not None and "pre" in context:
+            from jax.sharding import PartitionSpec as P
+            axes = tuple(mesh.axis_names) if mesh is not None else ()
+            spec = P("batch") if "batch" in axes else P()
+            context_specs = {**context_specs,
+                             "pre": jax.tree.map(lambda _: spec,
+                                                 context["pre"])}
+        # prefetch passes straight through (including "auto": the inner
+        # pipeline owns the PrefetchAutoTuner; this evaluator mirrors its
+        # prefetch_depth/auto_report so evaluate_prefetched's probe loop
+        # drives the tuner through the suffix staging protocol)
+        self._inner = PipelinedEvaluator(
+            split.full, pad_to=pad_to, context=context,
+            prefetch=prefetch, mesh=mesh, context_specs=context_specs)
+        # one representative site per segment: sites cutting at the same
+        # segment share the prefix cache entry and the prefix/suffix jits
+        self._segment_site: Dict[int, str] = {}
+        for s in split.site_order:
+            self._segment_site.setdefault(split.site_segment[s], s)
+        self._prefix_jits: Dict[int, Callable] = {}
+        self._prefix_ext_jits: Dict[Tuple[int, int], Callable] = {}
+        self._suffix_jits: Dict[int, Callable] = {}
+        self.trie = PrefixTrie(budget_bytes=trie_budget_bytes)
+        self._base_masks: Optional[M.MaskTree] = None
+        self._base_dev: Optional[dict] = None   # device copy, lazy per step
+
+    def _with_pre(self, context):
+        """Augment a raw context with the mask-independent head fold
+        (``ctx["pre"]``), batch-sharded under a mesh like the trie cache —
+        suffix/prefix closures ignore the extra key; ``split.full`` resumes
+        from it."""
+        if self._pre_jit is None:
+            return context
+        pre = self._pre_jit(context)
+        if self._mesh is not None:
+            pre = jax.device_put(pre, self._cache_sharding)
+        return {**context, "pre": pre}
+
+    # the inner pipeline owns the staging depth and (for prefetch="auto")
+    # the tuner; mirroring them as properties lets evaluate_prefetched
+    # treat this evaluator exactly like a PipelinedEvaluator
+    @property
+    def prefetch_depth(self) -> int:
+        return self._inner.prefetch_depth
+
+    @prefetch_depth.setter
+    def prefetch_depth(self, depth) -> None:
+        self._inner.prefetch_depth = int(depth)
+
+    @property
+    def auto_tuner(self):
+        return self._inner.auto_tuner
+
+    @property
+    def auto_report(self):
+        return self._inner.auto_report
+
+    @auto_report.setter
+    def auto_report(self, report) -> None:
+        self._inner.auto_report = report
 
     # context lives on the inner evaluator (single source of truth; it owns
     # the device placement / context_specs resharding)
@@ -569,51 +776,101 @@ class SuffixEvaluator:
         return self._inner.context
 
     def set_context(self, context) -> None:
-        """Swap params/batch context; cached prefixes are invalidated."""
-        self._inner.set_context(context)
-        self._prefix_cache.clear()
+        """Swap params/batch context; cached prefixes are invalidated (they
+        were computed from the old params/batch) and the mask-independent
+        head fold is recomputed from the new context."""
+        self._inner.set_context(self._with_pre(context))
+        self.trie.clear()
 
     def begin_step(self, base_masks: M.MaskTree) -> None:
         """Fix the outer step's base mask tree (what prefixes are computed
-        from) and drop cached prefixes.  The trial loop calls this once per
-        step, before any sited chunk is staged."""
-        self._base_masks = {k: np.asarray(v, dtype=np.float32)
-                            for k, v in base_masks.items()}
-        self._prefix_cache.clear()
+        from) and selectively invalidate the trie.  The trial loop calls
+        this once per step, before any sited chunk is staged.
+
+        A trie entry at depth ``d`` folds segments ``[0, d)``, so it reads
+        exactly the base masks of sites with segment < d: diffing the new
+        base tree against the previous step's, entries with
+        ``d <= min(changed segments)`` are still byte-identical prefixes and
+        survive.  A BCD step that only flipped coordinates at/below the
+        deepest cut (the common case late in a sweep) therefore keeps its
+        whole chain warm."""
+        new = {k: np.asarray(v, dtype=np.float32)
+               for k, v in base_masks.items()}
+        if self._base_masks is None or set(new) != set(self._base_masks):
+            self.trie.clear()
+        elif len(self.trie):
+            changed = [self._split.site_segment[k] for k in new
+                       if not np.array_equal(new[k], self._base_masks[k])]
+            if changed:
+                min_seg = min(changed)
+                self.trie.keep_where(lambda d: d <= min_seg)
+        self._base_masks = new
+        self._base_dev = None
 
     def prefix_fraction(self, site: str) -> float:
         return self._split.prefix_fraction[site]
 
     # ----------------------------------------------------------- internals
 
-    def _prefix_for(self, site: str):
-        seg = self._split.site_segment[site]
-        cached = self._prefix_cache.get(seg)
-        if cached is not None:
-            return cached
+    def _base_masks_dev(self) -> dict:
         if self._base_masks is None:
             raise RuntimeError(
                 "SuffixEvaluator.begin_step(base_masks) must be called "
                 "before sited evaluation (the prefix needs the step's base "
                 "mask tree)")
-        jit_fn = self._prefix_jits.get(seg)
-        if jit_fn is None:
-            jit_fn = jax.jit(
-                functools.partial(self._split.prefix, self._segment_site[seg]))
-            self._prefix_jits[seg] = jit_fn
-        base = {k: jnp.asarray(v) for k, v in self._base_masks.items()}
-        cached = jit_fn(base, self.context)
+        if self._base_dev is None:
+            self._base_dev = {k: jnp.asarray(v)
+                              for k, v in self._base_masks.items()}
+        return self._base_dev
+
+    def covered_fraction(self, site: str) -> float:
+        """Prefix-FLOP fraction already resident in the trie for a cut at
+        ``site``'s segment — the planner prices suffix mode with only the
+        *incremental* prefix cost (cut fraction minus this)."""
+        seg = self._split.site_segment[site]
+        live = [d for d in self.trie.depths() if d <= seg]
+        if not live:
+            return 0.0
+        anc_site = self._segment_site.get(max(live))
+        if anc_site is None:
+            return 0.0
+        return self._split.prefix_fraction[anc_site]
+
+    def _pin(self, cached):
         if self._mesh is not None:
             # pin the cache batch-sharded: suffix dispatches read it in
             # place (in_axes=None) — it is never gathered across "batch"
-            cached = jax.device_put(cached, self._cache_sharding)
-        # site-major consumption: chunks of earlier segments are already
-        # staged, and their in-flight dispatches keep their own references —
-        # dropping ours lets the device free each prefix as soon as its
-        # group drains
-        for old in [k for k in self._prefix_cache if k < seg]:
-            del self._prefix_cache[old]
-        self._prefix_cache[seg] = cached
+            return jax.device_put(cached, self._cache_sharding)
+        return cached
+
+    def _prefix_for(self, site: str):
+        seg = self._split.site_segment[site]
+        hit = self.trie.lookup(seg)
+        if hit is not None and hit[0] == seg:
+            self.trie.hits += 1
+            return hit[1]
+        base = self._base_masks_dev()
+        if hit is not None and self._split.prefix_ext is not None:
+            # deepest-ancestor extension: fold only segments [hit_depth, seg)
+            from_seg, ancestor = hit
+            key = (from_seg, seg)
+            jit_fn = self._prefix_ext_jits.get(key)
+            if jit_fn is None:
+                jit_fn = jax.jit(functools.partial(
+                    self._split.prefix_ext, self._segment_site[from_seg],
+                    self._segment_site[seg]))
+                self._prefix_ext_jits[key] = jit_fn
+            cached = self._pin(jit_fn(base, ancestor, self.context))
+            self.trie.extensions += 1
+        else:
+            jit_fn = self._prefix_jits.get(seg)
+            if jit_fn is None:
+                jit_fn = jax.jit(functools.partial(
+                    self._split.prefix, self._segment_site[seg]))
+                self._prefix_jits[seg] = jit_fn
+            cached = self._pin(jit_fn(base, self.context))
+            self.trie.misses += 1
+        self.trie.insert(seg, cached)
         return cached
 
     def _suffix_for(self, site: str):
@@ -622,7 +879,8 @@ class SuffixEvaluator:
         if jit_fn is None:
             routed = _with_stacked_route(
                 functools.partial(self._split.suffix,
-                                  self._segment_site[seg]))
+                                  self._segment_site[seg]),
+                fused=self.fused_kernels)
             # masks stack donated, prefix cache and context read-only
             jit_fn = jax.jit(jax.vmap(routed, in_axes=(0, None, None)),
                              donate_argnums=_donate_mask_arg())
@@ -673,23 +931,45 @@ def plan_sited_chunks(evaluator: SuffixEvaluator, indices: np.ndarray,
     Returns ``(order, chunks)``: ``order`` is a permutation of candidate
     positions — grouped by the *cut segment* of each candidate's earliest
     touched site, sampling order preserved within a group — and ``chunks``
-    is ``[(site | None, start, stop)]`` bounds into ``order`` that never
-    straddle a group, so every chunk shares one prefix.  ``site is None``
-    marks chunks the cost model sent down the full-forward fallback
-    (shallow cut or undersized chunk)."""
+    is ``[(site | None, start, stop)]`` bounds into ``order``.  Sited
+    chunks never straddle a group, so every sited chunk shares one prefix;
+    groups are emitted depth-ascending, so the trie extends each prefix
+    from its predecessor instead of recomputing from the input (the trie
+    locality ``core.bcd._scan_sited`` relies on).  ``site is None`` marks
+    chunks the cost model sent down the full-forward fallback (shallow cut
+    or undersized chunk); runs of adjacent fallback chunks are coalesced
+    back up to ``chunk_size`` (``masks.coalesce_fallback_chunks``) so a
+    fragmented depth mix doesn't degrade the inner pipeline into ragged
+    dispatches.
+
+    Suffix-vs-fallback pricing is trie-aware: the cost model sees the cut's
+    prefix fraction *and* the fraction already resident in the trie
+    (``SuffixEvaluator.covered_fraction``), so a warm trie makes suffix
+    mode cheaper than the analytic cold-start estimate.  The plan must be
+    built after :meth:`SuffixEvaluator.begin_step` — surviving entries are
+    part of the price."""
     split = evaluator._split
     order, groups = M.group_blocks_by_site(indices, layout,
                                            split.site_segment)
-    chunks = []
+    raw = []
+    planned_cover = 0.0   # prefixes earlier planned chunks will have cached
     for seg, g0, g1 in groups:
         site = evaluator._segment_site.get(seg)
         frac = split.prefix_fraction[site] if site is not None else 0.0
+        covered = 0.0
+        if site is not None:
+            covered = min(max(evaluator.covered_fraction(site),
+                              planned_cover), frac)
+        group_sited = False
         for s, e in M.chunk_bounds(g1 - g0, chunk_size):
             n = e - s
             use = site is not None and \
-                evaluator.cost_model.use_suffix(frac, n)
-            chunks.append((site if use else None, g0 + s, g0 + e))
-    return order, chunks
+                evaluator.cost_model.use_suffix(frac, n, covered)
+            group_sited = group_sited or use
+            raw.append((site if use else None, g0 + s, g0 + e))
+        if group_sited:
+            planned_cover = max(planned_cover, frac)
+    return order, M.coalesce_fallback_chunks(raw, chunk_size)
 
 
 def materialize_sited(flat: np.ndarray, layout: list, indices: np.ndarray,
@@ -715,6 +995,8 @@ def make_evaluator(
     prefetch: Union[int, str] = 1,
     split: Optional[SplitEval] = None,
     cost_model=None,
+    trie_budget_bytes: Optional[int] = None,
+    fused_kernels: bool = True,
 ) -> CandidateEvaluator:
     """Factory: ``backend`` in {'sequential','batched','sharded',
     'pipelined','suffix'}.
@@ -727,13 +1009,16 @@ def make_evaluator(
     unless a mesh is passed.  ``context_specs`` (see
     :func:`context_batch_specs`) shards the context over the mesh — the
     joint candidate×batch layout.  ``prefetch`` is a depth or ``"auto"``
-    (measured-rate tuning, pipelined only).  ``cost_model`` overrides the
-    suffix backend's per-site fallback policy.
+    (measured-rate tuning; pipelined and suffix).  ``cost_model`` overrides
+    the
+    suffix backend's per-site fallback policy; ``trie_budget_bytes`` bounds
+    its prefix-trie residency and ``fused_kernels`` gates the fused TPU
+    suffix megakernels (both suffix-only).
     """
-    if backend != "pipelined" and prefetch == "auto":
+    if backend not in ("pipelined", "suffix") and prefetch == "auto":
         raise ValueError(
-            f"prefetch='auto' requires the pipelined backend; the "
-            f"{backend!r} backend has no staging pipeline to tune "
+            f"prefetch='auto' requires a staging pipeline (pipelined or "
+            f"suffix backend); the {backend!r} backend has none to tune "
             "(integer prefetch values are ignored as a no-op hint)")
     if backend == "sequential":
         if eval_acc is None:
@@ -745,7 +1030,9 @@ def make_evaluator(
                              "make_suffix_eval_fns() bundle")
         return SuffixEvaluator(split, pad_to=pad_to, context=context,
                                mesh=mesh, context_specs=context_specs,
-                               prefetch=prefetch, cost_model=cost_model)
+                               prefetch=prefetch, cost_model=cost_model,
+                               trie_budget_bytes=trie_budget_bytes,
+                               fused_kernels=fused_kernels)
     if backend in ("batched", "sharded", "pipelined"):
         if eval_fn is None:
             raise ValueError(f"{backend} backend needs a traceable eval_fn")

@@ -42,6 +42,31 @@ def stacked_route_active() -> bool:
     return getattr(_ROUTE_STATE, "on", False)
 
 
+@contextlib.contextmanager
+def fused_suffix_route(interpret: bool = False):
+    """Trace-time hint (thread-local): inside this context, models fold a
+    hard-mask activation gate into the adjacent conv/matmul via the fused
+    Pallas entry points (``ops.masked_act_conv3x3_routed`` /
+    ``ops.masked_act_matmul_routed``) instead of the gate-then-dispatch
+    pair — the gated tensor never round-trips HBM.  The suffix engine
+    (``core.engine.SuffixEvaluator``) arms this while tracing its suffix
+    jits; soft/poly sites and non-TPU backends fall through to the plain
+    path.  ``interpret=True`` forces the fused kernels in Pallas interpret
+    mode regardless of backend — CPU parity tests only."""
+    prev = getattr(_ROUTE_STATE, "fused", None)
+    _ROUTE_STATE.fused = "interpret" if interpret else "device"
+    try:
+        yield
+    finally:
+        _ROUTE_STATE.fused = prev
+
+
+def fused_route_mode() -> Optional[str]:
+    """``None`` (off), ``"device"`` (fuse where Pallas runs natively), or
+    ``"interpret"`` (force interpret-mode kernels — tests)."""
+    return getattr(_ROUTE_STATE, "fused", None)
+
+
 @dataclasses.dataclass(frozen=True)
 class MaskSite:
     """One maskable nonlinearity site.

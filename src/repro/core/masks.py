@@ -135,6 +135,43 @@ def chunk_bounds(n: int, chunk_size: int) -> list:
     return [(s, min(s + chunk_size, n)) for s in range(0, n, chunk_size)]
 
 
+def coalesce_fallback_chunks(chunks: list, chunk_size: int) -> list:
+    """Merge runs of adjacent fallback chunks in a sited plan.
+
+    ``chunks``: ``[(site | None, start, stop)]`` with contiguous ascending
+    bounds (``plan_sited_chunks`` raw output).  Sited chunks pass through
+    untouched — they must never straddle a prefix group.  Consecutive
+    ``site is None`` chunks carry no shared-prefix constraint (the inner
+    pipeline runs each candidate's full forward), so their spans are merged
+    and re-split at ``chunk_size``: a depth mix that fragments into many
+    small per-group fallback tails then costs ceil(total/chunk) dispatches
+    instead of one ragged dispatch per group."""
+    out: list = []
+    run_start = run_stop = None
+    for site, s, e in chunks:
+        if site is None:
+            if run_stop == s:
+                run_stop = e
+            else:
+                if run_start is not None:
+                    out.extend((None, run_start + cs, run_start + ce)
+                               for cs, ce in chunk_bounds(
+                                   run_stop - run_start, chunk_size))
+                run_start, run_stop = s, e
+            continue
+        if run_start is not None:
+            out.extend((None, run_start + cs, run_start + ce)
+                       for cs, ce in chunk_bounds(run_stop - run_start,
+                                                  chunk_size))
+            run_start = run_stop = None
+        out.append((site, s, e))
+    if run_start is not None:
+        out.extend((None, run_start + cs, run_start + ce)
+                   for cs, ce in chunk_bounds(run_stop - run_start,
+                                              chunk_size))
+    return out
+
+
 def materialize_chunks(flat: np.ndarray, layout: list, indices: np.ndarray,
                        chunk_size: int):
     """Lazy chunk producer for the trial loop: yields one stacked candidate

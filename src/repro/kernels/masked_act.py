@@ -194,3 +194,259 @@ def masked_act_2d_batched(
     if pr or pc:
         out = out[:, :rows, :cols]
     return out
+
+
+# ------------------------------------------------------ fused suffix kernels
+#
+# The suffix engine's hot shape: a masked-activation gate whose output feeds
+# straight into a matmul (LM FFN down-projection) or a 3x3 conv (ResNet block
+# body).  Unfused, the gate kernel writes the gated tensor to HBM and the
+# matmul/conv reads it right back — for shallow cuts that round-trip is most
+# of the suffix's byte traffic.  These kernels keep the gated tile in VMEM
+# and feed the MXU directly (jnp.dot with a float32 accumulator, per the TPU
+# guide).  Replacement is identity-only (poly2 sites keep the unfused pair)
+# and weights are candidate-shared.
+#
+# VMEM footprint: the matmul kernel holds (block_rows, K) + (K, N) per
+# program; the conv kernel holds one sample's (H, W, Cin) site plus the
+# (Ho*Wo, 9*Cin) patch matrix and (9*Cin, Cout) weights — sized for
+# CIFAR-scale stages (≤32×32×512 f32 ≈ 2 MB), not ImageNet stems.
+
+
+def _masked_act_matmul_kernel(x_ref, m_ref, w_ref, o_ref, *, kind: str):
+    x = x_ref[...]                       # (br, K)
+    m = m_ref[...].astype(x.dtype)       # (1, K) -> broadcast over rows
+    g = m * _act_tile(x, kind) + (1.0 - m) * x
+    o_ref[...] = jnp.dot(g, w_ref[...],
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+def _masked_act_matmul_mul_kernel(x_ref, m_ref, u_ref, w_ref, o_ref,
+                                  *, kind: str):
+    x = x_ref[...]
+    m = m_ref[...].astype(x.dtype)
+    g = (m * _act_tile(x, kind) + (1.0 - m) * x) * u_ref[...]
+    o_ref[...] = jnp.dot(g, w_ref[...],
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+def masked_act_matmul_2d(
+    x: jax.Array,
+    mask: jax.Array,
+    w: jax.Array,
+    mul: jax.Array | None = None,
+    *,
+    kind: str = "relu",
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused ``(m·act(x) + (1−m)·x) [· mul] @ w`` over a 2D (rows, K) array.
+
+    mask: (K,) 0/1; w: (K, N) candidate-shared weights; mul: optional
+    (rows, K) second operand (gated-FFN up branch, multiplied after the
+    gate, before the matmul).  The gated tensor never leaves VMEM.
+    """
+    rows, k = x.shape
+    assert mask.shape == (k,), (mask.shape, x.shape)
+    assert w.shape[0] == k, (w.shape, x.shape)
+    n_out = w.shape[1]
+    br = min(block_rows, rows)
+    pr = (-rows) % br
+    xp = jnp.pad(x, ((0, pr), (0, 0))) if pr else x
+    grid = (xp.shape[0] // br,)
+    x_spec = pl.BlockSpec((br, k), lambda i: (i, 0))
+    m_spec = pl.BlockSpec((1, k), lambda i: (0, 0))
+    w_spec = pl.BlockSpec((k, n_out), lambda i: (0, 0))
+    out_spec = pl.BlockSpec((br, n_out), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((xp.shape[0], n_out), x.dtype)
+    if mul is None:
+        fn = pl.pallas_call(
+            functools.partial(_masked_act_matmul_kernel, kind=kind),
+            grid=grid, in_specs=[x_spec, m_spec, w_spec],
+            out_specs=out_spec, out_shape=out_shape, interpret=interpret)
+        out = fn(xp, mask.reshape(1, -1), w)
+    else:
+        up = jnp.pad(mul, ((0, pr), (0, 0))) if pr else mul
+        fn = pl.pallas_call(
+            functools.partial(_masked_act_matmul_mul_kernel, kind=kind),
+            grid=grid, in_specs=[x_spec, m_spec, x_spec, w_spec],
+            out_specs=out_spec, out_shape=out_shape, interpret=interpret)
+        out = fn(xp, mask.reshape(1, -1), up, w)
+    return out[:rows] if pr else out
+
+
+def _masked_act_matmul_kernel_b(x_ref, m_ref, w_ref, o_ref, *, kind: str):
+    x = x_ref[0]                         # (br, K) of one candidate
+    m = m_ref[0].astype(x.dtype)         # (1, K) — candidate's mask row
+    g = m * _act_tile(x, kind) + (1.0 - m) * x
+    o_ref[0] = jnp.dot(g, w_ref[...],
+                       preferred_element_type=jnp.float32
+                       ).astype(o_ref.dtype)
+
+
+def _masked_act_matmul_mul_kernel_b(x_ref, m_ref, u_ref, w_ref, o_ref,
+                                    *, kind: str):
+    x = x_ref[0]
+    m = m_ref[0].astype(x.dtype)
+    g = (m * _act_tile(x, kind) + (1.0 - m) * x) * u_ref[0]
+    o_ref[0] = jnp.dot(g, w_ref[...],
+                       preferred_element_type=jnp.float32
+                       ).astype(o_ref.dtype)
+
+
+def masked_act_matmul_2d_batched(
+    x: jax.Array,
+    mask: jax.Array,
+    w: jax.Array,
+    mul: jax.Array | None = None,
+    *,
+    kind: str = "relu",
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Stacked-candidate :func:`masked_act_matmul_2d`.
+
+    x: (N, rows, K); mask: (N, K) — one mask row per candidate; w: (K, N_out)
+    shared; mul: optional (N, rows, K).
+    """
+    n, rows, k = x.shape
+    assert mask.shape == (n, k), (mask.shape, x.shape)
+    n_out = w.shape[1]
+    br = min(block_rows, rows)
+    pr = (-rows) % br
+    xp = jnp.pad(x, ((0, 0), (0, pr), (0, 0))) if pr else x
+    grid = (n, xp.shape[1] // br)
+    x_spec = pl.BlockSpec((1, br, k), lambda b, i: (b, i, 0))
+    m_spec = pl.BlockSpec((1, 1, k), lambda b, i: (b, 0, 0))
+    w_spec = pl.BlockSpec((k, n_out), lambda b, i: (0, 0))
+    out_spec = pl.BlockSpec((1, br, n_out), lambda b, i: (b, i, 0))
+    out_shape = jax.ShapeDtypeStruct((n, xp.shape[1], n_out), x.dtype)
+    if mul is None:
+        fn = pl.pallas_call(
+            functools.partial(_masked_act_matmul_kernel_b, kind=kind),
+            grid=grid, in_specs=[x_spec, m_spec, w_spec],
+            out_specs=out_spec, out_shape=out_shape, interpret=interpret)
+        out = fn(xp, mask.reshape(n, 1, k), w)
+    else:
+        up = jnp.pad(mul, ((0, 0), (0, pr), (0, 0))) if pr else mul
+        fn = pl.pallas_call(
+            functools.partial(_masked_act_matmul_mul_kernel_b, kind=kind),
+            grid=grid, in_specs=[x_spec, m_spec, x_spec, w_spec],
+            out_specs=out_spec, out_shape=out_shape, interpret=interpret)
+        out = fn(xp, mask.reshape(n, 1, k), up, w)
+    return out[:, :rows] if pr else out
+
+
+def _same_pads(size: int, stride: int):
+    """XLA SAME-padding geometry for a 3-tap window: (out, lo, hi)."""
+    out = -(-size // stride)
+    total = max((out - 1) * stride + 3 - size, 0)
+    lo = total // 2
+    return out, lo, total - lo
+
+
+def _conv3x3_tile(g, w_flat, *, stride: int, out_dtype):
+    """im2col 3x3 conv of one gated sample g: (H, W, Cin) -> (Ho, Wo, Cout).
+
+    Static-slice decomposition: 9 strided taps concatenated to a
+    (Ho*Wo, 9*Cin) patch matrix, one MXU matmul against the (9*Cin, Cout)
+    flattened weights.  Tap-major (ky, kx, cin) column order matches
+    ``w.reshape(9*Cin, Cout)`` of HWIO weights.
+    """
+    h, wd, cin = g.shape
+    ho, plo_h, phi_h = _same_pads(h, stride)
+    wo, plo_w, phi_w = _same_pads(wd, stride)
+    xp = jnp.pad(g, ((plo_h, phi_h), (plo_w, phi_w), (0, 0)))
+    cols = []
+    for ky in range(3):
+        for kx in range(3):
+            sl = jax.lax.slice(
+                xp, (ky, kx, 0),
+                (ky + (ho - 1) * stride + 1, kx + (wo - 1) * stride + 1, cin),
+                (stride, stride, 1))
+            cols.append(sl.reshape(ho * wo, cin))
+    patches = jnp.concatenate(cols, axis=1)
+    out = jnp.dot(patches, w_flat, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype).reshape(ho, wo, -1)
+
+
+def _masked_act_conv3x3_kernel(x_ref, m_ref, w_ref, o_ref, *, kind: str,
+                               stride: int):
+    x = x_ref[0]                          # (H, W, Cin) — one sample
+    m = m_ref[...].astype(x.dtype)        # (H, W, Cin) — full site mask
+    g = m * _act_tile(x, kind) + (1.0 - m) * x
+    o_ref[0] = _conv3x3_tile(g, w_ref[...], stride=stride,
+                             out_dtype=o_ref.dtype)
+
+
+def _masked_act_conv3x3_kernel_b(x_ref, m_ref, w_ref, o_ref, *, kind: str,
+                                 stride: int):
+    x = x_ref[0, 0]                       # (H, W, Cin) of (cand, sample)
+    m = m_ref[0].astype(x.dtype)          # (H, W, Cin) — candidate's mask
+    g = m * _act_tile(x, kind) + (1.0 - m) * x
+    o_ref[0, 0] = _conv3x3_tile(g, w_ref[...], stride=stride,
+                                out_dtype=o_ref.dtype)
+
+
+def masked_act_conv3x3(
+    x: jax.Array,
+    mask: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    kind: str = "relu",
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused gate + SAME 3x3 conv: x (B, H, W, Cin), mask (H, W, Cin) — the
+    paper's full per-pixel site mask, shared over the batch — w HWIO
+    (3, 3, Cin, Cout).  Grid is one program per sample."""
+    b, h, wd, cin = x.shape
+    assert mask.shape == (h, wd, cin), (mask.shape, x.shape)
+    assert w.shape[:3] == (3, 3, cin), (w.shape, x.shape)
+    cout = w.shape[3]
+    ho, _, _ = _same_pads(h, stride)
+    wo, _, _ = _same_pads(wd, stride)
+    fn = pl.pallas_call(
+        functools.partial(_masked_act_conv3x3_kernel, kind=kind,
+                          stride=stride),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, h, wd, cin), lambda i: (i, 0, 0, 0)),
+                  pl.BlockSpec((h, wd, cin), lambda i: (0, 0, 0)),
+                  pl.BlockSpec((9 * cin, cout), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, ho, wo, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, ho, wo, cout), x.dtype),
+        interpret=interpret)
+    return fn(x, mask, w.reshape(9 * cin, cout))
+
+
+def masked_act_conv3x3_batched(
+    x: jax.Array,
+    mask: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    kind: str = "relu",
+    interpret: bool = False,
+) -> jax.Array:
+    """Stacked-candidate :func:`masked_act_conv3x3`: x (N, B, H, W, Cin),
+    mask (N, H, W, Cin) — one full site mask per candidate; w shared."""
+    n, b, h, wd, cin = x.shape
+    assert mask.shape == (n, h, wd, cin), (mask.shape, x.shape)
+    cout = w.shape[3]
+    ho, _, _ = _same_pads(h, stride)
+    wo, _, _ = _same_pads(wd, stride)
+    fn = pl.pallas_call(
+        functools.partial(_masked_act_conv3x3_kernel_b, kind=kind,
+                          stride=stride),
+        grid=(n, b),
+        in_specs=[pl.BlockSpec((1, 1, h, wd, cin),
+                               lambda c, i: (c, i, 0, 0, 0)),
+                  pl.BlockSpec((1, h, wd, cin), lambda c, i: (c, 0, 0, 0)),
+                  pl.BlockSpec((9 * cin, cout), lambda c, i: (0, 0))],
+        out_specs=pl.BlockSpec((1, 1, ho, wo, cout),
+                               lambda c, i: (c, i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b, ho, wo, cout), x.dtype),
+        interpret=interpret)
+    return fn(x, mask, w.reshape(9 * cin, cout))

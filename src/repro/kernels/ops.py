@@ -13,12 +13,21 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .masked_act import masked_act_2d, masked_act_2d_batched
+from .masked_act import (masked_act_2d, masked_act_2d_batched,
+                         masked_act_conv3x3 as _fused_conv3x3,
+                         masked_act_conv3x3_batched as _fused_conv3x3_b,
+                         masked_act_matmul_2d, masked_act_matmul_2d_batched)
 from .rwkv6_scan import rwkv6_scan as _rwkv6_pallas
 
 
 def _use_pallas() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def fused_dispatch_enabled() -> bool:
+    """Whether the fused suffix megakernels run natively here (models gate
+    their fused-route branches on this; interpret-mode tests bypass it)."""
+    return _use_pallas()
 
 
 def masked_act(x, mask, *, kind: str = "relu", poly=None,
@@ -158,6 +167,186 @@ def masked_act_sited_routed(x, mask, *, kind: str = "relu", poly=None,
     """
     f = _routed_sited(kind, bool(interpret), poly is not None)
     return f(x, mask) if poly is None else f(x, mask, poly)
+
+
+MASKED_ACT_FUSED_KINDS = ("relu", "gelu", "silu", "sqrelu")
+
+
+def masked_act_matmul(x, mask, w, mul=None, *, kind: str = "relu",
+                      force_pallas: bool = False, interpret: bool = False):
+    """Fused ``gate(x) [· mul] @ w`` — the suffix megakernel for a masked
+    activation feeding a matmul (LM FFN down-projection).
+
+    x: (..., K); mask: (K,); w: (K, N) candidate-shared; mul: optional
+    (..., K).  Off-TPU (without force) this is the unfused oracle — the
+    exact primitives the plain forward traces, so CPU dispatch is bitwise
+    inert.
+    """
+    if not (force_pallas or _use_pallas()):
+        return ref.masked_act_matmul_ref(x, mask, w, mul, kind=kind)
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    u2 = None if mul is None else mul.reshape(-1, shape[-1])
+    out = masked_act_matmul_2d(x2, mask, w, u2, kind=kind,
+                               interpret=interpret or not _use_pallas())
+    return out.reshape(shape[:-1] + (w.shape[-1],))
+
+
+def masked_act_matmul_batched(x, masks, w, mul=None, *, kind: str = "relu",
+                              force_pallas: bool = False,
+                              interpret: bool = False):
+    """Stacked-candidate :func:`masked_act_matmul`: x (N, ..., K), masks
+    (N, K) — one mask row per candidate — w shared, mul optional
+    (N, ..., K)."""
+    n = masks.shape[0]
+    assert x.shape[0] == n, (x.shape, masks.shape)
+    if not (force_pallas or _use_pallas()):
+        m = masks.reshape((n,) + (1,) * (x.ndim - 2) + (masks.shape[-1],))
+        g = ref.masked_act_ref(x, m, kind=kind)
+        if mul is not None:
+            g = g * mul
+        return g @ w
+    shape = x.shape
+    x3 = x.reshape(n, -1, shape[-1])
+    u3 = None if mul is None else mul.reshape(n, -1, shape[-1])
+    out = masked_act_matmul_2d_batched(
+        x3, masks, w, u3, kind=kind, interpret=interpret or not _use_pallas())
+    return out.reshape(shape[:-1] + (w.shape[-1],))
+
+
+def masked_act_conv3x3(x, mask, w, *, stride: int = 1, kind: str = "relu",
+                       force_pallas: bool = False, interpret: bool = False):
+    """Fused ``conv3x3(gate(x))`` — the suffix megakernel for a CNN's
+    masked ReLU feeding a SAME 3x3 conv.
+
+    x: (B, H, W, Cin); mask: (H, W, Cin) full per-pixel site mask; w HWIO.
+    Off-TPU (without force) this is the unfused oracle (gate +
+    lax.conv)."""
+    if not (force_pallas or _use_pallas()):
+        return ref.masked_act_conv3x3_ref(x, mask, w, stride=stride,
+                                          kind=kind)
+    return _fused_conv3x3(x, mask, w, stride=stride, kind=kind,
+                          interpret=interpret or not _use_pallas())
+
+
+def masked_act_conv3x3_batched(x, masks, w, *, stride: int = 1,
+                               kind: str = "relu",
+                               force_pallas: bool = False,
+                               interpret: bool = False):
+    """Stacked-candidate :func:`masked_act_conv3x3`: x (N, B, H, W, Cin),
+    masks (N, H, W, Cin), w shared."""
+    n = masks.shape[0]
+    assert x.shape[0] == n, (x.shape, masks.shape)
+    if not (force_pallas or _use_pallas()):
+        m = masks[:, None].astype(x.dtype)
+        g = m * ref._act(x, kind) + (1.0 - m) * x
+        conv = functools.partial(
+            jax.lax.conv_general_dilated, rhs=w,
+            window_strides=(stride, stride), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return jax.vmap(lambda g_i: conv(g_i))(g)
+    return _fused_conv3x3_b(x, masks, w, stride=stride, kind=kind,
+                            interpret=interpret or not _use_pallas())
+
+
+# Routed (custom_vmap) fused entries: same contract as
+# masked_act_sited_routed — under the suffix engine's candidate vmap the
+# whole fused site lowers to the stacked kernel, broadcasting an unbatched
+# x/mul (the cached prefix at the cut site) across the candidate axis.
+# Weights are always candidate-shared (ctx rides with in_axes=None).
+
+
+def _bcast_cand(axis_size, batched, v):
+    return v if batched else jnp.broadcast_to(v[None],
+                                              (axis_size,) + v.shape)
+
+
+@functools.lru_cache(maxsize=None)
+def _routed_matmul(kind: str, interpret: bool, has_mul: bool):
+    from jax import custom_batching
+
+    if has_mul:
+        @custom_batching.custom_vmap
+        def f(x, mask, w, mul):
+            return masked_act_matmul(x, mask, w, mul, kind=kind,
+                                     force_pallas=True, interpret=interpret)
+
+        @f.def_vmap
+        def _rule(axis_size, in_batched, x, mask, w, mul):
+            xb, mb, wb, ub = in_batched
+            if wb:
+                raise NotImplementedError(
+                    "fused-matmul weights are candidate-shared; a batched "
+                    "weight axis has no stacked-kernel layout")
+            x = _bcast_cand(axis_size, xb, x)
+            mask = _bcast_cand(axis_size, mb, mask)
+            mul = _bcast_cand(axis_size, ub, mul)
+            out = masked_act_matmul_batched(x, mask, w, mul, kind=kind,
+                                            force_pallas=True,
+                                            interpret=interpret)
+            return out, True
+    else:
+        @custom_batching.custom_vmap
+        def f(x, mask, w):
+            return masked_act_matmul(x, mask, w, kind=kind,
+                                     force_pallas=True, interpret=interpret)
+
+        @f.def_vmap
+        def _rule(axis_size, in_batched, x, mask, w):
+            xb, mb, wb = in_batched
+            if wb:
+                raise NotImplementedError(
+                    "fused-matmul weights are candidate-shared; a batched "
+                    "weight axis has no stacked-kernel layout")
+            x = _bcast_cand(axis_size, xb, x)
+            mask = _bcast_cand(axis_size, mb, mask)
+            out = masked_act_matmul_batched(x, mask, w, kind=kind,
+                                            force_pallas=True,
+                                            interpret=interpret)
+            return out, True
+    return f
+
+
+def masked_act_matmul_routed(x, mask, w, mul=None, *, kind: str = "relu",
+                             interpret: bool = False):
+    """:func:`masked_act_matmul` with a custom-vmap rule lowering a
+    candidate-axis vmap to the stacked fused kernel.  Not differentiable —
+    suffix-engine tracing only (``linearize.fused_suffix_route``)."""
+    f = _routed_matmul(kind, bool(interpret), mul is not None)
+    return f(x, mask, w) if mul is None else f(x, mask, w, mul)
+
+
+@functools.lru_cache(maxsize=None)
+def _routed_conv3x3(kind: str, stride: int, interpret: bool):
+    from jax import custom_batching
+
+    @custom_batching.custom_vmap
+    def f(x, mask, w):
+        return masked_act_conv3x3(x, mask, w, stride=stride, kind=kind,
+                                  force_pallas=True, interpret=interpret)
+
+    @f.def_vmap
+    def _rule(axis_size, in_batched, x, mask, w):
+        xb, mb, wb = in_batched
+        if wb:
+            raise NotImplementedError(
+                "fused-conv weights are candidate-shared; a batched weight "
+                "axis has no stacked-kernel layout")
+        x = _bcast_cand(axis_size, xb, x)
+        mask = _bcast_cand(axis_size, mb, mask)
+        out = masked_act_conv3x3_batched(x, mask, w, stride=stride,
+                                         kind=kind, force_pallas=True,
+                                         interpret=interpret)
+        return out, True
+    return f
+
+
+def masked_act_conv3x3_routed(x, mask, w, *, stride: int = 1,
+                              kind: str = "relu", interpret: bool = False):
+    """:func:`masked_act_conv3x3` with a custom-vmap rule lowering a
+    candidate-axis vmap to the stacked fused kernel.  Not differentiable —
+    suffix-engine tracing only (``linearize.fused_suffix_route``)."""
+    return _routed_conv3x3(kind, int(stride), bool(interpret))(x, mask, w)
 
 
 def rwkv6(r, k, v, w, u, state, *, chunk: int = 32,

@@ -1,6 +1,7 @@
 """Pure-jnp oracles for every kernel in this package."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -35,6 +36,36 @@ def masked_act_ref(x, mask, kind: str = "relu", poly=None):
         lin = a * x * x + b * x + c
     m = mask.astype(x.dtype)
     return m * act + (1.0 - m) * lin
+
+
+def masked_act_matmul_ref(x, mask, w, mul=None, *, kind: str = "relu"):
+    """Oracle for the fused gate→matmul suffix kernel: the unfused pair
+    ``masked_act_ref(x, mask) [· mul] @ w`` (identity replacement only —
+    poly2 sites never take the fused route).
+
+    x: (..., K); mask: (K,); w: (K, N); mul: optional (..., K) gated-FFN up
+    branch, multiplied after the gate, before the matmul.
+    """
+    g = masked_act_ref(x, mask, kind=kind)
+    if mul is not None:
+        g = g * mul
+    return g @ w
+
+
+def masked_act_conv3x3_ref(x, mask, w, *, stride: int = 1,
+                           kind: str = "relu"):
+    """Oracle for the fused gate→3x3-conv suffix kernel: the unfused pair —
+    full-site gate then ``lax.conv_general_dilated`` (SAME, NHWC/HWIO),
+    exactly the primitives the CNN's unfused forward traces.
+
+    x: (B, H, W, Cin); mask: (H, W, Cin) per-pixel site mask (batch-shared);
+    w: (3, 3, Cin, Cout).
+    """
+    m = mask.astype(x.dtype)
+    g = m * _act(x, kind) + (1.0 - m) * x
+    return jax.lax.conv_general_dilated(
+        g, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
 
 
 def rwkv6_chunk_ref(r, k, v, w, u, state):

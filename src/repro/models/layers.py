@@ -169,6 +169,18 @@ def ffn(p, x, mask, site: linearize.MaskSite, *, poly=None, soft=False):
     mask site (matching DESIGN §4).
     """
     h = x @ (p["w_gate"] if "w_gate" in p else p["w_up"])
+    mode = linearize.fused_route_mode()
+    if mode is not None and not soft and poly is None:
+        # Suffix-engine tracing: gate [· up-branch] · w_down as one Pallas
+        # megakernel — the gated (B, S, F) tensor never round-trips HBM
+        # between the mask select and the down-projection.
+        from repro.kernels import ops
+        interpret = mode == "interpret"
+        if interpret or ops.fused_dispatch_enabled():
+            mul = (x @ p["w_up"]) if "w_gate" in p else None
+            return ops.masked_act_matmul_routed(
+                h, mask, p["w_down"], mul, kind=site.kind,
+                interpret=interpret)
     a = linearize.apply_masked_act(h, mask, site, poly=poly, soft=soft)
     if "w_gate" in p:
         a = a * (x @ p["w_up"])

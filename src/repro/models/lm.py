@@ -286,16 +286,25 @@ class LM:
 
     def forward(self, params, masks, tokens, *, prefix_embeds=None,
                 poly=None, soft=False, cache=None, cache_len=0, remat=False,
-                return_hidden=False):
+                return_hidden=False, pre=None):
         """Returns (logits (B,S,V), new_cache); with return_hidden=True the
         first element is the final-norm hidden state (B,S,D) instead (the
-        caller owns the head matmul — e.g. chunked CE, §Perf)."""
+        caller owns the head matmul — e.g. chunked CE, §Perf).
+
+        ``pre``: a cached :meth:`forward_pre` result (the mask-independent
+        embed fold) — the fold resumes after segment 0 and ``tokens`` is
+        only consumed for its length.  Eval-path only (mutually exclusive
+        with ``prefix_embeds``)."""
         cfg = self.cfg
         poly = poly or {}
-        x = jnp.take(params["embed"], tokens, axis=0)
-        if prefix_embeds is not None:
-            x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
-        x = self._constrain(x)
+        if pre is not None:
+            x = pre
+        else:
+            x = jnp.take(params["embed"], tokens, axis=0)
+            if prefix_embeds is not None:
+                x = jnp.concatenate([prefix_embeds.astype(x.dtype), x],
+                                    axis=1)
+            x = self._constrain(x)
         B, S, _ = x.shape
         positions = jnp.broadcast_to(
             (jnp.arange(S) + cache_len)[None, :], (B, S))
@@ -376,35 +385,57 @@ class LM:
         return tuple(s for s in self.site_order() if seg[s] >= cut)
 
     def forward_prefix(self, params, masks, tokens, site, *, poly=None,
-                       soft=False):
+                       soft=False, from_site=None, cached=None):
         """Forward up to (excluding) the segment applying ``site``; returns
-        the cached (B, S, D) boundary hidden state."""
+        the cached (B, S, D) boundary hidden state.
+
+        Multi-depth entry: ``from_site``/``cached`` resume from an earlier
+        prefix's boundary state instead of the token embedding, folding
+        only segments in ``[seg(from_site), seg(site))`` — the prefix-trie
+        extension contract (``prefix_ext(a, b, m, prefix(a)) ==
+        prefix(b)``, same fold over the same segment list)."""
         cfg = self.cfg
         poly = poly or {}
-        cut = self._segment_of_site()[site]
+        seg = self._segment_of_site()
+        cut = seg[site]
+        lo = 0 if from_site is None else seg[from_site]
         H = len(cfg.head_blocks)
-        x = jnp.take(params["embed"], tokens, axis=0)
-        x = self._constrain(x)
+        if from_site is None:
+            x = jnp.take(params["embed"], tokens, axis=0)
+            x = self._constrain(x)
+        else:
+            x = cached
         B, S, _ = x.shape
         positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
         for i, blk in enumerate(cfg.head_blocks):
             if 1 + i >= cut:
                 break
+            if 1 + i < lo:
+                continue
             x, _ = self._layer_apply(blk, params["head"][i], x,
                                      _sub(masks, f"h{i}"),
                                      _sub(poly, f"h{i}"), soft,
                                      positions, None, 0)
-        if 1 + H < cut:
+        if lo <= 1 + H < cut:
             x, _ = self._run_stack(params, masks, x, positions, poly=poly,
                                    soft=soft)
         for i, blk in enumerate(cfg.tail):
             if 2 + H + i >= cut:
                 break
+            if 2 + H + i < lo:
+                continue
             x, _ = self._layer_apply(blk, params["tail"][i], x,
                                      _sub(masks, f"t{i}"),
                                      _sub(poly, f"t{i}"), soft,
                                      positions, None, 0)
         return x
+
+    def forward_pre(self, params, tokens):
+        """Mask-independent head of the network: the segment-0 embed fold
+        (token embedding + constraint).  Computed once per evaluator
+        context and fed back through ``forward(..., pre=...)`` — the
+        "depth-0 prefix" every candidate shares."""
+        return self._constrain(jnp.take(params["embed"], tokens, axis=0))
 
     def forward_suffix(self, params, masks, cached, site, *, poly=None,
                        soft=False):
@@ -471,11 +502,20 @@ class LM:
             return self.forward_prefix(ctx["params"], masks,
                                        ctx["batch"]["tokens"][:, :-1], site)
 
+        def prefix_ext_fn(from_site, site, masks, cached, ctx):
+            return self.forward_prefix(ctx["params"], masks,
+                                       ctx["batch"]["tokens"][:, :-1], site,
+                                       from_site=from_site, cached=cached)
+
         def suffix_fn(site, masks, cached, ctx):
             logits = self.forward_suffix(ctx["params"], masks, cached, site)
             pred = jnp.argmax(logits, -1)
             return jnp.mean((pred == ctx["batch"]["tokens"][:, 1:])
                             .astype(jnp.float32)) * 100.0
+
+        def pre_fn(ctx):
+            return self.forward_pre(ctx["params"],
+                                    ctx["batch"]["tokens"][:, :-1])
 
         return engine.SplitEval(
             prefix=prefix_fn, suffix=suffix_fn,
@@ -483,7 +523,9 @@ class LM:
             site_order=self.site_order(),
             site_segment=self.site_segments(),
             suffix_sites=self.suffix_sites,
-            prefix_fraction=self.site_prefix_fractions())
+            prefix_fraction=self.site_prefix_fractions(),
+            prefix_ext=prefix_ext_fn,
+            pre=pre_fn)
 
     # ------------------------------------------------------- eval closures
     #
@@ -519,7 +561,10 @@ class LM:
         trial chunks smaller than the device count)."""
         def eval_fn(masks, ctx):
             tokens = ctx["batch"]["tokens"]
-            logits, _ = self.forward(ctx["params"], masks, tokens[:, :-1])
+            # "pre" (optional): the mask-independent embed fold, computed
+            # once per context by the evaluator (SplitEval.pre)
+            logits, _ = self.forward(ctx["params"], masks, tokens[:, :-1],
+                                     pre=ctx.get("pre"))
             pred = jnp.argmax(logits, -1)
             return jnp.mean((pred == tokens[:, 1:])
                             .astype(jnp.float32)) * 100.0

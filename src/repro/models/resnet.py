@@ -159,37 +159,75 @@ class CNN:
             x, masks[name], site,
             poly=None if poly is None else poly.get(name), soft=soft)
 
+    def _relu_conv(self, x, masks, name, ply, soft, w, stride=1):
+        """Masked ReLU at ``name`` feeding a 3x3 conv.  Under
+        ``linearize.fused_suffix_route`` (the suffix engine traces its
+        suffix jits with it armed) hard-mask sites run gate + conv as one
+        Pallas megakernel (``kernels.ops.masked_act_conv3x3_routed``) — the
+        gated tensor stays in VMEM instead of round-tripping HBM between
+        two dispatches.  Everywhere else (CPU, soft relaxation, poly2
+        replacement) it is the plain unfused pair."""
+        p = None if ply is None else ply.get(name)
+        mode = linearize.fused_route_mode()
+        if mode is not None and not soft and p is None:
+            from repro.kernels import ops
+            interpret = mode == "interpret"
+            if interpret or ops.fused_dispatch_enabled():
+                return ops.masked_act_conv3x3_routed(
+                    x, masks[name], w, stride=stride, kind="relu",
+                    interpret=interpret)
+        return _conv(self._relu(x, masks, name, ply, soft), w, stride)
+
+    def _stem_pre(self, p, x):
+        """Mask-independent stem fold: input -> the first gate's
+        pre-activation (conv [+ bn]).  Depends only on (params, images), so
+        evaluator backends compute it ONCE per context (``forward_pre``)
+        and every candidate's full forward starts from the cached result
+        (``forward(..., pre=...)``) instead of re-tracing it."""
+        if self.cfg.wide:
+            return _conv(x, p["stem"]["conv"])
+        return _bn(p["stem"]["bn"], _conv(x, p["stem"]["conv"]))
+
+    def _stem_gate(self, p, m, x, ply, soft):
+        """The mask-dependent remainder of the stem segment (no-op for the
+        wide config, whose first gate lives in g0b0)."""
+        if self.cfg.wide:
+            return x
+        return self._relu(x, m, "stem.relu", ply, soft)
+
     def _build_segments(self):
         cfg = self.cfg
         segs = []
-        if cfg.wide:
-            segs.append(("stem", (),
-                         lambda p, m, x, ply, soft:
-                         _conv(x, p["stem"]["conv"])))
-        else:
-            def stem_fn(p, m, x, ply, soft):
-                x = _bn(p["stem"]["bn"], _conv(x, p["stem"]["conv"]))
-                return self._relu(x, m, "stem.relu", ply, soft)
-            segs.append(("stem", ("stem.relu",), stem_fn))
+        # stem = _stem_gate(_stem_pre(x)): the same two folds forward's
+        # pre= entry composes, so full-with-pre traces exactly the
+        # primitives full-from-images traces (bitwise selection contract)
+        segs.append(("stem", () if cfg.wide else ("stem.relu",),
+                     lambda p, m, x, ply, soft:
+                     self._stem_gate(p, m, self._stem_pre(p, x), ply, soft)))
         for si, bi, cin, cout, s, hw in self._block_plan():
             name = f"g{si}b{bi}"
             if cfg.wide:
                 def blk_fn(p, m, x, ply, soft, name=name, s=s):
                     blk = p[name]
+                    # relu1's output feeds both conv1 and the projection
+                    # shortcut, so only relu2 -> conv2 (single consumer)
+                    # is fusable
                     h = self._relu(_bn(blk["bn1"], x), m,
                                    f"{name}.relu1", ply, soft)
                     y = _conv(h, blk["conv1"], s)
-                    y = self._relu(_bn(blk["bn2"], y), m,
-                                   f"{name}.relu2", ply, soft)
-                    y = _conv(y, blk["conv2"])
+                    y = self._relu_conv(_bn(blk["bn2"], y), m,
+                                        f"{name}.relu2", ply, soft,
+                                        blk["conv2"])
                     sc = _conv(h, blk["proj"], s) if "proj" in blk else x
                     return y + sc
             else:
                 def blk_fn(p, m, x, ply, soft, name=name, s=s):
                     blk = p[name]
-                    y = self._relu(_bn(blk["bn1"], _conv(x, blk["conv1"], s)),
-                                   m, f"{name}.relu1", ply, soft)
-                    y = _bn(blk["bn2"], _conv(y, blk["conv2"]))
+                    y = self._relu_conv(_bn(blk["bn1"], _conv(x, blk["conv1"],
+                                                              s)),
+                                        m, f"{name}.relu1", ply, soft,
+                                        blk["conv2"])
+                    y = _bn(blk["bn2"], y)
                     sc = _conv(x, blk["proj"], s) if "proj" in blk else x
                     return self._relu(y + sc, m, f"{name}.relu2", ply, soft)
             segs.append((name, (f"{name}.relu1", f"{name}.relu2"), blk_fn))
@@ -203,11 +241,28 @@ class CNN:
         segs.append(("head", ("final.relu",) if cfg.wide else (), head_fn))
         return segs
 
-    def forward(self, params, masks, images, *, poly=None, soft=False):
-        x = images
-        for _, _, fn in self._segs:
+    def forward(self, params, masks, images, *, poly=None, soft=False,
+                pre=None):
+        """Full forward.  ``pre``: a cached :meth:`forward_pre` result —
+        the fold resumes at the first gate and ``images`` is ignored
+        (evaluator contexts carry the pre-activation so per-candidate work
+        skips the mask-independent stem)."""
+        if pre is not None:
+            x = self._stem_gate(params, masks, pre, poly, soft)
+            segs = self._segs[1:]
+        else:
+            x = images
+            segs = self._segs
+        for _, _, fn in segs:
             x = fn(params, masks, x, poly, soft)
         return x
+
+    def forward_pre(self, params, images):
+        """Mask-independent head of the network (input -> first gate's
+        pre-activation).  Computed once per evaluator context and fed back
+        through ``forward(..., pre=...)`` — the "depth-0 prefix" every
+        candidate shares regardless of which masks it mutates."""
+        return self._stem_pre(params, images)
 
     # ------------------------------------------------------- split forward
     #
@@ -235,11 +290,22 @@ class CNN:
         return tuple(s for _, sites, _ in self._segs[cut:] for s in sites)
 
     def forward_prefix(self, params, masks, images, site, *, poly=None,
-                       soft=False):
+                       soft=False, from_site=None, cached=None):
         """Run forward up to (excluding) the segment that applies ``site``;
-        returns the cached boundary activation (the suffix's input)."""
+        returns the cached boundary activation (the suffix's input).
+
+        Multi-depth entry: ``from_site``/``cached`` resume from an earlier
+        prefix instead of the input — folding only the segments in
+        ``[seg(from_site), seg(site))``, so
+        ``forward_prefix(..., site=b, from_site=a, cached=prefix(a))``
+        computes exactly ``forward_prefix(..., site=b)`` (same fold over the
+        same segment list — the prefix-trie extension contract)."""
+        lo = 0
         x = images
-        for _, _, fn in self._segs[:self._seg_of_site[site]]:
+        if from_site is not None:
+            lo = self._seg_of_site[from_site]
+            x = cached
+        for _, _, fn in self._segs[lo:self._seg_of_site[site]]:
             x = fn(params, masks, x, poly, soft)
         return x
 
@@ -322,7 +388,11 @@ class CNN:
         mesh has devices."""
         def eval_fn(masks, ctx):
             batch = ctx["batch"]
-            logits = self.forward(ctx["params"], masks, batch["images"])
+            # "pre" (optional): the mask-independent stem fold, computed
+            # once per context by the evaluator (SplitEval.pre) — presence
+            # is a trace-time (pytree structure) decision, never a retrace
+            logits = self.forward(ctx["params"], masks, batch["images"],
+                                  pre=ctx.get("pre"))
             return jnp.mean((jnp.argmax(logits, -1) == batch["labels"])
                             .astype(jnp.float32)) * 100.0
         return eval_fn
@@ -344,10 +414,18 @@ class CNN:
             return self.forward_prefix(ctx["params"], masks,
                                        ctx["batch"]["images"], site)
 
+        def prefix_ext_fn(from_site, site, masks, cached, ctx):
+            return self.forward_prefix(ctx["params"], masks,
+                                       ctx["batch"]["images"], site,
+                                       from_site=from_site, cached=cached)
+
         def suffix_fn(site, masks, cached, ctx):
             logits = self.forward_suffix(ctx["params"], masks, cached, site)
             return jnp.mean((jnp.argmax(logits, -1) == ctx["batch"]["labels"])
                             .astype(jnp.float32)) * 100.0
+
+        def pre_fn(ctx):
+            return self.forward_pre(ctx["params"], ctx["batch"]["images"])
 
         return engine.SplitEval(
             prefix=prefix_fn, suffix=suffix_fn,
@@ -355,7 +433,9 @@ class CNN:
             site_order=self.site_order(),
             site_segment=self.site_segments(),
             suffix_sites=self.suffix_sites,
-            prefix_fraction=self.site_prefix_fractions())
+            prefix_fraction=self.site_prefix_fractions(),
+            prefix_ext=prefix_ext_fn,
+            pre=pre_fn)
 
     def make_eval_acc(self, params, batch):
         """Host callable ``mask_tree -> float`` (jitted single-candidate

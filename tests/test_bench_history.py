@@ -1,0 +1,113 @@
+"""tools/bench_history_summary.py: trajectory print + schema validation.
+
+The history file is append-only across tool versions, so the validator
+must accept legacy (pre-calibration) lines while rejecting malformed ones
+— otherwise the weekly CI job would force a rewrite of the log the cost
+model calibrates from.
+"""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_TOOL = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tools", "bench_history_summary.py")
+_spec = importlib.util.spec_from_file_location("bench_history_summary",
+                                               _TOOL)
+summary = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(summary)
+
+
+def _entry(**kw):
+    e = {"utc": "2026-08-08T00:00:00Z", "git": "abc1234",
+         "config": {"chunk_size": 8},
+         "cands_per_s": {"sequential": 200.0, "batched": 600.0,
+                         "suffix": 900.0},
+         "per_site_depth": {"deep": {
+             "site": "g1b1.relu2", "prefix_fraction": 0.75,
+             "mode": "suffix", "speedup_suffix_vs_batched": 4.0}},
+         "speedup_suffix_vs_batched_deep": 4.0,
+         "speedup_suffix_vs_batched_mean": 2.5}
+    e.update(kw)
+    return e
+
+
+def _write(tmp_path, lines):
+    p = tmp_path / "h.jsonl"
+    p.write_text("".join(
+        (line if isinstance(line, str) else json.dumps(line)) + "\n"
+        for line in lines))
+    return str(p)
+
+
+def test_validate_entry_accepts_current_and_legacy():
+    assert summary.validate_entry(_entry()) == []
+    legacy = _entry()
+    del legacy["per_site_depth"]          # PR-5-era line
+    legacy["speedup_suffix_vs_batched"] = 4.0
+    assert summary.validate_entry(legacy) == []
+
+
+def test_validate_entry_rejects_bad_shapes():
+    assert summary.validate_entry([1, 2]) == ["entry is not a JSON object"]
+    bad = _entry(utc=12345)
+    assert any("utc" in e for e in summary.validate_entry(bad))
+    bad = _entry(cands_per_s={"seq": "fast"})
+    assert any("cands_per_s" in e for e in summary.validate_entry(bad))
+    bad = _entry()
+    bad["per_site_depth"]["deep"]["mode"] = "turbo"
+    assert any(".mode" in e for e in summary.validate_entry(bad))
+    bad = _entry(speedup_suffix_vs_batched_mean="2.5")
+    assert any("speedup_suffix_vs_batched_mean" in e
+               for e in summary.validate_entry(bad))
+
+
+def test_main_prints_trajectory_and_validates(tmp_path, capsys):
+    path = _write(tmp_path, [_entry(), _entry(git="def5678")])
+    assert summary.main([path, "--validate"]) == 0
+    out = capsys.readouterr().out
+    assert "abc1234" in out and "def5678" in out
+    assert "4.00" in out and "2.50" in out
+    assert "history schema: OK" in out
+
+    # --last truncates the table, not the count line
+    assert summary.main([path, "--last", "1"]) == 0
+    out = capsys.readouterr().out
+    assert "def5678" in out and "abc1234" not in out
+    assert "2 run(s)" in out
+
+
+def test_main_flags_malformed_lines(tmp_path, capsys):
+    path = _write(tmp_path, [_entry(), "{truncated",
+                             _entry(utc=None)])
+    # without --validate: report but exit 0 (informational mode)
+    assert summary.main([path]) == 0
+    assert "INVALID" in capsys.readouterr().out
+    assert summary.main([path, "--validate"]) == 1
+    out = capsys.readouterr().out
+    assert "not valid JSON" in out and "FAIL" in out
+
+
+def test_main_legacy_lines_pass_validation(tmp_path, capsys):
+    legacy = _entry(speedup_suffix_vs_batched=4.0)
+    del legacy["per_site_depth"]
+    del legacy["speedup_suffix_vs_batched_deep"]
+    path = _write(tmp_path, [legacy, _entry()])
+    assert summary.main([path, "--validate"]) == 0
+    out = capsys.readouterr().out
+    assert "1 legacy" in out
+    # legacy deep speedup still shown via the old key spelling
+    assert out.count("4.00") == 2
+
+
+def test_main_missing_file(tmp_path, capsys):
+    assert summary.main([str(tmp_path / "none.jsonl"), "--validate"]) == 1
+    assert "cannot read" in capsys.readouterr().out
+
+
+def test_main_empty_file(tmp_path, capsys):
+    p = tmp_path / "e.jsonl"
+    p.write_text("")
+    assert summary.main([str(p), "--validate"]) == 0
+    assert "empty history" in capsys.readouterr().out

@@ -152,3 +152,55 @@ def test_gate_speedup_missing_key_is_loud(tmp_path, capsys):
     assert rc == 2, out
     assert "missing" in out and "speedup_suffix_vs_batched" in out
     assert "Traceback" not in out
+
+
+def test_floor_pass_at_exactly_floor_and_fail_below(tmp_path, capsys):
+    """--floor gates the FRESH report absolutely: exactly at the floor
+    passes, strictly below fails with exit 1."""
+    base = _write(tmp_path, "base.json", _speedup_report(
+        {"seq": 100.0}, speedup_suffix_vs_batched_mean=2.5))
+    at = _write(tmp_path, "at.json", _speedup_report(
+        {"seq": 100.0}, speedup_suffix_vs_batched_mean=2.0,
+        speedup_suffix_vs_batched_shallow=1.0))
+    rc, out = _run([base, at,
+                    "--floor", "speedup_suffix_vs_batched_mean=2.0",
+                    "--floor", "speedup_suffix_vs_batched_shallow=1.0"],
+                   capsys)
+    assert rc == 0, out
+    assert "absolute speedup floors" in out
+
+    below = _write(tmp_path, "below.json", _speedup_report(
+        {"seq": 100.0}, speedup_suffix_vs_batched_mean=1.9))
+    rc, out = _run([base, below,
+                    "--floor", "speedup_suffix_vs_batched_mean=2.0"], capsys)
+    assert rc == 1, out
+    assert "BELOW FLOOR" in out and "speedup_suffix_vs_batched_mean" in out
+
+
+def test_floor_missing_key_is_loud(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", _speedup_report({"seq": 100.0}))
+    fresh = _write(tmp_path, "fresh.json", _speedup_report({"seq": 100.0}))
+    rc, out = _run([base, fresh, "--floor", "nope_key=1.0"], capsys)
+    assert rc == 2, out
+    assert "missing" in out and "nope_key" in out
+    assert "Traceback" not in out
+
+
+def test_floor_spec_parsing():
+    assert gate.parse_floor("speedup_x=2.0") == ("speedup_x", 2.0)
+    import argparse
+    with pytest.raises(argparse.ArgumentTypeError, match="KEY=MIN"):
+        gate.parse_floor("speedup_x")
+    with pytest.raises(argparse.ArgumentTypeError, match="not a number"):
+        gate.parse_floor("speedup_x=fast")
+
+
+def test_provenance_block_does_not_break_comparability(tmp_path, capsys):
+    """The config's nested provenance dict (jax version / device kind) is
+    informational: two reports differing only there must still compare."""
+    base = _write(tmp_path, "base.json", _report(
+        {"seq": 100.0}, provenance={"jax": "0.4.1", "device_kind": "cpu"}))
+    fresh = _write(tmp_path, "fresh.json", _report(
+        {"seq": 100.0}, provenance={"jax": "0.9.9", "device_kind": "tpu"}))
+    rc, out = _run([base, fresh], capsys)
+    assert rc == 0, out

@@ -12,9 +12,10 @@ Three layers of guarantees under test:
    selection rules; ``run_bcd`` must pick bit-identical blocks vs the
    sequential reference at every prefetch depth, with identical trial
    counts and early-exit flags.
-3. **Plumbing** — site grouping/chunking never straddles a segment, the
-   cost model falls shallow cuts back to the full forward, and the prefix
-   cache is batch-sharded (never gathered) on a forced 4-device
+3. **Plumbing** — sited chunks never straddle a segment (coalesced
+   fallback chunks may — they share no prefix), the cost model falls
+   shallow cuts back to the full forward, and every prefix-trie entry is
+   batch-sharded (never gathered) on a forced 4-device
    ``("cand", "batch")`` mesh.
 """
 import numpy as np
@@ -101,6 +102,79 @@ def test_lm_split_forward_bitwise_per_site():
         np.testing.assert_array_equal(out, full, err_msg=site)
 
 
+def _assert_pre_contract(split, ctx, masks):
+    """SplitEval.pre contract: ``full(m, {**ctx, "pre": pre(ctx)})`` is
+    bitwise ``full(m, ctx)`` — the depth-0 analogue of prefix∘suffix."""
+    md = M.as_device(masks)
+    pre = jax.jit(split.pre)(ctx)
+    base = np.asarray(jax.jit(split.full)(md, ctx))
+    folded = np.asarray(jax.jit(split.full)(md, {**ctx, "pre": pre}))
+    np.testing.assert_array_equal(folded, base)
+
+
+def test_cnn_pre_fold_bitwise():
+    model = CNN(CNNConfig("tiny", 4, 16, ((8, 1, 1), (16, 1, 2)),
+                          stem_channels=8))
+    params = model.init(jax.random.PRNGKey(0))
+    masks = linearize.init_masks(model.mask_sites())
+    rng = np.random.default_rng(0)
+    masks = M.sample_removal_block(rng, masks, 16)
+    ctx = {"params": params,
+           "batch": {"images": np.asarray(
+                         rng.standard_normal((2, 16, 16, 3)), np.float32),
+                     "labels": np.asarray(rng.integers(0, 4, (2,)),
+                                          np.int32)}}
+    _assert_pre_contract(model.make_suffix_eval_fns(), ctx, masks)
+
+
+def test_wide_cnn_pre_fold_bitwise():
+    model = CNN(CNNConfig("wrn-mini", 4, 16,
+                          ((8, 1, 1), (16, 1, 2), (16, 1, 2)),
+                          stem_channels=8, wide=True))
+    params = model.init(jax.random.PRNGKey(0))
+    masks = linearize.init_masks(model.mask_sites())
+    rng = np.random.default_rng(1)
+    ctx = {"params": params,
+           "batch": {"images": np.asarray(
+                         rng.standard_normal((2, 16, 16, 3)), np.float32),
+                     "labels": np.asarray(rng.integers(0, 4, (2,)),
+                                          np.int32)}}
+    _assert_pre_contract(model.make_suffix_eval_fns(), ctx, masks)
+
+
+def test_lm_pre_fold_bitwise():
+    model = _tiny_lm()
+    params = model.init(jax.random.PRNGKey(0))
+    masks = linearize.init_masks(model.mask_sites())
+    rng = np.random.default_rng(2)
+    masks = M.sample_removal_block(rng, masks, 16)
+    ctx = {"params": params,
+           "batch": {"tokens": np.asarray(
+               rng.integers(0, model.cfg.vocab, (2, 17)), np.int32)}}
+    _assert_pre_contract(model.make_suffix_eval_fns(), ctx, masks)
+
+
+def test_suffix_evaluator_context_carries_pre(setup):
+    """Construction computes the mask-independent head fold once and ships
+    it as ``context["pre"]``; set_context recomputes it."""
+    model, params, batch, masks0 = setup
+    ctx = {"params": params,
+           "batch": {k: np.asarray(v) for k, v in batch.items()}}
+    ev = engine.SuffixEvaluator(model.make_suffix_eval_fns(), context=ctx)
+    assert "pre" in ev.context
+    expect = np.asarray(jax.jit(
+        lambda c: model.forward_pre(c["params"], c["batch"]["images"]))(ctx))
+    np.testing.assert_array_equal(np.asarray(ev.context["pre"]), expect)
+    # swapping the context recomputes the fold from the new params
+    params2 = model.init(jax.random.PRNGKey(9))
+    ev.set_context({"params": params2, "batch": ctx["batch"]})
+    expect2 = np.asarray(jax.jit(
+        lambda c: model.forward_pre(c["params"], c["batch"]["images"]))(
+            {"params": params2, "batch": ctx["batch"]}))
+    np.testing.assert_array_equal(np.asarray(ev.context["pre"]), expect2)
+    assert not np.array_equal(expect, expect2)
+
+
 def test_suffix_sites_and_fractions_are_monotone():
     model = CNN(CNNConfig("tiny", 4, 16, ((8, 1, 1), (16, 1, 2)),
                           stem_channels=8))
@@ -145,6 +219,21 @@ def test_group_blocks_by_site():
     assert order0.size == 0 and groups0 == []
 
 
+def test_coalesce_fallback_chunks():
+    raw = [("deep", 0, 2), (None, 2, 3), (None, 3, 5), (None, 5, 6),
+           ("mid", 6, 8), (None, 8, 9)]
+    out = M.coalesce_fallback_chunks(raw, chunk_size=2)
+    # the 3 adjacent fallback tails merge into ceil(3/2) chunks; sited
+    # chunks and the trailing singleton pass through
+    assert out == [("deep", 0, 2), (None, 2, 4), (None, 4, 6),
+                   ("mid", 6, 8), (None, 8, 9)]
+    # all-fallback plan collapses to chunk_size-sized spans
+    assert M.coalesce_fallback_chunks(
+        [(None, 0, 2), (None, 2, 4), (None, 4, 5)], 4) == \
+        [(None, 0, 4), (None, 4, 5)]
+    assert M.coalesce_fallback_chunks([], 4) == []
+
+
 def test_plan_sited_chunks_never_straddles_and_respects_cost_model():
     model = CNN(CNNConfig("tiny", 4, 16, ((8, 1, 1), (16, 1, 2)),
                           stem_channels=8))
@@ -156,7 +245,11 @@ def test_plan_sited_chunks_never_straddles_and_respects_cost_model():
     idx = np.concatenate([
         M.sample_removal_indices_within(rng, masks, 8, 5, [deep]),
         M.sample_removal_indices_within(rng, masks, 8, 3, [shallow])])
-    ctx = {"params": {}, "batch": {}}
+    # a real (tiny) context: construction computes the mask-independent
+    # head fold (SplitEval.pre) from it, so it must be evaluable
+    ctx = {"params": model.init(jax.random.PRNGKey(0)),
+           "batch": {"images": np.zeros((1, 16, 16, 3), np.float32),
+                     "labels": np.zeros((1,), np.int32)}}
     ev = engine.SuffixEvaluator(model.make_suffix_eval_fns(), context=ctx,
                                 cost_model=SuffixCostModel(
                                     min_prefix_fraction=0.05, min_chunk=2))
@@ -166,8 +259,10 @@ def test_plan_sited_chunks_never_straddles_and_respects_cost_model():
                [segs[shallow]] * 3
     for site, s, e in chunks:
         grp = {cand_seg[i] for i in order[s:e]}
-        assert len(grp) == 1, "chunk straddles a segment group"
         if site is not None:
+            # sited chunks share one prefix -> must stay inside a group;
+            # coalesced fallback chunks may straddle (no shared prefix)
+            assert len(grp) == 1, "sited chunk straddles a segment group"
             assert segs[site] == grp.pop()
     # shallow group (prefix fraction 0) must fall back to the full forward
     shallow_chunks = [c for c in chunks
@@ -289,10 +384,13 @@ def test_suffix_cost_model_fallback_is_still_equivalent(setup):
 
 def test_suffix_site_local_candidates_use_prefix_cache(setup):
     """Deep-site-local chunks run in suffix mode: accuracies match the
-    sequential reference and the evaluator holds a cached prefix for the
-    deep segment afterwards."""
+    sequential reference and the trie holds a cached prefix for the deep
+    segment afterwards.  Unchanged base masks keep the trie warm across
+    ``begin_step``; a shallow-site edit drops every deeper entry."""
     model, params, batch, masks0 = setup
     deep = model.site_order()[-1]
+    shallow = model.site_order()[0]
+    segs = model.site_segments()
     idx = M.sample_removal_indices_within(
         np.random.default_rng(0), masks0, 16, 6, [deep])
     stacked = M.materialize_candidates(masks0, idx)
@@ -301,10 +399,19 @@ def test_suffix_site_local_candidates_use_prefix_cache(setup):
     accs = ev.evaluate(engine.SitedChunk(deep, stacked))
     seq = engine.SequentialEvaluator(model.make_eval_acc(params, batch))
     np.testing.assert_allclose(accs, seq.evaluate(stacked), atol=1e-4)
-    assert model.site_segments()[deep] in ev._prefix_cache
-    # begin_step invalidates (masks/params changed between outer steps)
-    ev.begin_step(masks0)
-    assert not ev._prefix_cache
+    assert segs[deep] in ev.trie and ev.trie.misses == 1
+    # unchanged base masks: entries survive the next begin_step
+    ev.begin_step({k: np.array(v) for k, v in masks0.items()})
+    assert segs[deep] in ev.trie
+    accs2 = ev.evaluate(engine.SitedChunk(deep, stacked))
+    np.testing.assert_array_equal(np.asarray(accs2), np.asarray(accs))
+    assert ev.trie.hits >= 1 and ev.trie.misses == 1
+    # a shallow-site mask edit invalidates every deeper cached prefix
+    edited = {k: np.array(v) for k, v in masks0.items()}
+    edited[shallow] = np.array(edited[shallow])
+    edited[shallow].flat[0] = 0.0
+    ev.begin_step(edited)
+    assert len(ev.trie) == 0
 
 
 def test_suffix_set_context_invalidates_prefix_cache(setup):
@@ -316,13 +423,13 @@ def test_suffix_set_context_invalidates_prefix_cache(setup):
     ev.begin_step(masks0)
     a = ev.evaluate(engine.SitedChunk(
         deep, M.materialize_candidates(masks0, idx)))
-    assert ev._prefix_cache
+    assert len(ev.trie)
     # perturb params through the shared context: results must change and
     # the stale prefix must be dropped
     new_params = jax.tree.map(lambda v: v * 0.5, params)
     ev.set_context({"params": new_params,
                     "batch": {k: np.asarray(v) for k, v in batch.items()}})
-    assert not ev._prefix_cache
+    assert len(ev.trie) == 0
     b = ev.evaluate(engine.SitedChunk(
         deep, M.materialize_candidates(masks0, idx)))
     seq = engine.SequentialEvaluator(
@@ -341,8 +448,8 @@ def test_suffix_evaluator_validates_inputs(setup):
         engine.SuffixEvaluator(split, context={"params": params})
     ctx = {"params": params,
            "batch": {k: np.asarray(v) for k, v in batch.items()}}
-    with pytest.raises(ValueError, match="pipelined"):
-        engine.SuffixEvaluator(split, context=ctx, prefetch="auto")
+    with pytest.raises(ValueError, match="prefetch"):
+        engine.SuffixEvaluator(split, context=ctx, prefetch="turbo")
     with pytest.raises(ValueError, match="split"):
         engine.make_evaluator("suffix", context=ctx)
     ev = engine.SuffixEvaluator(split, context=ctx)
@@ -351,6 +458,34 @@ def test_suffix_evaluator_validates_inputs(setup):
             model.site_order()[-1],
             M.sample_removal_blocks(np.random.default_rng(0), masks0,
                                     4, 2)))
+
+
+def test_suffix_auto_prefetch_tunes_and_matches_sequential(setup):
+    """prefetch="auto" on the suffix backend: the inner pipeline's tuner
+    probes the first chunks, locks a depth, and results stay bit-identical
+    to the sequential reference throughout (the probe changes timing
+    only)."""
+    model, params, batch, masks0 = setup
+    ctx = {"params": params,
+           "batch": {k: np.asarray(v) for k, v in batch.items()}}
+    ev = engine.SuffixEvaluator(model.make_suffix_eval_fns(), context=ctx,
+                                pad_to=2, prefetch="auto")
+    assert ev.auto_tuner is not None and not ev.auto_tuner.done
+    seq = engine.SequentialEvaluator(model.make_eval_acc(params, batch))
+    idx = M.sample_removal_indices(np.random.default_rng(3), masks0, 6, 12)
+    flat, layout = M._flatten(masks0)
+    ev.begin_step(masks0)
+    order, chunks = engine.plan_sited_chunks(ev, idx, layout, chunk_size=2)
+    gen = engine.materialize_sited(flat, layout, idx, order, chunks)
+    accs = np.concatenate(list(engine.evaluate_prefetched(ev, gen)))
+    # un-permute the site-major evaluation back to sampling order
+    accs_s = np.empty_like(accs)
+    accs_s[order] = accs
+    ref = seq.evaluate(M.materialize_candidates(masks0, idx))
+    np.testing.assert_array_equal(accs_s, ref)
+    # enough chunks to finish the probe: the tuner locked a depth
+    assert ev.auto_tuner.done
+    assert ev.prefetch_depth >= 0 and ev.auto_report is not None
 
 
 # ----------------------------------------- forced multi-device sharding
@@ -380,18 +515,36 @@ ev = engine.SuffixEvaluator(model.make_suffix_eval_fns(), context=ctx,
                             mesh=mesh, pad_to=4, prefetch=1)
 seq = engine.SequentialEvaluator(model.make_eval_acc(params, batch))
 
-deep = model.site_order()[-1]
-idx = M.sample_removal_indices_within(np.random.default_rng(0), masks0,
-                                      8, 6, [deep])
+order, segs = model.site_order(), model.site_segments()
+deep = order[-1]
+mid = max((s for s in order if segs[s] < segs[deep]), key=lambda s: segs[s])
+rng = np.random.default_rng(0)
+idx_mid = M.sample_removal_indices_within(rng, masks0, 8, 6, [mid])
+idx = M.sample_removal_indices_within(rng, masks0, 8, 6, [deep])
+stacked_mid = M.materialize_candidates(masks0, idx_mid)
 stacked = M.materialize_candidates(masks0, idx)
 ev.begin_step(masks0)
+accs_mid = ev.evaluate(engine.SitedChunk(mid, stacked_mid))
+np.testing.assert_allclose(accs_mid, seq.evaluate(stacked_mid), atol=1e-4)
+# deep chunk extends the cached mid-depth ancestor (segments in between
+# only), never recomputing from the input
 accs = ev.evaluate(engine.SitedChunk(deep, stacked))
 np.testing.assert_allclose(accs, seq.evaluate(stacked), atol=1e-4)
+assert ev.trie.extensions == 1 and ev.trie.misses == 1, \
+    (ev.trie.extensions, ev.trie.misses)
+assert ev.trie.depths() == (segs[mid], segs[deep]), ev.trie.depths()
 
-# the cached prefix is batch-sharded (never gathered across "batch")
-cached = next(iter(ev._prefix_cache.values()))
-assert "batch" in str(cached.sharding.spec), cached.sharding
-# fallback (un-sited) chunks ride the inner sharded pipeline
+# every trie entry is batch-sharded (never gathered across "batch"),
+# including the one produced by the extension path
+for depth, cached in ev.trie.items():
+    assert "batch" in str(cached.sharding.spec), (depth, cached.sharding)
+    assert not cached.sharding.is_fully_replicated, depth
+# the mask-independent head fold rides the context batch-sharded too
+pre = ev.context["pre"]
+assert "batch" in str(pre.sharding.spec), pre.sharding
+assert not pre.sharding.is_fully_replicated, pre.sharding
+# fallback (un-sited) chunks ride the inner sharded pipeline (and consume
+# the sharded "pre" without gathering)
 accs2 = ev.evaluate(engine.SitedChunk(None, stacked))
 np.testing.assert_allclose(accs2, seq.evaluate(stacked), atol=1e-4)
 print("SUFFIX_MESH_OK")
@@ -400,8 +553,9 @@ print("SUFFIX_MESH_OK")
 
 def test_suffix_prefix_cache_batch_sharded_on_forced_mesh():
     """4 forced host devices, ("cand", "batch") = (2, 2): suffix chunks
-    shard candidates over "cand" while the cached prefix stays
-    batch-sharded; results match the sequential reference."""
+    shard candidates over "cand" while every trie entry — including one
+    built by the ancestor-extension path — stays batch-sharded and never
+    gathers; results match the sequential reference."""
     import os
     import subprocess
     import sys

@@ -1,0 +1,164 @@
+"""Print and validate the append-only perf trajectory (BENCH_history.jsonl).
+
+    PYTHONPATH=src python tools/bench_history_summary.py \
+        [BENCH_history.jsonl] [--validate] [--last N]
+
+Each ``benchmarks.bench_bcd_eval`` run appends one JSON line; this tool
+renders the trajectory as a table (one row per run: commit, backend
+candidates/sec, suffix-vs-batched deep/mean) so a perf drift is visible
+without diffing JSON blobs, and ``--validate`` checks every line against
+the history schema — the contract ``SuffixCostModel.calibrated`` consumes.
+
+Schema per line (current): ``utc`` (ISO-8601 Z), ``git`` (short hash or
+null), ``config`` (dict with the operating point), ``cands_per_s``
+(backend -> number), ``per_site_depth`` (depth -> row with site /
+prefix_fraction / mode / speedup_suffix_vs_batched), plus top-level
+``speedup_*`` numbers.  Lines written by older tool versions lack
+``per_site_depth`` (and used the ambiguous ``speedup_suffix_vs_batched``
+key): they are accepted as *legacy* — valid history, just invisible to
+calibration — so ``--validate`` never forces a rewrite of the append-only
+log.  Malformed JSON or wrong-typed fields fail validation (exit 1).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def validate_entry(entry) -> list:
+    """Schema violations for one parsed history entry ([] = valid).
+    Legacy entries (no per_site_depth) validate against the legacy shape."""
+    errs = []
+    if not isinstance(entry, dict):
+        return ["entry is not a JSON object"]
+    utc = entry.get("utc")
+    if not isinstance(utc, str) or not utc.endswith("Z"):
+        errs.append(f"utc: expected ISO-8601 Z string, got {utc!r}")
+    if not isinstance(entry.get("config"), dict):
+        errs.append("config: expected object")
+    cps = entry.get("cands_per_s")
+    if not isinstance(cps, dict) or not cps or \
+            not all(_is_num(v) for v in cps.values()):
+        errs.append("cands_per_s: expected non-empty {backend: number}")
+    for k, v in entry.items():
+        if k.startswith("speedup_") and not _is_num(v):
+            errs.append(f"{k}: expected number, got {v!r}")
+    psd = entry.get("per_site_depth")
+    if psd is None:
+        return errs            # legacy line: pre-calibration tool version
+    if not isinstance(psd, dict):
+        return errs + ["per_site_depth: expected object"]
+    for depth, row in psd.items():
+        if not isinstance(row, dict):
+            errs.append(f"per_site_depth[{depth}]: expected object")
+            continue
+        if not isinstance(row.get("site"), str):
+            errs.append(f"per_site_depth[{depth}].site: expected string")
+        for field in ("prefix_fraction", "speedup_suffix_vs_batched"):
+            if not _is_num(row.get(field)):
+                errs.append(f"per_site_depth[{depth}].{field}: "
+                            f"expected number, got {row.get(field)!r}")
+        if row.get("mode") not in ("suffix", "fallback"):
+            errs.append(f"per_site_depth[{depth}].mode: expected "
+                        f"'suffix'|'fallback', got {row.get('mode')!r}")
+    return errs
+
+
+def load_history(path):
+    """Parse the jsonl; returns (entries, errors) where errors are
+    ``(lineno, message)`` for lines that are not valid JSON objects."""
+    entries, errors = [], []
+    try:
+        fh = open(path)
+    except OSError as e:
+        return [], [(0, f"cannot read {path}: {e}")]
+    with fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                entries.append((lineno, json.loads(line)))
+            except json.JSONDecodeError as e:
+                errors.append((lineno, f"not valid JSON: {e}"))
+    return entries, errors
+
+
+def _fmt_speedup(entry, key):
+    # current key first; one legacy spelling for deep (pre-rename lines)
+    v = entry.get(key)
+    if v is None and key == "speedup_suffix_vs_batched_deep":
+        v = entry.get("speedup_suffix_vs_batched")
+    return f"{v:.2f}" if _is_num(v) else "-"
+
+
+def trajectory_lines(entries) -> list:
+    """One table row per history entry (oldest first)."""
+    header = (f"{'utc':20} {'git':8} {'seq':>7} {'batched':>8} "
+              f"{'suffix':>8} {'deep':>6} {'mean':>6} {'aggr':>6}")
+    lines = [header, "-" * len(header)]
+    for _, e in entries:
+        cps = e.get("cands_per_s") or {}
+
+        def rate(name):
+            v = cps.get(name)
+            return f"{v:.0f}" if _is_num(v) else "-"
+
+        lines.append(
+            f"{str(e.get('utc') or '-'):20} {str(e.get('git') or '-'):8} "
+            f"{rate('sequential'):>7} {rate('batched'):>8} "
+            f"{rate('suffix'):>8} "
+            f"{_fmt_speedup(e, 'speedup_suffix_vs_batched_deep'):>6} "
+            f"{_fmt_speedup(e, 'speedup_suffix_vs_batched_mean'):>6} "
+            f"{_fmt_speedup(e, 'speedup_suffix_vs_batched_aggregate'):>6}")
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("history", nargs="?", default="BENCH_history.jsonl")
+    ap.add_argument("--validate", action="store_true",
+                    help="exit 1 on any schema violation (legacy lines "
+                         "without per_site_depth still pass)")
+    ap.add_argument("--last", type=int, default=None, metavar="N",
+                    help="only show the most recent N entries")
+    args = ap.parse_args(argv)
+
+    entries, errors = load_history(args.history)
+    if not entries and not errors:
+        print(f"{args.history}: empty history")
+        return 0
+
+    n_legacy = 0
+    for lineno, entry in entries:
+        errs = validate_entry(entry)
+        if isinstance(entry, dict) and entry.get("per_site_depth") is None:
+            n_legacy += 1
+        for msg in errs:
+            errors.append((lineno, msg))
+
+    shown = entries if args.last is None else entries[-args.last:]
+    for line in trajectory_lines(shown):
+        print(line)
+    print(f"{len(entries)} run(s) in {args.history}"
+          + (f" ({n_legacy} legacy, pre-calibration format)"
+             if n_legacy else ""))
+
+    if errors:
+        for lineno, msg in errors:
+            print(f"INVALID line {lineno}: {msg}")
+        if args.validate:
+            print(f"FAIL: {len(errors)} schema violation(s)")
+            return 1
+    elif args.validate:
+        print("history schema: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
