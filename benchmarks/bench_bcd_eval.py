@@ -21,7 +21,12 @@ Two workloads:
   full forward — its row measures that fallback overhead, not the reuse win;
 * ``per_site_depth`` samples *site-local* blocks at a shallow / middle /
   deep site and times suffix vs batched on each — the regime where
-  candidates are local edits and the prefix-reuse engine shines.  The
+  candidates are local edits and the prefix-reuse engine shines;
+* ``move_mix`` drives typed candidates over all five move kinds
+  (core.masks.sample_moves) through the batched backend and reports the
+  throughput ratio against removal-only blocks — the move vocabulary's
+  trial-loop overhead, kept outside ``config`` so committed-baseline
+  compares don't treat the workload mix as an operating-point change.  The
   headline keys are explicit about what they summarize:
   ``speedup_suffix_vs_batched_deep`` (deep-site ratio),
   ``..._shallow`` (all-fallback floor), ``..._mean`` (mean over the three
@@ -81,13 +86,16 @@ def time_backend(evaluator, masks0, indices, chunk_size, repeats,
     """Drive the real trial loop (materialize per chunk, prefetch-aware;
     site-aware backends run the site-major plan with per-sweep prefix
     recomputation — the per-BCD-step cost); return (cands/sec, us/cand).
-    warmup=False skips the untimed compile-and-cache sweep (the evaluator
-    was already warmed)."""
+    ``indices`` is an (n, k) removal array or a list of typed
+    ``masks.Move`` candidates (the move-mix workload).  warmup=False skips
+    the untimed compile-and-cache sweep (the evaluator was already
+    warmed)."""
     # Match _select_block's chunk policy so the benchmark pays the same
     # per-chunk materialization cost the real loop pays.
     chunk_size = engine.effective_chunk(evaluator, chunk_size)
     flat, layout = M._flatten(masks0)
-    n = indices.shape[0]
+    typed = isinstance(indices, (list, tuple))
+    n = len(indices)
     sited = getattr(evaluator, "site_aware", False)
 
     def sweep():
@@ -97,6 +105,9 @@ def time_backend(evaluator, masks0, indices, chunk_size, repeats,
                 evaluator, indices, layout, chunk_size)
             gen = engine.materialize_sited(flat, layout, indices, order,
                                            chunks)
+        elif typed:
+            gen = M.materialize_move_chunks(flat, layout, indices,
+                                            chunk_size)
         else:
             gen = M.materialize_chunks(flat, layout, indices, chunk_size)
         for accs in engine.evaluate_prefetched(evaluator, gen):
@@ -308,6 +319,38 @@ def main():
         print(f"bcd_eval_suffix_{depth},{site},{mode},"
               f"{per_depth[depth]['speedup_suffix_vs_batched']:.2f}x")
 
+    # --- move-mix workload: typed candidates over all five kinds through
+    # the batched backend, vs the same backend on removal-only blocks.
+    # Prices the move vocabulary's trial-loop overhead (host-side
+    # multi-coordinate application: off/on/tie assignment per candidate
+    # instead of one put_along_axis) — a pure-overhead row, not a speedup
+    # claim, reported outside ``config`` so baseline compares don't treat
+    # the workload mix as an operating-point change.
+    mixed_moves = M.sample_moves(
+        np.random.default_rng(2), masks0, args.drc, args.rt,
+        kinds=M.MOVE_KINDS, max_remove=4 * args.drc)
+    move_rows = {"removal": [], "moves": []}
+    time_backend(backends["batched"], masks0, mixed_moves, chunk, 1)
+    for _ in range(max(1, args.trials)):
+        cps, _ = time_backend(backends["batched"], masks0, indices, chunk,
+                              args.repeats, warmup=False)
+        move_rows["removal"].append(cps)
+        cps, _ = time_backend(backends["batched"], masks0, mixed_moves,
+                              chunk, args.repeats, warmup=False)
+        move_rows["moves"].append(cps)
+    move_mix = {
+        "kinds": list(M.MOVE_KINDS),
+        "removal_cands_per_s": round(float(np.median(
+            move_rows["removal"])), 2),
+        "moves_cands_per_s": round(float(np.median(
+            move_rows["moves"])), 2),
+        "ratio_moves_vs_removal": round(float(np.median(
+            [x / y for x, y in zip(move_rows["moves"],
+                                   move_rows["removal"])])), 2),
+    }
+    print(f"bcd_eval_move_mix,batched,"
+          f"{move_mix['ratio_moves_vs_removal']:.2f}x")
+
     report = {
         "bench": "bcd_eval",
         "config": {"rt": args.rt, "chunk_size": chunk,
@@ -328,6 +371,7 @@ def main():
                    }},
         "backends": results,
         "per_site_depth": per_depth,
+        "move_mix": move_mix,
         "speedup_batched_vs_sequential":
             paired_speedup("batched", "sequential"),
         "speedup_sharded_vs_sequential":

@@ -17,9 +17,21 @@ involved — within-report ratios are hardware-robust, so an absolute
 floor is meaningful even on a slow CI runner).  Repeatable; a floored
 key missing from the fresh report is exit 2, like --gate-speedup.
 
-Exit codes: 0 pass, 1 candidates/sec regression or floor violation,
-2 unusable input (missing or malformed report, incomparable operating
-points, malformed/missing gate key) — always with a human-readable FAIL
+``--sweep-acc`` switches the gate to *accuracy-at-budget* mode over two
+``launch.sweep`` artifacts (``SWEEP_<model>.json``) instead of two bench
+reports: at every budget present in both curves, the fresh artifact's
+``test_acc`` must be at least the baseline's minus ``--acc-tolerance``
+(absolute accuracy points, default 0).  CI uses it to assert that the
+richer move vocabulary never loses accuracy against the removal-only
+descent at the same budget schedule:
+
+    PYTHONPATH=src python -m benchmarks.check_bench_regression \
+        SWEEP_removal.json SWEEP_mixed.json --sweep-acc [--acc-tolerance 0.5]
+
+Exit codes: 0 pass, 1 candidates/sec regression, floor violation, or
+accuracy-at-budget drop, 2 unusable input (missing or malformed report,
+incomparable operating points, malformed/missing gate key, unscored or
+non-overlapping sweep curves) — always with a human-readable FAIL
 line, never a traceback, so CI logs say what to fix.
 A backend sitting exactly at the threshold (ratio == 1 - tolerance) passes:
 the gate fails only on drops strictly beyond the tolerance, with a small
@@ -197,6 +209,88 @@ def load_report(path: str, which: str):
     return report
 
 
+def load_sweep(path: str, which: str):
+    """Load one ``launch.sweep`` artifact; returns None after a clear FAIL
+    line (same no-traceback contract as :func:`load_report`)."""
+    try:
+        with open(path) as f:
+            artifact = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: cannot load {which} sweep artifact {path}: {e}")
+        return None
+    stages = artifact.get("stages") if isinstance(artifact, dict) else None
+    if not isinstance(stages, list) or not stages:
+        print(f"FAIL: {which} sweep artifact {path} has no 'stages' list — "
+              "not a launch.sweep artifact?")
+        return None
+    return artifact
+
+
+def compare_sweep_acc(baseline: dict, fresh: dict, tolerance: float):
+    """Accuracy-at-budget gate over two sweep curves.
+
+    Matches stages by ``budget``; the fresh curve must hold
+    ``test_acc >= baseline - tolerance`` (absolute accuracy points) at
+    every common budget.  Budgets present in only one curve are reported
+    but never gate (schedules may legitimately differ in length).
+
+    Returns (failures, unscored, common, lines).
+    """
+    def by_budget(artifact):
+        return {int(s["budget"]): s for s in artifact["stages"]
+                if isinstance(s.get("budget"), (int, float))}
+
+    base_s, new_s = by_budget(baseline), by_budget(fresh)
+    failures, unscored, common, lines = [], [], 0, []
+    for budget in sorted(set(base_s) | set(new_s), reverse=True):
+        if budget not in base_s or budget not in new_s:
+            lines.append(f"  B={budget}: only in "
+                         f"{'baseline' if budget in base_s else 'fresh'} "
+                         "curve (skipped)")
+            continue
+        old = base_s[budget].get("test_acc")
+        new = new_s[budget].get("test_acc")
+        if not isinstance(old, (int, float)) or \
+                not isinstance(new, (int, float)):
+            unscored.append(budget)
+            lines.append(f"  B={budget}: unscored stage "
+                         f"(baseline={old!r} fresh={new!r})")
+            continue
+        common += 1
+        ok = float(new) >= float(old) - tolerance - _EPS
+        lines.append(f"  B={budget}: {old:.2f}% -> {new:.2f}% "
+                     f"({'OK' if ok else 'ACCURACY DROP'})")
+        if not ok:
+            failures.append(f"B={budget}")
+    return failures, unscored, common, lines
+
+
+def run_sweep_acc(args) -> int:
+    baseline = load_sweep(args.baseline, "baseline")
+    fresh = load_sweep(args.fresh, "fresh")
+    if baseline is None or fresh is None:
+        return 2
+    failures, unscored, common, lines = compare_sweep_acc(
+        baseline, fresh, args.acc_tolerance)
+    print(f"sweep accuracy-at-budget check (tolerance "
+          f"{args.acc_tolerance:.2f} points):")
+    for line in lines:
+        print(line)
+    if unscored:
+        print(f"FAIL: unscored stage(s) at budget(s) "
+              f"{', '.join(str(b) for b in unscored)} — pass stage_eval to "
+              "the sweep (or wait for the reporting tail) before gating")
+        return 2
+    if common == 0:
+        print("FAIL: the two curves share no budgets — nothing to gate")
+        return 2
+    if failures:
+        print(f"FAIL: accuracy-at-budget drop at {', '.join(failures)}")
+        return 1
+    print("PASS")
+    return 0
+
+
 def main(argv=None):
     """CLI entry; returns the process exit code (see module docstring)."""
     ap = argparse.ArgumentParser()
@@ -219,7 +313,18 @@ def main(argv=None):
                     help="absolute minimum for a top-level speedup_* key of "
                          "the FRESH report (no baseline); repeatable.  e.g. "
                          "speedup_suffix_vs_batched_mean=2.0")
+    ap.add_argument("--sweep-acc", action="store_true",
+                    help="treat the two positional paths as launch.sweep "
+                         "artifacts and gate fresh test_acc >= baseline "
+                         "test_acc - --acc-tolerance at every common "
+                         "budget (accuracy-at-budget mode; the bench-report "
+                         "flags are ignored)")
+    ap.add_argument("--acc-tolerance", type=float, default=0.0,
+                    help="allowed absolute test_acc drop per budget in "
+                         "--sweep-acc mode (accuracy points, default 0)")
     args = ap.parse_args(argv)
+    if args.sweep_acc:
+        return run_sweep_acc(args)
     baseline = load_report(args.baseline, "baseline")
     fresh = load_report(args.fresh, "fresh")
     if baseline is None or fresh is None:

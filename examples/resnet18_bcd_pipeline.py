@@ -4,7 +4,8 @@ vs SNL(B_target) head-to-head (Fig. 1 / Table 3 protocol, synthetic CIFAR).
     PYTHONPATH=src python examples/resnet18_bcd_pipeline.py \
         [--image-size 16] [--ref-frac 0.6] [--target-frac 0.4] [--full] \
         [--engine batched] [--chunk-size 8] [--prefetch 2|auto] \
-        [--compile-cache DIR]
+        [--moves remove,add_back,swap,stage_drop,share] \
+        [--proposal uniform|sensitivity] [--compile-cache DIR]
 
 --full uses the real ResNet18 geometry at 32x32 (slow on CPU); the default
 uses a reduced stage plan with the same code path.  --engine selects the BCD
@@ -18,7 +19,11 @@ and picks the depth itself) — and 'suffix' adds prefix reuse: candidate
 chunks are grouped by the segment of their earliest mutated mask site, the
 shared forward prefix is computed once per site per step, and only the
 suffix is vmapped per candidate (docs/bcd_engine.md).  Selection is
-bit-identical across engines for a fixed seed.  --compile-cache DIR turns
+bit-identical across engines for a fixed seed.  --moves widens the
+coordinate-descent move set beyond the paper's removals (docs/bcd_engine.md
+§Move vocabulary) and --proposal sensitivity weights kinds/sites by their
+running acceptance rates; per-kind accepted/proposed counters land in the
+sweep artifact and print at exit.  --compile-cache DIR turns
 on jax's persistent compilation cache so re-runs and resumed sweeps skip
 re-jit (hit counts print at exit).
 
@@ -72,6 +77,16 @@ def parse_args():
                     choices=["sequential", "batched", "sharded",
                              "pipelined", "suffix"])
     ap.add_argument("--chunk-size", type=int, default=8)
+    ap.add_argument("--moves", default="remove",
+                    help="comma-separated move kinds the descent samples "
+                         f"from (subset of {','.join(M.MOVE_KINDS)}); "
+                         "'remove' alone replays the paper's Alg. 2 "
+                         "bit-identically")
+    ap.add_argument("--proposal", default="uniform",
+                    choices=list(M.PROPOSALS),
+                    help="candidate proposal distribution: 'uniform', or "
+                         "'sensitivity' to weight kinds/sites by their "
+                         "running acceptance rates")
     ap.add_argument("--prefetch", default="2",
                     help="chunks kept staged ahead (pipelined/suffix "
                          "engines), or 'auto' to pick from measured rates "
@@ -94,6 +109,11 @@ def parse_args():
     args = ap.parse_args()
     if args.overlap and args.sweep is None:
         ap.error("--overlap only applies to --sweep mode")
+    args.moves = tuple(k.strip() for k in args.moves.split(","))
+    for kind in args.moves:
+        if kind not in M.MOVE_KINDS:
+            ap.error(f"--moves: unknown kind {kind!r} (expected a subset "
+                     f"of {','.join(M.MOVE_KINDS)})")
     if args.prefetch != "auto":
         try:
             args.prefetch = int(args.prefetch)
@@ -175,7 +195,11 @@ def make_bcd_evaluator(args, model, eval_b, holder, chunk_size, rt):
         evaluator = engine.make_evaluator(
             "suffix", split=model.make_suffix_eval_fns(),
             context={"params": holder["params"], "batch": batch_np},
-            pad_to=pad, prefetch=args.prefetch)
+            pad_to=pad, prefetch=args.prefetch,
+            # share-tied coordinates are overridden outside the fused
+            # conv/matmul kernels (linearize._apply_share_ties) — keep the
+            # gate un-fused when the move set can produce ties
+            fused_kernels="share" not in args.moves)
         return evaluator, eval_acc, lambda p: evaluator.set_context(
             {"params": p, "batch": batch_np})
     evaluator = engine.make_evaluator(
@@ -231,7 +255,8 @@ def run_sweep_mode(args):
     def make_bcd_cfg(budget):
         return bcd.BCDConfig(
             b_target=budget, drc=max(1, (b_ref - budgets[-1]) // 10), rt=6,
-            adt=0.3, chunk_size=args.chunk_size)
+            adt=0.3, chunk_size=args.chunk_size,
+            moves=args.moves, proposal=args.proposal)
 
     # the reporting tail: pure in (params, masks), so with --overlap it can
     # score stage i on a worker thread while stage i+1's descent mutates the
@@ -247,7 +272,8 @@ def run_sweep_mode(args):
         stage_finetune=stage_ft,
         stage_eval=lambda m, p: test_acc(p, m),
         notes={"engine": args.engine, "prefetch": str(args.prefetch),
-               "overlap": args.overlap},
+               "overlap": args.overlap, "moves": list(args.moves),
+               "proposal": args.proposal},
         coordinator=coordinator)
 
     report = getattr(evaluator, "auto_report", None)
@@ -263,6 +289,12 @@ def run_sweep_mode(args):
         print(f"B={s['budget']:6d}  steps={s['steps']:3d}  "
               f"acc={acc if acc is not None else float('nan'):.2f}%  "
               f"masks={s['mask_fingerprint'][:12]}")
+        kinds = s.get("move_stats", {}).get("kinds", {})
+        if kinds:
+            rates = "  ".join(
+                f"{k}={v['accepted']}/{v['proposed']}"
+                for k, v in sorted(kinds.items()))
+            print(f"         accepted/proposed: {rates}")
     return payload
 
 
@@ -295,7 +327,8 @@ def run_head_to_head(args):
     holder = {"params": res_ref.params}
     bcd_cfg = bcd.BCDConfig(
         b_target=b_target, drc=max(1, (b_ref - b_target) // 5), rt=6,
-        adt=0.3, chunk_size=args.chunk_size)
+        adt=0.3, chunk_size=args.chunk_size,
+        moves=args.moves, proposal=args.proposal)
     evaluator, eval_acc, set_ctx = make_bcd_evaluator(
         args, model, eval_b, holder, bcd_cfg.chunk_size, bcd_cfg.rt)
 
@@ -311,7 +344,12 @@ def run_head_to_head(args):
     print(f"\n=== results at B_target={b_target} ===")
     print(f"SNL : test acc {acc_snl:.2f}%")
     print(f"BCD : test acc {acc_bcd:.2f}%  (budget exact: "
-          f"{M.count(res_bcd.masks) == b_target})")
+          f"{M.relu_cost(res_bcd.masks) == b_target})")
+    kinds = res_bcd.move_stats.get("kinds", {})
+    if len(args.moves) > 1 and kinds:
+        print("BCD accepted/proposed by kind: " + "  ".join(
+            f"{k}={v['accepted']}/{v['proposed']}"
+            for k, v in sorted(kinds.items())))
 
 
 def main():

@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -24,13 +24,18 @@ from . import masks as M
 
 @dataclasses.dataclass
 class BCDConfig:
-    b_target: int                 # target ReLU budget
+    b_target: int                 # target (billable) ReLU budget
     drc: int = 100                # Delta ReLU Count per outer step
     rt: int = 50                  # random trials per outer step
     adt: float = 0.3              # accuracy degradation tolerance [%]
     finetune_every_step: bool = True
     seed: int = 0
     chunk_size: int = 8           # candidates per evaluator call
+    # typed-move vocabulary (masks.MOVE_KINDS subset) and proposal
+    # distribution over it.  The default reproduces the paper's Alg. 2
+    # exactly — single removal moves, bit-identical rng stream.
+    moves: Tuple[str, ...] = ("remove",)
+    proposal: str = "uniform"     # 'uniform' | 'sensitivity'
 
     def validate(self) -> None:
         """Raise ValueError on configs that cannot run (Alg. 2 needs at
@@ -48,6 +53,15 @@ class BCDConfig:
                 f"chunk_size must be > 0, got {self.chunk_size}")
         if not math.isfinite(self.adt):
             raise ValueError(f"adt must be finite, got {self.adt}")
+        if not self.moves:
+            raise ValueError("moves must name at least one move kind")
+        for kind in self.moves:
+            if kind not in M.MOVE_KINDS:
+                raise ValueError(f"unknown move kind {kind!r}; expected a "
+                                 f"subset of {M.MOVE_KINDS}")
+        if self.proposal not in M.PROPOSALS:
+            raise ValueError(f"unknown proposal {self.proposal!r}; "
+                             f"expected one of {M.PROPOSALS}")
 
 
 @dataclasses.dataclass
@@ -61,6 +75,9 @@ class BCDStepLog:
     acc_before: float
     acc_after_finetune: Optional[float]
     wall_s: float
+    # defaulted last so BCDStepLog(**h) still loads pre-move-vocabulary
+    # checkpoint manifests (core.runner.restore_run_state)
+    move_kind: str = "remove"     # accepted move's kind (masks.MOVE_KINDS)
 
 
 @dataclasses.dataclass
@@ -68,6 +85,30 @@ class BCDResult:
     masks: M.MaskTree
     history: List[BCDStepLog]
     mask_snapshots: List[M.MaskTree]  # for IoU / golden-set analysis
+    # per-kind / per-site proposed-vs-accepted counters (JSON-able) — the
+    # sweep artifact's acceptance-stats payload
+    move_stats: dict = dataclasses.field(default_factory=dict)
+
+
+def record_move_stats(stats: dict, moves: List[M.Move], accepted_idx: int,
+                      layout: list) -> None:
+    """Fold one step's proposals into the running acceptance counters.
+
+    ``stats`` is mutated in place: ``stats["kinds"][kind]`` and
+    ``stats["sites"][site]`` each carry ``{"proposed", "accepted"}``
+    counts.  These are both the sweep artifact's per-move acceptance stats
+    and the signal the 'sensitivity' proposal samples from."""
+    kinds = stats.setdefault("kinds", {})
+    sites = stats.setdefault("sites", {})
+    for i, mv in enumerate(moves):
+        hit = 1 if i == accepted_idx else 0
+        k = kinds.setdefault(mv.kind, {"proposed": 0, "accepted": 0})
+        k["proposed"] += 1
+        k["accepted"] += hit
+        for s in M.move_sites(mv, layout):
+            site = sites.setdefault(s, {"proposed": 0, "accepted": 0})
+            site["proposed"] += 1
+            site["accepted"] += hit
 
 
 @dataclasses.dataclass
@@ -84,9 +125,13 @@ class BCDState:
     masks: M.MaskTree
     rng: np.random.Generator
     step: int                      # next outer step index (== steps done)
-    b_ref: int                     # ||m||_0 at run start
+    b_ref: int                     # billable budget at run start
     history: List[BCDStepLog]
     snapshots: List[M.MaskTree]
+    # per-kind and per-site proposed/accepted counters, fed back into the
+    # 'sensitivity' proposal sampler.  Part of the resume state (the sampler
+    # reads it, so bit-identical replay requires restoring it).
+    move_stats: dict = dataclasses.field(default_factory=dict)
 
 
 def init_state(masks: M.MaskTree, cfg: BCDConfig) -> BCDState:
@@ -94,7 +139,8 @@ def init_state(masks: M.MaskTree, cfg: BCDConfig) -> BCDState:
     cfg.validate()
     masks = {k: np.array(v, dtype=np.float32) for k, v in masks.items()}
     return BCDState(masks=masks, rng=np.random.default_rng(cfg.seed),
-                    step=0, b_ref=M.count(masks), history=[], snapshots=[])
+                    step=0, b_ref=M.relu_cost(masks), history=[],
+                    snapshots=[])
 
 
 def _select_block(
@@ -104,6 +150,9 @@ def _select_block(
     evaluator,
     drc_t: int,
     acc_base: float,
+    *,
+    move_stats: Optional[dict] = None,
+    max_remove: Optional[int] = None,
 ):
     """One outer step's trial loop: sample RT candidate blocks, evaluate in
     chunks of ``cfg.chunk_size``, return the accepted candidate.
@@ -130,25 +179,34 @@ def _select_block(
     reordered results; the returned (winner, best_drop, trials, found) are
     provably identical to the sampling-order loop (see its docstring).
 
-    Returns (candidate_tree, best_idx, best_drop, trials_evaluated, found).
+    Candidates are typed moves (``cfg.moves`` / ``cfg.proposal`` — see
+    masks.sample_moves); all sampling happens up front, so the rng burns a
+    deterministic number of draws per step regardless of evaluation order
+    or early exit.  ``move_stats`` feeds the 'sensitivity' proposal;
+    ``max_remove`` caps macro-moves (pass ``budget - b_target``).
+
+    Returns (candidate_tree, best_idx, best_drop, trials_evaluated, found,
+    moves) — ``moves[best_idx]`` is the accepted move.
     """
     from . import engine
 
-    indices = M.sample_removal_indices(rng, masks, drc_t, cfg.rt)
+    moves = M.sample_moves(rng, masks, drc_t, cfg.rt, kinds=cfg.moves,
+                           proposal=cfg.proposal, move_stats=move_stats,
+                           max_remove=max_remove)
     flat, layout = M._flatten(masks)     # once per step, not per chunk
     # Backends may cap the chunk (engine.effective_chunk); selection is
     # invariant under chunking either way.
     chunk_size = engine.effective_chunk(evaluator, cfg.chunk_size)
     if getattr(evaluator, "site_aware", False):
         best_idx, best_drop, n_done, found = _scan_sited(
-            masks, cfg, evaluator, flat, layout, indices, chunk_size,
+            masks, cfg, evaluator, flat, layout, moves, chunk_size,
             acc_base)
     else:
         bounds = M.chunk_bounds(cfg.rt, chunk_size)
         best_idx, best_drop, found, n_done = -1, float("inf"), False, 0
         results = engine.evaluate_prefetched(
             evaluator,
-            M.materialize_chunks(flat, layout, indices, chunk_size))
+            M.materialize_move_chunks(flat, layout, moves, chunk_size))
         try:
             for (start, _), accs in zip(bounds, results):
                 drops = acc_base - np.asarray(accs, dtype=np.float64)
@@ -167,12 +225,13 @@ def _select_block(
         raise RuntimeError(
             "BCD trial loop produced no candidate: evaluator returned "
             f"{n_done} results for rt={cfg.rt} trials")
-    cand = M.materialize_from_flat(flat, layout,
-                                   indices[best_idx:best_idx + 1])
-    return M.index_stacked(cand, 0), best_idx, best_drop, n_done, found
+    cand = M.materialize_moves_from_flat(flat, layout,
+                                         [moves[best_idx]])
+    return (M.index_stacked(cand, 0), best_idx, best_drop, n_done, found,
+            moves)
 
 
-def _scan_sited(masks, cfg, evaluator, flat, layout, indices, chunk_size,
+def _scan_sited(masks, cfg, evaluator, flat, layout, moves, chunk_size,
                 acc_base):
     """Site-major trial scan with sampling-order selection replay.
 
@@ -199,16 +258,16 @@ def _scan_sited(masks, cfg, evaluator, flat, layout, indices, chunk_size,
     """
     from . import engine
 
-    rt = indices.shape[0]
+    rt = len(moves)
     evaluator.begin_step(masks)
-    order, chunks = engine.plan_sited_chunks(evaluator, indices, layout,
+    order, chunks = engine.plan_sited_chunks(evaluator, moves, layout,
                                              chunk_size)
     drops = np.full(rt, np.inf)
     evaluated = np.zeros(rt, dtype=bool)
     hit = rt                       # min sampling index with drop < adt
     results = engine.evaluate_prefetched(
         evaluator,
-        engine.materialize_sited(flat, layout, indices, order, chunks))
+        engine.materialize_sited(flat, layout, moves, order, chunks))
     try:
         for (_, s, e), accs in zip(chunks, results):
             pos = order[s:e]
@@ -258,13 +317,17 @@ def bcd_steps(
     t_cap = total_steps(state.b_ref, cfg)
     while state.step < t_cap:
         t0 = time.perf_counter()
-        budget = M.count(state.masks)
+        budget = M.relu_cost(state.masks)
         drc_t = min(cfg.drc, budget - cfg.b_target)
         if drc_t <= 0:
             return
         acc_base = float(eval_acc(state.masks))
-        masks, _, best_drop, n, found = _select_block(
-            state.masks, cfg, state.rng, evaluator, drc_t, acc_base)
+        masks, best_idx, best_drop, n, found, moves = _select_block(
+            state.masks, cfg, state.rng, evaluator, drc_t, acc_base,
+            move_stats=state.move_stats,
+            max_remove=budget - cfg.b_target)
+        _, layout = M._flatten(state.masks)
+        record_move_stats(state.move_stats, moves, best_idx, layout)
         state.masks = masks
         acc_after = None
         if finetune is not None and cfg.finetune_every_step:
@@ -272,10 +335,11 @@ def bcd_steps(
             acc_after = float(eval_acc(state.masks))
         log = BCDStepLog(
             step=state.step, budget_before=budget,
-            budget_after=M.count(state.masks),
+            budget_after=M.relu_cost(state.masks),
             trials=n, found_early=found, best_drop=best_drop,
             acc_before=acc_base, acc_after_finetune=acc_after,
-            wall_s=time.perf_counter() - t0)
+            wall_s=time.perf_counter() - t0,
+            move_kind=moves[best_idx].kind)
         state.step += 1
         state.history.append(log)
         if keep_snapshots:
@@ -284,6 +348,7 @@ def bcd_steps(
         if verbose:
             print(f"[bcd] t={log.step} budget "
                   f"{log.budget_before}->{log.budget_after}"
+                  f" move={log.move_kind}"
                   f" trials={n} early={found} drop={best_drop:.3f}%"
                   f" acc={acc_base:.2f}->"
                   f"{acc_after if acc_after is not None else float('nan'):.2f}"
@@ -292,8 +357,9 @@ def bcd_steps(
 
 
 def check_reached_target(state: BCDState, cfg: BCDConfig) -> None:
-    """Raise if a completed schedule did not land exactly on b_target."""
-    final = M.count(state.masks)
+    """Raise if a completed schedule did not land exactly on b_target
+    (billable budget — share-tied coordinates don't count)."""
+    final = M.relu_cost(state.masks)
     if final != cfg.b_target:
         raise RuntimeError(
             f"BCD terminated at budget {final}, target {cfg.b_target} "
@@ -330,4 +396,5 @@ def run_bcd(
                        verbose=verbose, keep_snapshots=keep_snapshots):
         pass
     check_reached_target(state, cfg)
-    return BCDResult(state.masks, state.history, state.snapshots)
+    return BCDResult(state.masks, state.history, state.snapshots,
+                     state.move_stats)

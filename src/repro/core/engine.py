@@ -924,9 +924,13 @@ class SuffixEvaluator:
         return self.evaluate_staged(self.stage(item))
 
 
-def plan_sited_chunks(evaluator: SuffixEvaluator, indices: np.ndarray,
-                      layout: list, chunk_size: int):
+def plan_sited_chunks(evaluator: SuffixEvaluator, indices, layout: list,
+                      chunk_size: int):
     """Site-major evaluation plan for the suffix backend.
+
+    ``indices`` is either an (n, k) flat-coordinate array
+    (``masks.sample_removal_indices``) or a list of typed
+    :class:`masks.Move` candidates (``masks.sample_moves``).
 
     Returns ``(order, chunks)``: ``order`` is a permutation of candidate
     positions — grouped by the *cut segment* of each candidate's earliest
@@ -935,12 +939,15 @@ def plan_sited_chunks(evaluator: SuffixEvaluator, indices: np.ndarray,
     chunks never straddle a group, so every sited chunk shares one prefix;
     groups are emitted depth-ascending, so the trie extends each prefix
     from its predecessor instead of recomputing from the input (the trie
-    locality ``core.bcd._scan_sited`` relies on).  ``site is None`` marks
-    chunks the cost model sent down the full-forward fallback (shallow cut
-    or undersized chunk); runs of adjacent fallback chunks are coalesced
-    back up to ``chunk_size`` (``masks.coalesce_fallback_chunks``) so a
-    fragmented depth mix doesn't degrade the inner pipeline into ragged
-    dispatches.
+    locality ``core.bcd._scan_sited`` relies on).  Multi-site moves (swap /
+    share / add_back) group by the *shallowest* site they touch — over
+    off ∪ on ∪ tie (``masks.group_moves_by_site``) — because a cached
+    prefix is only reusable if it reads none of the candidate's edited
+    masks.  ``site is None`` marks chunks the cost model sent down the
+    full-forward fallback (shallow cut or undersized chunk); runs of
+    adjacent fallback chunks are coalesced back up to ``chunk_size``
+    (``masks.coalesce_fallback_chunks``) so a fragmented depth mix doesn't
+    degrade the inner pipeline into ragged dispatches.
 
     Suffix-vs-fallback pricing is trie-aware: the cost model sees the cut's
     prefix fraction *and* the fraction already resident in the trie
@@ -949,8 +956,12 @@ def plan_sited_chunks(evaluator: SuffixEvaluator, indices: np.ndarray,
     built after :meth:`SuffixEvaluator.begin_step` — surviving entries are
     part of the price."""
     split = evaluator._split
-    order, groups = M.group_blocks_by_site(indices, layout,
-                                           split.site_segment)
+    if isinstance(indices, (list, tuple)):
+        order, groups = M.group_moves_by_site(indices, layout,
+                                              split.site_segment)
+    else:
+        order, groups = M.group_blocks_by_site(indices, layout,
+                                               split.site_segment)
     raw = []
     planned_cover = 0.0   # prefixes earlier planned chunks will have cached
     for seg, g0, g1 in groups:
@@ -972,15 +983,22 @@ def plan_sited_chunks(evaluator: SuffixEvaluator, indices: np.ndarray,
     return order, M.coalesce_fallback_chunks(raw, chunk_size)
 
 
-def materialize_sited(flat: np.ndarray, layout: list, indices: np.ndarray,
+def materialize_sited(flat: np.ndarray, layout: list, indices,
                       order: np.ndarray, chunks) -> Iterator[SitedChunk]:
     """Lazy :class:`SitedChunk` producer over a ``plan_sited_chunks`` plan
     (the site-aware counterpart of ``masks.materialize_chunks`` — same
     laziness contract: the prefetch pipeline pulls it, early exit closes
-    it)."""
+    it).  ``indices`` matches ``plan_sited_chunks``: an (n, k) removal
+    array or a list of typed ``masks.Move`` candidates."""
+    typed = isinstance(indices, (list, tuple))
     for site, s, e in chunks:
-        yield SitedChunk(site, M.materialize_from_flat(
-            flat, layout, indices[order[s:e]]))
+        sel = order[s:e]
+        if typed:
+            stacked = M.materialize_moves_from_flat(
+                flat, layout, [indices[int(i)] for i in sel])
+        else:
+            stacked = M.materialize_from_flat(flat, layout, indices[sel])
+        yield SitedChunk(site, stacked)
 
 
 def make_evaluator(

@@ -98,12 +98,39 @@ def init_poly(sites: Dict[str, MaskSite]) -> Dict[str, jnp.ndarray]:
     return out
 
 
+def _apply_share_ties(x, mask, out):
+    """Override share-tied coordinates (``masks.TIE``) in a hard-masked
+    activation output.
+
+    A tied coordinate keeps its gate but reuses the *sign decision* of its
+    driver — the previous coordinate along the site's last axis (DeepShare-
+    style neighbor sharing: one garbled-circuit comparison serves both
+    coordinates in the PI protocol, which is why ``masks.relu_cost`` does
+    not bill ties).  ``out = x * H(x_driver)`` where H is the Heaviside
+    step on the driver's pre-activation.  Binary masks make ``tied``
+    all-False and the ``where`` selects ``out`` everywhere — bit-identical
+    to the pre-move-vocabulary forward, so kernel-parity and backend-
+    equivalence contracts are unchanged.
+
+    Note: the fused conv/matmul suffix kernels (``fused_suffix_route``)
+    bypass this wrapper — run share-enabled configs with
+    ``fused_kernels=False`` on the suffix backend (inert off-TPU, where
+    the fused route never arms).
+    """
+    tied = (mask > 0.5) & (mask < 0.9)
+    drv = (jnp.roll(x, 1, axis=-1) > 0).astype(x.dtype)
+    return jnp.where(tied, x * drv, out)
+
+
 def apply_masked_act(x, mask, site: MaskSite, poly=None, soft: bool = False):
     """Apply the (possibly soft, for SNL) masked activation at a site.
 
     x: (batch..., *site.shape) — site shape must be the trailing dims.
     soft=True keeps real-valued masks differentiable (SNL's relaxation);
-    hard masks route through the fused kernel wrapper.
+    hard masks route through the fused kernel wrapper.  Hard masks may
+    carry share-tied coordinates (``masks.TIE``), overridden by
+    :func:`_apply_share_ties`; soft mode treats every real value as an SNL
+    relaxation weight and never ties.
     """
     from repro.kernels import ref
     p = None
@@ -124,7 +151,10 @@ def apply_masked_act(x, mask, site: MaskSite, poly=None, soft: bool = False):
             a, b, c = p[0], p[1], p[2]
             lin = a * x * x + b * x + c
         m = mask.astype(x.dtype)
-        return m * y + (1.0 - m) * lin
+        out = m * y + (1.0 - m) * lin
+        return out if soft else _apply_share_ties(x, mask, out)
     if stacked_route_active():
-        return ops.masked_act_sited_routed(x, mask, kind=site.kind, poly=p)
-    return ops.masked_act_sited(x, mask, kind=site.kind, poly=p)
+        out = ops.masked_act_sited_routed(x, mask, kind=site.kind, poly=p)
+    else:
+        out = ops.masked_act_sited(x, mask, kind=site.kind, poly=p)
+    return _apply_share_ties(x, mask, out)

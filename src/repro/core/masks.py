@@ -13,13 +13,24 @@ per outer iteration, never inside a jitted step.
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
+import re
 
 import numpy as np
 import jax.numpy as jnp
-from typing import Dict, Iterable, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 MaskTree = Dict[str, np.ndarray]
+
+# Mask coordinate values.  Binary masks use {0.0, 1.0}; `share` moves
+# introduce a third *tied* state: the coordinate keeps its nonlinearity but
+# reuses the sign decision of its driver (the previous coordinate along the
+# site's last axis — see core.linearize.apply_masked_act), so it does not
+# pay for its own garbled-circuit comparison.  TIE sits strictly inside
+# (0.5, 0.9): `count` (> 0.5) still sees it as nonlinear, `relu_cost`
+# (> 0.9) does not bill it.
+TIE = 0.75
 
 
 def as_device(masks: MaskTree) -> Dict[str, jnp.ndarray]:
@@ -33,8 +44,23 @@ def full_masks(shapes: Dict[str, Tuple[int, ...]]) -> MaskTree:
 
 
 def count(masks: MaskTree) -> int:
-    """||m||_0 — the current ReLU budget."""
+    """||m||_0 — coordinates that keep *a* nonlinearity (full or tied)."""
     return int(sum(int(np.sum(v > 0.5)) for v in masks.values()))
+
+
+def relu_cost(masks: MaskTree) -> int:
+    """Billable ReLU count: coordinates that pay for their own comparison.
+
+    This is the budget metric Alg. 2 descends (core.bcd) and the quantity
+    the PI cost model charges for (core.pi_cost): share-tied coordinates
+    (value :data:`TIE`) keep their gate but reuse the driver's comparison,
+    so they are excluded.  Equal to :func:`count` on binary trees."""
+    return int(sum(int(np.sum(v > 0.9)) for v in masks.values()))
+
+
+def tied_count(masks: MaskTree) -> int:
+    """Coordinates in the share-tied state (``0.5 < m <= 0.9``)."""
+    return count(masks) - relu_cost(masks)
 
 
 def total_size(masks: MaskTree) -> int:
@@ -209,6 +235,14 @@ def group_blocks_by_site(indices: np.ndarray, layout: list,
                      dtype=np.int64)
     site_of = np.searchsorted(offs, indices.reshape(-1), side="right") - 1
     cand_rank = ranks[site_of].reshape(indices.shape).min(axis=1)
+    return _group_by_rank(cand_rank)
+
+
+def _group_by_rank(cand_rank: np.ndarray):
+    """Stable-sort candidate positions by rank -> (order, groups) in the
+    :func:`group_blocks_by_site` contract (shared with the move-aware
+    grouping :func:`group_moves_by_site`)."""
+    n = cand_rank.shape[0]
     order = np.argsort(cand_rank, kind="stable").astype(np.int64)
     sorted_ranks = cand_rank[order]
     cuts = np.flatnonzero(np.diff(sorted_ranks)) + 1
@@ -216,6 +250,367 @@ def group_blocks_by_site(indices: np.ndarray, layout: list,
     groups = [(int(sorted_ranks[s]), s, e)
               for s, e in zip(bounds[:-1], bounds[1:])]
     return order, groups
+
+
+# ------------------------------------------------------------ typed moves
+#
+# The paper's Alg. 2 samples one move type only — "zero a block of drc
+# active coordinates".  The move vocabulary below generalizes a candidate to
+# a typed edit of the flat mask vector while keeping the engine's contracts
+# intact: every sampled move changes the *billable* budget (`relu_cost`) by
+# exactly -drc, so the outer schedule (core.bcd.total_steps /
+# check_reached_target) is untouched, and all sampling happens up front so
+# the rng burns a deterministic number of draws per candidate regardless of
+# evaluation order or early exit.
+
+MOVE_KINDS = ("remove", "add_back", "swap", "stage_drop", "share")
+PROPOSALS = ("uniform", "sensitivity")
+
+
+def _as_coords(a) -> np.ndarray:
+    return np.asarray(a, dtype=np.int64).reshape(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Move:
+    """One typed candidate edit over flat mask coordinates.
+
+    ``off`` coordinates are set to 0.0 (linearized), ``on`` to 1.0
+    (re-activated), ``tie`` to :data:`TIE` (share-tied to the previous
+    coordinate on the site's last axis).  The three sets must be disjoint;
+    application order is irrelevant.  ``kind`` is a label for stats /
+    logging — semantics live entirely in the coordinate sets, which is what
+    makes the move algebra checkable: ``swap(off, on)`` applies identically
+    to ``add_back(on) ∘ remove(off)``.
+    """
+    kind: str
+    off: np.ndarray = dataclasses.field(default_factory=lambda: _as_coords([]))
+    on: np.ndarray = dataclasses.field(default_factory=lambda: _as_coords([]))
+    tie: np.ndarray = dataclasses.field(default_factory=lambda: _as_coords([]))
+
+    def __post_init__(self):
+        object.__setattr__(self, "off", _as_coords(self.off))
+        object.__setattr__(self, "on", _as_coords(self.on))
+        object.__setattr__(self, "tie", _as_coords(self.tie))
+        sets = [set(self.off.tolist()), set(self.on.tolist()),
+                set(self.tie.tolist())]
+        total = len(sets[0]) + len(sets[1]) + len(sets[2])
+        if len(sets[0] | sets[1] | sets[2]) != total:
+            raise ValueError(
+                f"move coordinate sets must be disjoint (kind={self.kind}, "
+                f"off={self.off}, on={self.on}, tie={self.tie})")
+
+    # ---- constructors (the algebra the property tests exercise)
+
+    @staticmethod
+    def remove(off) -> "Move":
+        return Move("remove", off=off)
+
+    @staticmethod
+    def add_back(on, off=()) -> "Move":
+        return Move("add_back", off=off, on=on)
+
+    @staticmethod
+    def swap(off, on) -> "Move":
+        return Move("swap", off=off, on=on)
+
+    @staticmethod
+    def stage_drop(off) -> "Move":
+        return Move("stage_drop", off=off)
+
+    @staticmethod
+    def share(tie, off=()) -> "Move":
+        return Move("share", off=off, tie=tie)
+
+    def touched(self) -> np.ndarray:
+        """All flat coordinates this move edits (off ∪ on ∪ tie)."""
+        return np.concatenate([self.off, self.on, self.tie])
+
+    def apply_flat(self, flat: np.ndarray) -> np.ndarray:
+        out = flat.copy()
+        out[self.off] = 0.0
+        out[self.on] = 1.0
+        out[self.tie] = TIE
+        return out
+
+    def billable_delta(self, flat: np.ndarray) -> int:
+        """Change in :func:`relu_cost` if applied to ``flat``."""
+        before = int(np.sum(flat > 0.9))
+        return int(np.sum(self.apply_flat(flat) > 0.9)) - before
+
+
+def apply_move(masks: MaskTree, move: Move) -> MaskTree:
+    """``masks`` with ``move`` applied (input untouched)."""
+    flat, layout = _flatten(masks)
+    return _unflatten(move.apply_flat(flat), layout)
+
+
+def move_sites(move: Move, layout: list) -> Tuple[str, ...]:
+    """Sorted site names a move touches (for per-site acceptance stats)."""
+    coords = move.touched()
+    if coords.size == 0:
+        return ()
+    offs = np.array([off for _, off, _, _ in layout], dtype=np.int64)
+    keys = [k for k, _, _, _ in layout]
+    site_of = np.searchsorted(offs, coords, side="right") - 1
+    return tuple(sorted({keys[int(i)] for i in site_of}))
+
+
+_STAGE_RE = re.compile(r"^(g\d+)b\d+")
+
+
+def default_stage_of(site: str) -> str:
+    """Model-agnostic site -> stage key for ``stage_drop`` macro-moves.
+
+    ResNet block sites (``g{stage}b{block}.relu{i}``, models.resnet) map to
+    their stage (``g0b1.relu2 -> g0``); everything else maps to its
+    top-level prefix (``stem.relu -> stem``, ``blocks.ffn -> blocks``).
+    Pass an explicit ``stage_of`` to :func:`sample_moves` to override."""
+    m = _STAGE_RE.match(site)
+    return m.group(1) if m else site.split(".", 1)[0]
+
+
+def _kind_weights(kinds: Sequence[str], proposal: str,
+                  move_stats: Optional[dict]) -> np.ndarray:
+    """Proposal distribution over move kinds.
+
+    ``uniform``: equal mass.  ``sensitivity``: Laplace-smoothed acceptance
+    rate per kind from the run's history (Learning-to-Linearize-style
+    guidance) — a pure function of ``move_stats``, which round-trips
+    through checkpoints, so resumed runs replay the same draws."""
+    if proposal != "sensitivity" or not move_stats:
+        return np.full(len(kinds), 1.0 / len(kinds))
+    ks = move_stats.get("kinds", {})
+    w = np.array([(ks.get(k, {}).get("accepted", 0) + 1.0)
+                  / (ks.get(k, {}).get("proposed", 0) + 2.0) for k in kinds],
+                 dtype=np.float64)
+    return w / w.sum()
+
+
+def _site_coord_weights(flat: np.ndarray, layout: list, coords: np.ndarray,
+                        move_stats: Optional[dict]) -> Optional[np.ndarray]:
+    """Per-coordinate sampling weights from per-site acceptance history
+    (``sensitivity`` proposal): a coordinate inherits its site's smoothed
+    acceptance rate.  None -> uniform (no history yet)."""
+    site_stats = (move_stats or {}).get("sites", {})
+    if not site_stats or coords.size == 0:
+        return None
+    offs = np.array([off for _, off, _, _ in layout], dtype=np.int64)
+    keys = [k for k, _, _, _ in layout]
+    w_site = np.array(
+        [(site_stats.get(k, {}).get("accepted", 0) + 1.0)
+         / (site_stats.get(k, {}).get("proposed", 0) + 2.0) for k in keys],
+        dtype=np.float64)
+    p = w_site[np.searchsorted(offs, coords, side="right") - 1]
+    return p / p.sum()
+
+
+def _choice(rng, pool: np.ndarray, k: int, p=None) -> np.ndarray:
+    if k <= 0:
+        return _as_coords([])
+    return _as_coords(rng.choice(pool, size=k, replace=False, p=p)) \
+        if p is not None else \
+        _as_coords(rng.choice(pool, size=k, replace=False))
+
+
+def _sample_one_move(rng, flat, layout, drc, kind, proposal, move_stats,
+                     stage_of, max_remove) -> Move:
+    """Sample one candidate of the given kind (net billable change -drc).
+
+    Kinds that cannot be realized in the current mask state (no inactive
+    coordinate to add back, no share-eligible coordinate, ...) degrade to a
+    plain removal so the candidate still advances the schedule.  ``remove``
+    with the default uniform proposal burns exactly the legacy
+    ``rng.choice(active, size=k, replace=False)`` draw — bit-identical to
+    :func:`sample_removal_indices` — so ``moves=("remove",)`` configs
+    replay historical runs unchanged."""
+    active = np.nonzero(flat > 0.9)[0]
+    k = min(drc, active.size)
+
+    if kind == "remove":
+        p = _site_coord_weights(flat, layout, active, move_stats) \
+            if proposal == "sensitivity" else None
+        return Move.remove(_choice(rng, active, k, p))
+
+    if kind == "add_back":
+        inactive = np.nonzero(flat <= 0.5)[0]
+        # re-activate `a`, remove k + a: net -k.  Shrink a when there is
+        # nothing to revive or too few actives to pay for the revival.
+        a = min(1, inactive.size, max(0, active.size - k))
+        if a == 0:
+            return Move.remove(_choice(rng, active, k))
+        on = _choice(rng, inactive, a)
+        return Move.add_back(on, off=_choice(rng, active, k + a))
+
+    if kind == "swap":
+        # exchange one (off, on) pair inside a single site, plus k rider
+        # removals that keep the step's budget schedule
+        offs_l = {key: (off, n) for key, off, n, _ in layout}
+        eligible = [key for key, off, n, _ in layout
+                    if np.any(flat[off:off + n] > 0.9)
+                    and np.any(flat[off:off + n] <= 0.5)]
+        if not eligible or active.size <= k:
+            return Move.remove(_choice(rng, active, k))
+        site = eligible[int(rng.integers(len(eligible)))]
+        off0, n0 = offs_l[site]
+        local = flat[off0:off0 + n0]
+        on = _choice(rng, np.nonzero(local <= 0.5)[0] + off0, 1)
+        off_sw = _choice(rng, np.nonzero(local > 0.9)[0] + off0, 1)
+        rest = np.setdiff1d(active, off_sw, assume_unique=True)
+        return Move.swap(np.concatenate([off_sw, _choice(rng, rest, k)]), on)
+
+    if kind == "stage_drop":
+        # DeepReDuce-style macro-move: remove a whole stage's remaining
+        # actives (never overshooting b_target, never under drc)
+        stage_of = stage_of or default_stage_of
+        cap = k if max_remove is None else max(k, min(int(max_remove),
+                                                      active.size))
+        stages: Dict[str, list] = {}
+        for key, off, n, _ in layout:
+            hot = np.nonzero(flat[off:off + n] > 0.9)[0] + off
+            if hot.size:
+                stages.setdefault(stage_of(key), []).append(hot)
+        names = sorted(stages)
+        if not names:
+            return Move.remove(_choice(rng, active, k))
+        st = names[int(rng.integers(len(names)))]
+        pool = np.concatenate(stages[st])
+        take = min(pool.size, cap)
+        off = pool if take == pool.size else _choice(rng, pool, take)
+        if take < k:            # tiny stage: top up to the schedule's drc
+            rest = np.setdiff1d(active, off, assume_unique=True)
+            off = np.concatenate([off, _choice(rng, rest, k - take)])
+        return Move.stage_drop(off)
+
+    if kind == "share":
+        eligible = share_eligible(flat, layout)
+        perm = _as_coords(rng.permutation(eligible)) if eligible.size \
+            else eligible
+        chosen: list = []
+        taken = set()
+        for idx in perm.tolist():
+            if len(chosen) >= k:
+                break
+            if idx - 1 in taken or idx + 1 in taken:
+                continue        # the driver must stay a full ReLU
+            chosen.append(idx)
+            taken.add(idx)
+        tie = _as_coords(chosen)
+        if tie.size < k:        # not enough tie sites: top up with removals
+            drivers = tie - 1
+            pool = np.setdiff1d(active, np.concatenate([tie, drivers]),
+                                assume_unique=False)
+            if k - tie.size > pool.size:
+                # cannot reach -drc with ties + removals (end-of-schedule
+                # corner): a plain removal always can
+                return Move.remove(_choice(rng, active, k))
+            return Move.share(tie, off=_choice(rng, pool, k - tie.size))
+        return Move.share(tie)
+
+    raise ValueError(f"unknown move kind {kind!r}; expected one of "
+                     f"{MOVE_KINDS}")
+
+
+def share_eligible(flat: np.ndarray, layout: list) -> np.ndarray:
+    """Flat coordinates a ``share`` move may tie: billable actives whose
+    driver — the previous coordinate along the site's last axis — exists
+    (no wraparound) and is itself a billable active."""
+    out = []
+    for _, off, n, shape in layout:
+        local = flat[off:off + n] > 0.9
+        last = shape[-1] if shape else 1
+        pos = np.arange(n) % last
+        ok = local & (pos > 0)
+        ok[1:] &= local[:-1]
+        ok[:1] = False
+        out.append(np.nonzero(ok)[0] + off)
+    return np.concatenate(out) if out else _as_coords([])
+
+
+def sample_moves(
+    rng: np.random.Generator, masks: MaskTree, drc: int, n: int, *,
+    kinds: Sequence[str] = ("remove",), proposal: str = "uniform",
+    move_stats: Optional[dict] = None, stage_of=None,
+    max_remove: Optional[int] = None,
+) -> List[Move]:
+    """Sample ``n`` independent typed candidates (Alg. 2 line 8, typed).
+
+    Every candidate nets exactly ``-drc`` billable ReLUs (``stage_drop``
+    may remove more, capped by ``max_remove`` — pass ``budget - b_target``
+    so macro-moves never overshoot the schedule).  With the default
+    ``kinds=("remove",)`` and ``proposal="uniform"`` the rng stream is
+    bit-identical to :func:`sample_removal_indices`: no kind draw is made
+    and each candidate burns one ``rng.choice`` over the active set.
+    """
+    for kind in kinds:
+        if kind not in MOVE_KINDS:
+            raise ValueError(f"unknown move kind {kind!r}; expected a "
+                             f"subset of {MOVE_KINDS}")
+    if proposal not in PROPOSALS:
+        raise ValueError(f"unknown proposal {proposal!r}; expected one of "
+                         f"{PROPOSALS}")
+    flat, layout = _flatten(masks)
+    weights = _kind_weights(kinds, proposal, move_stats) \
+        if len(kinds) > 1 else None
+    moves = []
+    for _ in range(n):
+        kind = kinds[0] if weights is None else \
+            kinds[int(rng.choice(len(kinds), p=weights))]
+        moves.append(_sample_one_move(rng, flat, layout, drc, kind,
+                                      proposal, move_stats, stage_of,
+                                      max_remove))
+    return moves
+
+
+def materialize_moves_from_flat(flat: np.ndarray, layout: list,
+                                moves: Sequence[Move]) -> MaskTree:
+    """Stacked candidate tree for typed moves (the move-aware counterpart
+    of :func:`materialize_from_flat` — candidate ``i`` is
+    ``moves[i].apply_flat(flat)``)."""
+    n = len(moves)
+    stacked = np.broadcast_to(flat, (n, flat.size)).copy()
+    for i, mv in enumerate(moves):
+        stacked[i, mv.off] = 0.0
+        stacked[i, mv.on] = 1.0
+        stacked[i, mv.tie] = TIE
+    return unflatten_stacked(stacked, layout)
+
+
+def materialize_move_chunks(flat: np.ndarray, layout: list,
+                            moves: Sequence[Move], chunk_size: int):
+    """Lazy chunk producer over typed moves (same laziness contract as
+    :func:`materialize_chunks`: the prefetch pipeline pulls it, an ADT
+    early exit closes it)."""
+    for start, stop in chunk_bounds(len(moves), chunk_size):
+        yield materialize_moves_from_flat(flat, layout, moves[start:stop])
+
+
+def move_site_ranks(moves: Sequence[Move], layout: list,
+                    rank_of_site: Dict[str, int]) -> np.ndarray:
+    """Each move's earliest-touched-site rank over off ∪ on ∪ tie.
+
+    Multi-site moves (swap/share/add_back) are grouped by the *shallowest*
+    site they edit: a cached forward prefix is only valid if it reads no
+    edited mask, so the cut must sit at or above every touched coordinate."""
+    offs = np.array([off for _, off, _, _ in layout], dtype=np.int64)
+    ranks = np.array([rank_of_site[k] for k, _, _, _ in layout],
+                     dtype=np.int64)
+    out = np.empty(len(moves), dtype=np.int64)
+    for i, mv in enumerate(moves):
+        coords = mv.touched()
+        site_of = np.searchsorted(offs, coords, side="right") - 1
+        out[i] = int(ranks[site_of].min()) if coords.size else int(ranks.min())
+    return out
+
+
+def group_moves_by_site(moves: Sequence[Move], layout: list,
+                        rank_of_site: Dict[str, int]):
+    """:func:`group_blocks_by_site` for typed moves: group by the earliest
+    touched site over off ∪ on ∪ tie (same ``(order, groups)`` contract)."""
+    n = len(moves)
+    if n == 0:
+        return np.arange(0, dtype=np.int64), []
+    return _group_by_rank(move_site_ranks(moves, layout, rank_of_site))
 
 
 def sample_removal_indices_within(
@@ -315,6 +710,13 @@ def stacked_counts(stacked: MaskTree) -> np.ndarray:
                stacked.values()).astype(np.int64)
 
 
+def stacked_relu_costs(stacked: MaskTree) -> np.ndarray:
+    """Per-candidate billable ReLUs — vectorized :func:`relu_cost`."""
+    n = stacked_len(stacked)
+    return sum(np.sum(v.reshape(n, -1) > 0.9, axis=1) for v in
+               stacked.values()).astype(np.int64)
+
+
 def remove_random(rng: np.random.Generator, masks: MaskTree, n: int) -> MaskTree:
     """Uniform random removal (the naive baseline BCD is compared against)."""
     return sample_removal_block(rng, masks, n)
@@ -341,13 +743,21 @@ def fingerprint(masks: MaskTree) -> str:
     keep/linearize exactly the same coordinates — the identity used by
     resume tests and the sweep curve artifact (float payloads are reduced
     to their >0.5 binarization, so dtype/storage differences don't leak
-    into the identity)."""
+    into the identity).  Sites carrying share-tied coordinates additionally
+    hash their >0.9 (driver) plane, so a tied tree and its fully-active
+    binarization fingerprint differently; binary sites hash exactly as they
+    always have."""
     h = hashlib.sha256()
     for k in sorted(masks.keys()):
         v = np.asarray(masks[k])
         h.update(k.encode())
         h.update(repr(tuple(v.shape)).encode())
-        h.update(np.packbits(v.reshape(-1) > 0.5).tobytes())
+        nz = v.reshape(-1) > 0.5
+        h.update(np.packbits(nz).tobytes())
+        full = v.reshape(-1) > 0.9
+        if bool(np.any(nz & ~full)):
+            h.update(b"tied")
+            h.update(np.packbits(full).tobytes())
     return h.hexdigest()
 
 

@@ -48,6 +48,23 @@ def cost(relu_count: int, n_nonlinear_layers: int,
     return PICost(relu_count, online, offline, latency, online + offline)
 
 
+def cost_of_masks(masks, n_nonlinear_layers: int,
+                  proto: PIProtocol = PIProtocol(),
+                  linear_params: int = 0) -> PICost:
+    """:func:`cost` for a mask tree — bills *driver* ReLUs only.
+
+    Before share moves, ``||m||_0 == billable ReLUs``; a share-tied
+    coordinate (``masks.TIE``) keeps its gate but reuses its driver's
+    garbled-circuit comparison, so the protocol is charged
+    ``masks.relu_cost`` (coordinates > 0.9), not ``masks.count``.  The
+    reconstruction share for a tied coordinate rides in the driver's
+    existing message — no extra bytes, no extra rounds.
+    """
+    from . import masks as M
+    return cost(M.relu_cost(masks), n_nonlinear_layers, proto,
+                linear_params)
+
+
 def saving(b_ref: int, b_target: int, n_layers: int,
            proto: PIProtocol = PIProtocol()):
     """(latency_ref, latency_target, speedup) for a linearization run."""

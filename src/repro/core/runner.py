@@ -26,6 +26,7 @@ from an SNL or AutoReP reference checkpoint.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import signal
 from typing import Callable, Optional, Tuple
@@ -82,7 +83,10 @@ def rng_from_state(state: dict) -> np.random.Generator:
 
 
 def _cfg_meta(cfg: bcd_lib.BCDConfig) -> dict:
-    return dataclasses.asdict(cfg)
+    # normalize through JSON so the saved manifest (which stores JSON) and
+    # the live config compare equal — e.g. cfg.moves is a tuple in memory
+    # but a list on disk
+    return json.loads(json.dumps(dataclasses.asdict(cfg)))
 
 
 def save_run_state(state: bcd_lib.BCDState, cfg: bcd_lib.BCDConfig,
@@ -110,6 +114,7 @@ def save_run_state(state: bcd_lib.BCDState, cfg: bcd_lib.BCDConfig,
         "rng": rng_state_to_jsonable(state.rng),
         "history": [dataclasses.asdict(h) for h in state.history],
         "cfg": _cfg_meta(cfg),
+        "move_stats": state.move_stats,
         "has_params": params is not None,
     }
     if coordinator is not None:
@@ -170,7 +175,8 @@ def restore_run_state(
     state = bcd_lib.BCDState(
         masks=masks, rng=rng_from_state(meta["rng"]),
         step=int(meta["step"]), b_ref=int(meta["b_ref"]),
-        history=history, snapshots=[])
+        history=history, snapshots=[],
+        move_stats=meta.get("move_stats", {}))
     return state, tree.get("params")
 
 
@@ -197,7 +203,7 @@ def save_stage_init(path: str, init: dict, *, meta: Optional[dict] = None
     info = {
         "stage_init": True,
         "kind": init.get("kind", "unknown"),
-        "budget": M.count(init["masks"]),
+        "budget": M.relu_cost(init["masks"]),
         "mask_fingerprint": M.fingerprint(init["masks"]),
         "has_params": init.get("params") is not None,
     }
@@ -368,7 +374,7 @@ class BCDRunner:
         self.resumed_from = state.step
         if self.run_cfg.verbose:
             print(f"[runner] resumed {self.run_cfg.ckpt_dir} at step "
-                  f"{state.step} (budget {M.count(state.masks)})")
+                  f"{state.step} (budget {M.relu_cost(state.masks)})")
         return state
 
     def _checkpoint(self, state: bcd_lib.BCDState) -> None:
@@ -395,7 +401,8 @@ class BCDRunner:
         state = self._restore_or_init(init_masks)
         self.stopped_early = False
         if self.bcd_cfg.b_target >= state.b_ref:
-            return bcd_lib.BCDResult(state.masks, state.history, [])
+            return bcd_lib.BCDResult(state.masks, state.history, [],
+                                     state.move_stats)
         done_now = 0
         since_ckpt = 0
         for _log in bcd_lib.bcd_steps(
@@ -408,11 +415,12 @@ class BCDRunner:
                 since_ckpt = 0
             if self.run_cfg.max_steps is not None and \
                     done_now >= self.run_cfg.max_steps and \
-                    M.count(state.masks) > self.bcd_cfg.b_target:
+                    M.relu_cost(state.masks) > self.bcd_cfg.b_target:
                 self.stopped_early = True
                 break
         if since_ckpt:
             self._checkpoint(state)
         if not self.stopped_early:
             bcd_lib.check_reached_target(state, self.bcd_cfg)
-        return bcd_lib.BCDResult(state.masks, state.history, state.snapshots)
+        return bcd_lib.BCDResult(state.masks, state.history, state.snapshots,
+                                 state.move_stats)

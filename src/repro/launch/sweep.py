@@ -366,7 +366,7 @@ def run_sweep(
         start = runner_lib.load_stage_init(
             init_path, init["masks"],
             params_template=params_io[0]() if params_io else None)
-    b_init = M.count(start["masks"])
+    b_init = M.relu_cost(start["masks"])
     sweep_cfg.validate(b_init)
 
     masks = start["masks"]
@@ -493,6 +493,7 @@ def _sweep_stages(sweep_cfg, make_bcd_cfg, eval_acc, finetune, evaluator,
                 "trials_total": int(sum(h.trials for h in res.history)),
                 "history": [_log_jsonable(h) for h in res.history],
                 "resumed_from": runner.resumed_from,
+                "move_stats": res.move_stats,
                 "wall_s": time.perf_counter() - t0,
             }
             # persist the stage's warm-start for its successor BEFORE the

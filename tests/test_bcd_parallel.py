@@ -256,7 +256,7 @@ def test_early_exit_stops_at_first_chunk_with_hit():
     ev = _ScriptedEvaluator(acc_base - np.array([1.0, 0.9, 0.8, 0.1,
                                                  0.0, 0.0]))
     rng = np.random.default_rng(cfg.seed)
-    cand, idx, drop, trials, found = bcd._select_block(
+    cand, idx, drop, trials, found, _moves = bcd._select_block(
         masks, cfg, rng, ev, 4, acc_base)
     assert ev.chunks == [2, 2]                  # third chunk never evaluated
     assert (idx, trials, found) == (3, 4, True)
@@ -274,7 +274,7 @@ def test_no_early_exit_takes_first_occurrence_argmin():
                         chunk_size=4, seed=0)
     drops = np.array([1.0, 0.7, 0.9, 0.7, 0.8, 0.7])   # tie at 0.7
     ev = _ScriptedEvaluator(90.0 - drops)
-    _, idx, drop, trials, found = bcd._select_block(
+    _, idx, drop, trials, found, _moves = bcd._select_block(
         masks, cfg, np.random.default_rng(0), ev, 4, 90.0)
     assert ev.chunks == [4, 2]                  # all chunks evaluated
     assert (idx, trials, found) == (1, 6, False)

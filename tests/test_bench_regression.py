@@ -204,3 +204,52 @@ def test_provenance_block_does_not_break_comparability(tmp_path, capsys):
         {"seq": 100.0}, provenance={"jax": "0.9.9", "device_kind": "tpu"}))
     rc, out = _run([base, fresh], capsys)
     assert rc == 0, out
+
+
+# ------------------------------------------------- --sweep-acc mode
+
+
+def _sweep(accs):
+    """A minimal launch.sweep artifact: {budget: test_acc | None}."""
+    return {"stages": [
+        {"stage": i, "budget": b,
+         **({} if acc is None else {"test_acc": acc})}
+        for i, (b, acc) in enumerate(sorted(accs.items(), reverse=True))]}
+
+
+def test_sweep_acc_pass_and_drop(tmp_path, capsys):
+    base = _write(tmp_path, "rm.json", _sweep({800: 91.0, 600: 85.0}))
+    ok = _write(tmp_path, "mix_ok.json", _sweep({800: 91.0, 600: 86.5}))
+    rc, out = _run([base, ok, "--sweep-acc"], capsys)
+    assert rc == 0 and "PASS" in out
+
+    drop = _write(tmp_path, "mix_drop.json", _sweep({800: 91.0, 600: 84.0}))
+    rc, out = _run([base, drop, "--sweep-acc"], capsys)
+    assert rc == 1 and "ACCURACY DROP" in out and "B=600" in out
+    # ...but an explicit tolerance absorbs the same drop
+    rc, out = _run([base, drop, "--sweep-acc", "--acc-tolerance", "1.0"],
+                   capsys)
+    assert rc == 0, out
+
+
+def test_sweep_acc_one_sided_budgets_never_gate(tmp_path, capsys):
+    """A longer fresh schedule (extra budgets) is reported, not failed."""
+    base = _write(tmp_path, "rm.json", _sweep({800: 91.0}))
+    fresh = _write(tmp_path, "mix.json", _sweep({800: 91.0, 600: 10.0}))
+    rc, out = _run([base, fresh, "--sweep-acc"], capsys)
+    assert rc == 0 and "only in fresh" in out
+
+
+def test_sweep_acc_unscored_and_disjoint_are_loud(tmp_path, capsys):
+    base = _write(tmp_path, "rm.json", _sweep({800: 91.0}))
+    unscored = _write(tmp_path, "uns.json", _sweep({800: None}))
+    rc, out = _run([base, unscored, "--sweep-acc"], capsys)
+    assert rc == 2 and "unscored" in out
+
+    disjoint = _write(tmp_path, "dis.json", _sweep({100: 50.0}))
+    rc, out = _run([base, disjoint, "--sweep-acc"], capsys)
+    assert rc == 2 and "no budgets" in out
+
+    notsweep = _write(tmp_path, "ns.json", {"backends": {}})
+    rc, out = _run([base, notsweep, "--sweep-acc"], capsys)
+    assert rc == 2 and "stages" in out

@@ -126,6 +126,37 @@ def test_resume_matches_uninterrupted_across_backends(backend, tmp_path):
     _assert_same_run(ref.masks, ref.history, res.masks, res.history)
 
 
+def test_typed_move_state_roundtrips_through_resume(tmp_path):
+    """Mixed-kind descent under the sensitivity proposal: the proposal
+    reads ``move_stats``, so bit-identical resume requires the acceptance
+    counters (and the per-step ``move_kind`` logs) to round-trip through
+    the checkpoint exactly — not just masks and rng."""
+    masks = _toy_masks()
+    cfg = _toy_cfg(masks, steps=5, moves=M.MOVE_KINDS,
+                   proposal="sensitivity")
+
+    ref = bcd.run_bcd(masks, cfg, _toy_eval_acc)
+    assert any(h.move_kind != "remove" for h in ref.history)
+
+    d = str(tmp_path / "moves")
+    part = runner.BCDRunner(cfg, runner.RunnerConfig(ckpt_dir=d, max_steps=2),
+                            _toy_eval_acc)
+    pres = part.run(masks)
+    assert part.stopped_early
+    # the partial run's counters are a strict prefix of the full run's
+    assert sum(v["proposed"] for v in
+               pres.move_stats["kinds"].values()) == 2 * cfg.rt
+
+    cont = runner.BCDRunner(cfg, runner.RunnerConfig(ckpt_dir=d),
+                            _toy_eval_acc)
+    res = cont.run(masks)
+    assert cont.resumed_from == 2 and not cont.stopped_early
+    _assert_same_run(ref.masks, ref.history, res.masks, res.history)
+    assert res.move_stats == ref.move_stats
+    assert [h.move_kind for h in res.history] == \
+        [h.move_kind for h in ref.history]
+
+
 def test_resume_with_finetuned_params_roundtrip(tmp_path):
     """Params mutate between outer steps (finetune); they are part of the
     resume state and must round-trip bit-exactly through the checkpoint."""
