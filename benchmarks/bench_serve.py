@@ -1,0 +1,132 @@
+"""Load generator for the continuous-batching serve loop.
+
+Drives ``repro.launch.serve_loop.ServeLoop`` with a deterministic stream of
+random-token requests across ≥2 SLO classes (each routed to a different
+ReLU-budget mask set) and writes ``BENCH_serve.json``:
+
+- per class: requests served, decode tok/s, p50/p95 queue / prefill /
+  decode / total latency (ms), the class's ReLU cost and PI-priced online
+  seconds per token, and the summed per-request PI bill;
+- totals: submitted vs completed (the drain check), wall seconds, and
+  aggregate decode tok/s.
+
+CI gates this report with ``check_bench_regression --serve`` against the
+committed baseline:
+
+    PYTHONPATH=src python -m benchmarks.bench_serve --out BENCH_serve.json
+    PYTHONPATH=src python -m benchmarks.check_bench_regression \
+        BENCH_serve.json BENCH_serve_new.json --serve
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.launch import serve_loop
+from repro.models.lm import LM
+from repro.training import serve as serve_lib
+
+
+def build_loop(args):
+    """Model + mask-set store + ServeLoop from CLI args."""
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    if args.masks_from:
+        shapes = {k: s.shape for k, s in model.mask_sites().items()}
+        store = serve_lib.MaskSetStore.from_run_dir(args.masks_from, shapes)
+    else:
+        fracs = [float(x) for x in args.budget_fracs.split(",")]
+        store = serve_loop.threshold_mask_sets(model, fracs, seed=args.seed)
+    classes = serve_loop.default_classes(store, args.max_new)
+    loop = serve_loop.ServeLoop(
+        model, params, store, classes, slots=args.slots,
+        max_len=args.max_len, prompt_bucket=args.prompt_bucket)
+    return cfg, loop
+
+
+def run_load(loop, cfg, args):
+    """Submit the deterministic request stream and drain the loop."""
+    rng = np.random.default_rng(args.seed)
+    names = list(loop.lanes)
+    for i in range(args.requests):
+        slo = names[i % len(names)]
+        cap = args.max_len - loop.lanes[slo].slo.max_new_tokens
+        plen = int(rng.integers(2, max(3, cap)))
+        loop.submit(rng.integers(0, cfg.vocab, plen), slo)
+    t0 = time.perf_counter()
+    loop.shutdown(drain=True)
+    return time.perf_counter() - t0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm_1p6b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=48)
+    ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--prompt-bucket", type=int, default=16)
+    ap.add_argument("--budget-fracs", default="1.0,0.25",
+                    help="comma keep-fracs -> synthetic mask sets; one SLO "
+                         "class per set (≥2 for the CI contract)")
+    ap.add_argument("--masks-from", default=None, metavar="RUN_DIR",
+                    help="serve checkpointed sweep masks instead")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serve_new.json")
+    args = ap.parse_args(argv)
+
+    cfg, loop = build_loop(args)
+    # warm the compiled prefill/decode shapes so measured latencies are
+    # steady-state, not jit time
+    warm = serve_loop.ServeLoop(
+        loop.model, loop.params, loop.store,
+        serve_loop.default_classes(loop.store, 2), slots=args.slots,
+        max_len=args.max_len, prompt_bucket=args.prompt_bucket)
+    warm.submit(np.arange(1, 3), warm.store.names[0])
+    warm.shutdown(drain=True)
+
+    wall = run_load(loop, cfg, args)
+    stats = loop.stats()
+    gen = sum(len(r.tokens) - 1 for r in loop.completed)
+    report = {
+        "bench": "serve",
+        "config": {"model": args.arch + (":reduced" if args.reduced else ""),
+                   "slots": args.slots, "max_len": args.max_len,
+                   "max_new": args.max_new,
+                   "prompt_bucket": args.prompt_bucket,
+                   "requests": args.requests,
+                   "budget_fracs": args.budget_fracs,
+                   "masks_from": args.masks_from,
+                   "n_devices": jax.device_count(), "seed": args.seed},
+        "classes": stats["classes"],
+        "total": {"submitted": args.requests,
+                  "completed": stats["completed"],
+                  "drained": stats["pending"] == 0,
+                  "wall_s": wall,
+                  "decode_tok_s": gen / wall if wall > 0 else 0.0},
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    for name, c in report["classes"].items():
+        print(f"{name}: {c['requests']} reqs, "
+              f"{c.get('decode_tok_s', 0):.1f} tok/s, "
+              f"p95 total {c.get('total_ms_p95', 0):.0f} ms, "
+              f"relu_cost {c['relu_cost']}")
+    print(f"wrote {args.out} ({report['total']['completed']}/"
+          f"{report['total']['submitted']} completed in {wall:.1f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

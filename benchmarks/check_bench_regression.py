@@ -28,8 +28,21 @@ descent at the same budget schedule:
     PYTHONPATH=src python -m benchmarks.check_bench_regression \
         SWEEP_removal.json SWEEP_mixed.json --sweep-acc [--acc-tolerance 0.5]
 
-Exit codes: 0 pass, 1 candidates/sec regression, floor violation, or
-accuracy-at-budget drop, 2 unusable input (missing or malformed report,
+``--serve`` switches the gate to *serving* mode over two
+``benchmarks.bench_serve`` reports (``BENCH_serve.json``): per SLO class
+common to both, fresh decode tok/s must hold ``>= baseline * (1 -
+--tolerance)`` and fresh p95 total latency must stay ``<= baseline p95 *
+--latency-factor`` (default 3.0 — generous because absolute latencies on a
+shared CI runner are noisy; throughput carries the tight gate).  The fresh
+report must also have served every submitted request and drained its
+queues — an undrained loop is a scheduler bug, not noise:
+
+    PYTHONPATH=src python -m benchmarks.check_bench_regression \
+        BENCH_serve.json BENCH_serve_new.json --serve [--latency-factor 3]
+
+Exit codes: 0 pass, 1 candidates/sec regression, floor violation,
+accuracy-at-budget drop, or serve-mode throughput/latency/drain failure,
+2 unusable input (missing or malformed report,
 incomparable operating points, malformed/missing gate key, unscored or
 non-overlapping sweep curves) — always with a human-readable FAIL
 line, never a traceback, so CI logs say what to fix.
@@ -55,6 +68,12 @@ _EPS = 1e-9
 # runs; refresh it from the CI artifact if the fleet changes.
 OPERATING_POINT_KEYS = ("rt", "chunk_size", "prefetch", "drc", "eval_batch",
                         "model", "n_devices", "backend")
+
+# Same idea for serving reports: two BENCH_serve.json runs are only
+# comparable at the same model / slot count / sequence budget / load.
+SERVE_OPERATING_POINT_KEYS = ("model", "slots", "max_len", "max_new",
+                              "prompt_bucket", "requests", "budget_fracs",
+                              "n_devices")
 
 
 def config_mismatches(baseline: dict, fresh: dict) -> list:
@@ -265,6 +284,118 @@ def compare_sweep_acc(baseline: dict, fresh: dict, tolerance: float):
     return failures, unscored, common, lines
 
 
+def load_serve(path: str, which: str):
+    """Load one ``bench_serve`` report; returns None after a clear FAIL
+    line (same no-traceback contract as :func:`load_report`)."""
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: cannot load {which} serve report {path}: {e}")
+        if which == "baseline" and isinstance(e, FileNotFoundError):
+            print("Commit a baseline first: `python -m benchmarks."
+                  f"bench_serve --out {path}` on representative hardware.")
+        return None
+    classes = report.get("classes") if isinstance(report, dict) else None
+    if not isinstance(classes, dict) or not classes:
+        print(f"FAIL: {which} serve report {path} has no 'classes' table — "
+              "not a bench_serve report?")
+        return None
+    bad = [n for n, rec in classes.items()
+           if not isinstance(rec, dict)
+           or not isinstance(rec.get("decode_tok_s"), (int, float))
+           or not isinstance(rec.get("total_ms_p95"), (int, float))]
+    if bad:
+        print(f"FAIL: {which} serve report {path}: class(es) {sorted(bad)} "
+              "missing numeric 'decode_tok_s'/'total_ms_p95' (did the load "
+              "run serve any requests in that class?)")
+        return None
+    return report
+
+
+def compare_serve(baseline: dict, fresh: dict, tolerance: float,
+                  latency_factor: float):
+    """Serving gate: per-class decode tok/s ratio + p95 latency ceiling.
+
+    Classes present in only one report are noted but never gate.  Returns
+    (failures, common, lines).
+    """
+    base_c, new_c = baseline["classes"], fresh["classes"]
+    failures, common, lines = [], 0, []
+    for name in sorted(set(base_c) | set(new_c)):
+        if name not in base_c or name not in new_c:
+            lines.append(f"  {name}: only in "
+                         f"{'baseline' if name in base_c else 'fresh run'} "
+                         "(skipped)")
+            continue
+        common += 1
+        old, new = base_c[name], new_c[name]
+        ratio = new["decode_tok_s"] / old["decode_tok_s"] \
+            if old["decode_tok_s"] > 0 else float("inf")
+        ok = ratio >= 1.0 - tolerance - _EPS
+        status = "OK" if ok else "REGRESSION"
+        if ratio > 1.0 + tolerance:
+            status = "faster (consider refreshing the baseline)"
+        if not ok:
+            failures.append(f"{name}:decode_tok_s")
+        lines.append(f"  {name}: {old['decode_tok_s']:.2f} -> "
+                     f"{new['decode_tok_s']:.2f} tok/s ({ratio:.2f}x)  "
+                     f"{status}")
+        ceiling = old["total_ms_p95"] * latency_factor
+        lat_ok = new["total_ms_p95"] <= ceiling + _EPS
+        if not lat_ok:
+            failures.append(f"{name}:total_ms_p95")
+        lines.append(f"  {name}: p95 total {old['total_ms_p95']:.0f} -> "
+                     f"{new['total_ms_p95']:.0f} ms (ceiling "
+                     f"{ceiling:.0f})  {'OK' if lat_ok else 'OVER CEILING'}")
+    return failures, common, lines
+
+
+def run_serve(args) -> int:
+    """``--serve`` mode: gate a fresh BENCH_serve.json against baseline."""
+    baseline = load_serve(args.baseline, "baseline")
+    fresh = load_serve(args.fresh, "fresh")
+    if baseline is None or fresh is None:
+        return 2
+    mismatches = [
+        f"{k}: baseline={baseline.get('config', {}).get(k)!r} "
+        f"fresh={fresh.get('config', {}).get(k)!r}"
+        for k in SERVE_OPERATING_POINT_KEYS
+        if baseline.get("config", {}).get(k) != fresh.get("config",
+                                                          {}).get(k)]
+    if mismatches:
+        print("FAIL: serve reports are not comparable — operating-point "
+              "config differs:")
+        for m in mismatches:
+            print(f"  {m}")
+        return 2
+    total = fresh.get("total", {})
+    served_ok = total.get("completed") == total.get("submitted") \
+        and total.get("drained") is True
+    failures, common, lines = compare_serve(
+        baseline, fresh, args.tolerance, args.latency_factor)
+    print(f"serve regression check (tolerance {args.tolerance:.0%}, "
+          f"latency ceiling {args.latency_factor:.1f}x baseline p95):")
+    for line in lines:
+        print(line)
+    print(f"  completion: {total.get('completed')}/"
+          f"{total.get('submitted')} drained={total.get('drained')}  "
+          f"{'OK' if served_ok else 'INCOMPLETE'}")
+    if common == 0:
+        print("FAIL: the two reports share no SLO classes — nothing to "
+              "gate")
+        return 2
+    if not served_ok:
+        print("FAIL: fresh serve run did not complete+drain every "
+              "submitted request — scheduler bug, not runner noise")
+        return 1
+    if failures:
+        print(f"FAIL: serving regression in {', '.join(failures)}")
+        return 1
+    print("PASS")
+    return 0
+
+
 def run_sweep_acc(args) -> int:
     baseline = load_sweep(args.baseline, "baseline")
     fresh = load_sweep(args.fresh, "fresh")
@@ -322,7 +453,22 @@ def main(argv=None):
     ap.add_argument("--acc-tolerance", type=float, default=0.0,
                     help="allowed absolute test_acc drop per budget in "
                          "--sweep-acc mode (accuracy points, default 0)")
+    ap.add_argument("--serve", action="store_true",
+                    help="treat the two positional paths as "
+                         "benchmarks.bench_serve reports and gate per-SLO-"
+                         "class decode tok/s (--tolerance), p95 total "
+                         "latency (--latency-factor x baseline), and "
+                         "complete+drained totals (serving mode)")
+    ap.add_argument("--latency-factor", type=float, default=3.0,
+                    help="--serve mode: fresh p95 total latency must stay "
+                         "under baseline p95 times this factor (absolute "
+                         "ms are runner-noisy; default 3.0)")
     args = ap.parse_args(argv)
+    if args.serve and args.sweep_acc:
+        print("FAIL: --serve and --sweep-acc are mutually exclusive")
+        return 2
+    if args.serve:
+        return run_serve(args)
     if args.sweep_acc:
         return run_sweep_acc(args)
     baseline = load_report(args.baseline, "baseline")

@@ -65,6 +65,28 @@ def cost_of_masks(masks, n_nonlinear_layers: int,
                 linear_params)
 
 
+def bill_request(relu_count: int, n_nonlinear_layers: int, tokens: int,
+                 proto: PIProtocol = PIProtocol(),
+                 linear_params: int = 0) -> dict:
+    """Per-request PI bill: one token-forward :func:`cost`, scaled by tokens.
+
+    A served request runs ``tokens`` forwards (prompt positions during
+    prefill + one per generated token) under one mask set; each forward
+    pays the set's per-token protocol cost.  Returns a JSON-ready dict —
+    this is the number a serving tier reports per request (the paper's
+    ReLU-count ≈ PI-latency claim, priced).
+    """
+    per_tok = cost(relu_count, n_nonlinear_layers, proto, linear_params)
+    return {
+        "relu_cost": int(relu_count),
+        "tokens": int(tokens),
+        "relus_billed": int(relu_count) * int(tokens),
+        "pi_online_bytes": per_tok.online_bytes * tokens,
+        "pi_offline_bytes": per_tok.offline_bytes * tokens,
+        "pi_online_s": per_tok.online_latency_s * tokens,
+    }
+
+
 def saving(b_ref: int, b_target: int, n_layers: int,
            proto: PIProtocol = PIProtocol()):
     """(latency_ref, latency_target, speedup) for a linearization run."""

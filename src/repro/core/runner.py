@@ -212,17 +212,20 @@ def save_stage_init(path: str, init: dict, *, meta: Optional[dict] = None
 
 
 def load_stage_init(path: str, masks_template: M.MaskTree, *,
-                    params_template=None, aux_template=None) -> dict:
+                    params_template=None, aux_template=None,
+                    masks_only: bool = False) -> dict:
     """Load a stage-init checkpoint back into ``{kind, masks, params, aux}``.
     Raises :class:`CheckpointError` when absent/corrupted — callers decide
-    whether that means "first run" or "fatal"."""
+    whether that means "first run" or "fatal".  ``masks_only=True`` restores
+    just the mask leaves even when the checkpoint carries params (the
+    serving tier loads budgets, not weights)."""
     if not checkpoint.validate(path, _STAGE_INIT_STEP, deep=True):
         raise CheckpointError(f"no valid stage-init checkpoint at {path}")
     meta = checkpoint.read_manifest(path, _STAGE_INIT_STEP).get("meta", {})
     if not meta.get("stage_init"):
         raise CheckpointError(f"checkpoint at {path} is not a stage init")
     template = {"masks": masks_template}
-    if meta.get("has_params"):
+    if meta.get("has_params") and not masks_only:
         if params_template is None:
             raise CheckpointError(
                 f"stage init at {path} carries params but no "

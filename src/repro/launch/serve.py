@@ -29,7 +29,15 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--mesh", default="1,1")
     ap.add_argument("--keep-frac", type=float, default=1.0,
-                    help="fraction of nonlinearities kept (linearization)")
+                    help="fraction of nonlinearities kept (random "
+                         "thresholding — synthetic; prefer --masks-from)")
+    ap.add_argument("--masks-from", default=None, metavar="RUN_DIR",
+                    help="serve checkpointed masks from a launch.sweep run "
+                         "dir (fingerprint-validated) instead of random "
+                         "thresholding")
+    ap.add_argument("--mask-set", default=None, metavar="NAME",
+                    help="which set from --masks-from to serve (e.g. b1024; "
+                         "default: the first/highest budget)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -39,13 +47,28 @@ def main(argv=None):
     mesh = make_host_mesh(d, m)
     model = LM(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    masks0 = linearize.init_masks(model.mask_sites())
-    if args.keep_frac < 1.0:
-        rng = np.random.default_rng(0)
-        masks0 = M.threshold(
-            {k: rng.random(v.shape).astype(np.float32)
-             for k, v in masks0.items()},
-            int(M.count(masks0) * args.keep_frac))
+    if args.masks_from:
+        shapes = {k: s.shape for k, s in model.mask_sites().items()}
+        try:
+            store = serve_lib.MaskSetStore.from_run_dir(
+                args.masks_from, shapes,
+                names=[args.mask_set] if args.mask_set else None)
+        except serve_lib.MaskSetError as e:
+            raise SystemExit(f"error: {e}")
+        name = args.mask_set or store.names[0]
+        info = store.info(name)
+        print(f"serving mask set {name!r} from {info.source} "
+              f"(relu_cost={info.relu_cost}, "
+              f"fingerprint={info.fingerprint[:12]})")
+        masks0 = store.host(name)
+    else:
+        masks0 = linearize.init_masks(model.mask_sites())
+        if args.keep_frac < 1.0:
+            rng = np.random.default_rng(0)
+            masks0 = M.threshold(
+                {k: rng.random(v.shape).astype(np.float32)
+                 for k, v in masks0.items()},
+                int(M.count(masks0) * args.keep_frac))
     mdev = M.as_device(masks0)
 
     B, P, G = args.batch, args.prompt_len, args.gen

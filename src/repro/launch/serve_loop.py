@@ -1,0 +1,436 @@
+"""Continuous-batching serve loop with per-request ReLU-budget SLOs.
+
+The deployment story of the paper: ReLU count ≈ Private-Inference latency,
+so a served request's *price* is set by the mask set it runs under.  This
+loop serves several ReLU budgets from ONE resident parameter set
+(``training.serve.MaskSetStore``), routing each request to a budget by its
+SLO class, with:
+
+- **admission queues** — per-class FIFO; requests wait for a free decode
+  slot (queue time is measured and reported);
+- **prefill/decode disaggregation** — prefill runs as its own B=1 jitted
+  call, then the fresh cache is scattered into one slot of the resident
+  per-class decode cache (``training.serve.make_insert_slot``), so long
+  prompts never stall other streams' decode steps;
+- **continuous batching** — each class's lane decodes all live slots every
+  tick with a per-slot ``(B,)`` ``cache_len`` vector (ragged decode:
+  every slot sits at its own sequence position); finished slots free up
+  and the queue refills them mid-stream;
+- **request-level PI billing** — on completion each request is billed via
+  :func:`repro.core.pi_cost.bill_request` applied to the mask set it was
+  actually served under (fingerprint recorded for audit).
+
+Mask-set hot-swap never re-jits: mask trees are jit *arguments* with
+set-independent shapes, so one compiled decode step serves every budget.
+
+Quickstart (synthetic budgets)::
+
+    PYTHONPATH=src python -m repro.launch.serve_loop --arch stablelm_1p6b \
+        --reduced --requests 8 --budget-fracs 1.0,0.5
+
+See ``docs/serving.md`` for the architecture.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import dataclasses
+import json
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import masks as M, pi_cost
+from repro.models.lm import LM
+from repro.training import serve as serve_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One service tier: which mask set (ReLU budget) serves it.
+
+    ``max_new_tokens`` is the tier's generation cap — a premium tier can
+    pair a high ReLU budget with longer generations, an economy tier the
+    reverse.
+    """
+
+    name: str
+    mask_set: str
+    max_new_tokens: int = 16
+
+
+@dataclasses.dataclass
+class Request:
+    """One inference request and its measured + billed lifecycle."""
+
+    rid: int
+    slo: str
+    prompt: np.ndarray
+    t_arrival: float = 0.0
+    t_admit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    mask_set: str = ""
+    mask_fingerprint: str = ""
+    bill: Optional[dict] = None
+    cancelled: bool = False
+
+    @property
+    def queue_s(self) -> float:
+        """Seconds spent waiting in the admission queue."""
+        return self.t_admit - self.t_arrival
+
+    @property
+    def prefill_s(self) -> float:
+        """Seconds from admission to first token (prefill + slot insert)."""
+        return self.t_first - self.t_admit
+
+    @property
+    def decode_s(self) -> float:
+        """Seconds spent in the decode stream after the first token."""
+        return self.t_done - self.t_first
+
+    @property
+    def total_s(self) -> float:
+        """End-to-end seconds from arrival to completion."""
+        return self.t_done - self.t_arrival
+
+
+class _Lane:
+    """One SLO class's decode lane: resident cache + slot bookkeeping."""
+
+    def __init__(self, slo: SLOClass, cache, slots: int):
+        self.slo = slo
+        self.cache = cache
+        self.queue: collections.deque = collections.deque()
+        self.live = np.zeros((slots,), bool)
+        self.cache_len = np.zeros((slots,), np.int32)
+        self.tok = np.zeros((slots,), np.int32)
+        self.reqs: List[Optional[Request]] = [None] * slots
+
+
+class ServeLoop:
+    """Continuous-batching scheduler over one model + one MaskSetStore.
+
+    ``slots`` decode slots per SLO class; ``max_len`` bounds
+    prompt + generation per slot.  ``prompt_bucket`` pads prompts up to a
+    multiple of the bucket before the B=1 prefill so a handful of compiled
+    prefill shapes serve every prompt length (exact for attention caches:
+    causality keeps pad positions out of real tokens' outputs, and the
+    pad rows' K/V are hidden from decode by per-slot validity masking;
+    recurrent-state models need ``prompt_bucket=None`` — exact-length
+    prefill, one compile per distinct length).  ``mesh``: optional — lane
+    decode steps run under ``training.serve.jit_decode_step``'s production
+    cache shardings instead of single-device jit.
+    """
+
+    def __init__(self, model: LM, params, store: serve_lib.MaskSetStore,
+                 classes: Sequence[SLOClass], *, slots: int = 4,
+                 max_len: int = 64, prompt_bucket: Optional[int] = 16,
+                 mesh=None):
+        """Build lanes (one resident decode cache per SLO class) and jits."""
+        if not classes:
+            raise ValueError("ServeLoop needs at least one SLO class")
+        for c in classes:
+            if c.mask_set not in store.names:
+                raise serve_lib.MaskSetError(
+                    f"SLO class {c.name!r} routes to mask set "
+                    f"{c.mask_set!r}, not in the store ({store.names})")
+        self.model, self.params, self.store = model, params, store
+        self.slots, self.max_len = slots, max_len
+        self.prompt_bucket = prompt_bucket
+        self.mesh = mesh
+        self._prefill = jax.jit(_make_last_logit_prefill(model))
+        self._insert = jax.jit(serve_lib.make_insert_slot(model))
+        if mesh is not None and mesh.size > 1:
+            scfg = serve_lib.ServeCfg(dp_axes=("data",), max_len=max_len,
+                                      batch=slots)
+            self._decode = serve_lib.jit_decode_step(model, mesh, scfg)
+        else:
+            self._decode = jax.jit(serve_lib.make_decode_step(model))
+        self.lanes: Dict[str, _Lane] = {
+            c.name: _Lane(c, model.init_cache(slots, max_len), slots)
+            for c in classes}
+        self.completed: List[Request] = []
+        self._next_rid = 0
+        self._accepting = True
+
+    # ------------------------------------------------------------ intake
+
+    def submit(self, prompt: np.ndarray, slo: str) -> Request:
+        """Enqueue a prompt under an SLO class; returns its Request."""
+        if not self._accepting:
+            raise RuntimeError("serve loop is shut down")
+        if slo not in self.lanes:
+            raise KeyError(f"unknown SLO class {slo!r} "
+                           f"(have: {sorted(self.lanes)})")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        lane = self.lanes[slo]
+        cap = self.max_len - lane.slo.max_new_tokens
+        if not 0 < len(prompt) <= cap:
+            raise ValueError(
+                f"prompt length {len(prompt)} outside (0, {cap}] "
+                f"(max_len {self.max_len} minus the class's "
+                f"{lane.slo.max_new_tokens} generation budget)")
+        req = Request(rid=self._next_rid, slo=slo, prompt=prompt,
+                      t_arrival=time.perf_counter())
+        self._next_rid += 1
+        lane.queue.append(req)
+        return req
+
+    # ------------------------------------------------------------ ticking
+
+    def step(self) -> int:
+        """One scheduler tick: admit into free slots, decode every lane.
+
+        Returns the number of requests still in flight (queued + live).
+        """
+        ctx = self.mesh if self.mesh is not None else _NullCtx()
+        with ctx:
+            for lane in self.lanes.values():
+                self._admit(lane)
+            for lane in self.lanes.values():
+                self._decode_lane(lane)
+        return self.pending()
+
+    def pending(self) -> int:
+        """Requests not yet completed: queued plus occupying a slot."""
+        return sum(len(ln.queue) + int(ln.live.sum())
+                   for ln in self.lanes.values())
+
+    def run_until_drained(self, max_steps: int = 100000) -> None:
+        """Tick until every queue and slot is empty (or ``max_steps``)."""
+        for _ in range(max_steps):
+            if self.step() == 0:
+                return
+        raise RuntimeError(
+            f"serve loop failed to drain within {max_steps} steps "
+            f"({self.pending()} requests still pending)")
+
+    def shutdown(self, drain: bool = True) -> List[Request]:
+        """Stop intake; drain in-flight work (or cancel it) and return
+        every completed request.
+
+        ``drain=True`` runs the loop until queues and slots are empty —
+        every accepted request completes and is billed.  ``drain=False``
+        cancels queued and in-flight requests (marked ``cancelled``, never
+        billed).
+        """
+        self._accepting = False
+        if drain:
+            self.run_until_drained()
+        else:
+            for lane in self.lanes.values():
+                for req in list(lane.queue) + [r for r in lane.reqs if r]:
+                    req.cancelled = True
+                lane.queue.clear()
+                lane.live[:] = False
+                lane.reqs = [None] * self.slots
+        return self.completed
+
+    # ------------------------------------------------------------ internals
+
+    def _bucket(self, n: int) -> int:
+        b = self.prompt_bucket
+        return n if not b else min(-(-n // b) * b, self.max_len - 1)
+
+    def _admit(self, lane: _Lane) -> None:
+        free = np.flatnonzero(~lane.live)
+        while lane.queue and free.size:
+            slot, free = int(free[0]), free[1:]
+            req = lane.queue.popleft()
+            req.t_admit = time.perf_counter()
+            L = len(req.prompt)
+            toks = np.zeros((1, self._bucket(L)), np.int32)
+            toks[0, :L] = req.prompt
+            masks = self.store.select(lane.slo.mask_set)
+            small = self.model.init_cache(1, self.max_len)
+            nxt, small = self._prefill(self.params, masks,
+                                       jnp.asarray(toks), small,
+                                       jnp.asarray(L - 1, jnp.int32))
+            lane.cache = self._insert(lane.cache, small,
+                                      jnp.asarray(slot, jnp.int32))
+            first = int(jax.block_until_ready(nxt)[0, 0])
+            req.t_first = time.perf_counter()
+            req.tokens.append(first)
+            info = self.store.info(lane.slo.mask_set)
+            req.mask_set, req.mask_fingerprint = info.name, info.fingerprint
+            lane.live[slot] = True
+            lane.cache_len[slot] = L
+            lane.tok[slot] = first
+            lane.reqs[slot] = req
+            if lane.slo.max_new_tokens <= 1:
+                self._finish(lane, slot)
+
+    def _decode_lane(self, lane: _Lane) -> None:
+        if not lane.live.any():
+            return
+        masks = self.store.select(lane.slo.mask_set)
+        tok = jnp.asarray(lane.tok[:, None])
+        cl = jnp.asarray(lane.cache_len)
+        nxt, lane.cache = self._decode(self.params, masks, tok,
+                                       lane.cache, cl)
+        nxt = np.asarray(jax.block_until_ready(nxt)).reshape(-1)
+        for slot in np.flatnonzero(lane.live):
+            req = lane.reqs[slot]
+            req.tokens.append(int(nxt[slot]))
+            lane.tok[slot] = nxt[slot]
+            lane.cache_len[slot] += 1
+            done = len(req.tokens) >= lane.slo.max_new_tokens
+            if done or lane.cache_len[slot] + 1 >= self.max_len:
+                self._finish(lane, slot)
+
+    def _finish(self, lane: _Lane, slot: int) -> None:
+        req = lane.reqs[slot]
+        req.t_done = time.perf_counter()
+        info = self.store.info(lane.slo.mask_set)
+        req.bill = pi_cost.bill_request(
+            info.relu_cost, len(self.store.site_shapes),
+            tokens=len(req.prompt) + len(req.tokens))
+        lane.live[slot] = False
+        lane.reqs[slot] = None
+        self.completed.append(req)
+
+    # ------------------------------------------------------------ reporting
+
+    def stats(self) -> dict:
+        """Per-SLO-class latency/throughput/billing aggregates (JSON-ready).
+
+        ``decode_tok_s`` is per-slot decode rate (generated tokens over
+        in-slot decode seconds, summed per class); percentiles are
+        milliseconds over completed requests.
+        """
+        out: dict = {"classes": {}}
+        for name, lane in self.lanes.items():
+            reqs = [r for r in self.completed if r.slo == name]
+            info = self.store.info(lane.slo.mask_set)
+            per_tok = self.store.pi_cost_per_token(lane.slo.mask_set)
+            cls = {"mask_set": lane.slo.mask_set,
+                   "relu_cost": info.relu_cost,
+                   "mask_fingerprint": info.fingerprint,
+                   "pi_online_s_per_tok": per_tok.online_latency_s,
+                   "requests": len(reqs)}
+            if reqs:
+                gen = sum(len(r.tokens) - 1 for r in reqs)
+                dec = sum(r.decode_s for r in reqs)
+                cls["decode_tok_s"] = gen / dec if dec > 0 else 0.0
+                for key, get in (("queue", lambda r: r.queue_s),
+                                 ("prefill", lambda r: r.prefill_s),
+                                 ("decode", lambda r: r.decode_s),
+                                 ("total", lambda r: r.total_s)):
+                    vals = np.array([get(r) for r in reqs]) * 1e3
+                    cls[f"{key}_ms_p50"] = float(np.percentile(vals, 50))
+                    cls[f"{key}_ms_p95"] = float(np.percentile(vals, 95))
+                cls["relus_billed"] = sum(r.bill["relus_billed"]
+                                          for r in reqs)
+                cls["pi_online_s"] = sum(r.bill["pi_online_s"]
+                                         for r in reqs)
+            out["classes"][name] = cls
+        out["completed"] = len(self.completed)
+        out["pending"] = self.pending()
+        return out
+
+
+class _NullCtx:
+    """No-op context manager (single-device loops have no mesh scope)."""
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+def _make_last_logit_prefill(model: LM):
+    """B=1 prefill: argmax logits at the prompt's true last position.
+
+    Prompts arrive right-padded to a bucket length; ``last_idx`` (traced)
+    picks the real final position so one compiled shape serves every
+    prompt length in the bucket.
+    """
+    def prefill(params, masks, tokens, cache, last_idx):
+        logits, cache = model.forward(params, masks, tokens, cache=cache,
+                                      cache_len=0)
+        last = jax.lax.dynamic_index_in_dim(logits, last_idx, axis=1,
+                                            keepdims=False)
+        nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+    return prefill
+
+
+def threshold_mask_sets(model: LM, fracs: Sequence[float],
+                        seed: int = 0) -> serve_lib.MaskSetStore:
+    """Synthetic named budgets: one random-priority threshold per keep-frac.
+
+    Serving smoke tests and the load generator use this when no sweep run
+    directory is available; real deployments load checkpointed masks via
+    :meth:`repro.training.serve.MaskSetStore.from_run_dir`.
+    """
+    shapes = {k: s.shape for k, s in model.mask_sites().items()}
+    full = M.full_masks(shapes)
+    total = M.count(full)
+    rng = np.random.default_rng(seed)
+    soft = {k: rng.random(v.shape).astype(np.float32)
+            for k, v in full.items()}
+    sets = {f"kf{int(round(f * 100)):03d}": M.threshold(soft,
+                                                        int(total * f))
+            for f in fracs}
+    return serve_lib.MaskSetStore(shapes, sets)
+
+
+def default_classes(store: serve_lib.MaskSetStore,
+                    max_new_tokens: int = 8) -> List[SLOClass]:
+    """One SLO class per stored budget, named after its mask set."""
+    return [SLOClass(name=n, mask_set=n, max_new_tokens=max_new_tokens)
+            for n in store.names]
+
+
+def main(argv=None):
+    """CLI demo: serve random prompts at ≥2 synthetic budgets and print
+    the per-class stats JSON."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm_1p6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=48)
+    ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--budget-fracs", default="1.0,0.5",
+                    help="comma list of keep-fracs -> synthetic mask sets")
+    ap.add_argument("--masks-from", default=None, metavar="RUN_DIR",
+                    help="load checkpointed mask sets from a launch.sweep "
+                         "run dir instead of synthetic thresholds")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    shapes = {k: s.shape for k, s in model.mask_sites().items()}
+    if args.masks_from:
+        store = serve_lib.MaskSetStore.from_run_dir(args.masks_from, shapes)
+    else:
+        fracs = [float(x) for x in args.budget_fracs.split(",")]
+        store = threshold_mask_sets(model, fracs, seed=args.seed)
+    loop = ServeLoop(model, params, store,
+                     default_classes(store, args.max_new),
+                     slots=args.slots, max_len=args.max_len)
+    rng = np.random.default_rng(args.seed)
+    for i in range(args.requests):
+        slo = store.names[i % len(store.names)]
+        plen = int(rng.integers(4, args.max_len - args.max_new))
+        loop.submit(rng.integers(0, cfg.vocab, plen), slo)
+    loop.shutdown(drain=True)
+    print(json.dumps(loop.stats(), indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -83,19 +83,29 @@ def attn_init(key, c: AttnCfg, dtype=jnp.bfloat16):
 
 def _attend(q, k, v, *, causal_offset, window, scale):
     """q: (B,Sq,H,hd) k,v: (B,Sk,KV,hd). causal_offset = abs pos of q[0] - abs
-    pos of k[0] (so query i attends keys j with j <= i + causal_offset)."""
+    pos of k[0] (so query i attends keys j with j <= i + causal_offset).
+    causal_offset may be a (B,) vector — per-row offsets for continuous
+    batching, where each batch slot sits at its own decode position."""
     B, Sq, H, hd = q.shape
     KV = k.shape[2]
     rep = H // KV
     qh = q.reshape(B, Sq, KV, rep, hd)
     scores = jnp.einsum("bqkrh,bskh->bkrqs", qh, k).astype(jnp.float32)
     scores = scores * scale
-    qi = jnp.arange(Sq)[:, None] + causal_offset
+    co = jnp.asarray(causal_offset)
     kj = jnp.arange(k.shape[1])[None, :]
-    mask = kj <= qi
-    if window is not None:
-        mask &= kj > qi - window
-    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    if co.ndim == 1:
+        qi = jnp.arange(Sq)[None, :, None] + co[:, None, None]  # (B,Sq,1)
+        mask = kj[None] <= qi
+        if window is not None:
+            mask &= kj[None] > qi - window
+        scores = jnp.where(mask[:, None, None], scores, -1e30)
+    else:
+        qi = jnp.arange(Sq)[:, None] + causal_offset
+        mask = kj <= qi
+        if window is not None:
+            mask &= kj > qi - window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkrqs,bskh->bqkrh", probs, v)
     return out.reshape(B, Sq, H, hd)
@@ -104,7 +114,9 @@ def _attend(q, k, v, *, causal_offset, window, scale):
 def attention(p, c: AttnCfg, x, positions, *, kv_cache=None, cache_len=None):
     """Self-attention.  Training/prefill: kv_cache None -> causal over x.
     Decode: kv_cache=(K,V) (B,Smax,KV,hd) updated at cache_len (static-shape
-    dynamic_update_slice); returns (out, new_cache)."""
+    dynamic_update_slice); returns (out, new_cache).  ``cache_len`` may be a
+    (B,) vector — continuous-batching decode, where every slot writes and
+    attends at its own offset (per-row scatter + per-row causal mask)."""
     B, S, d = x.shape
     h, kvh, hd = c.n_heads, c.n_kv_heads, c.head_dim
     q = (x @ p["wq"]).reshape(B, S, h, hd)
@@ -119,6 +131,18 @@ def attention(p, c: AttnCfg, x, positions, *, kv_cache=None, cache_len=None):
 
     if kv_cache is not None:
         K, V = kv_cache
+        cl = jnp.asarray(cache_len)
+        if cl.ndim == 1:
+            b = jnp.arange(B)[:, None]
+            pos = cl[:, None] + jnp.arange(S)[None, :]       # (B, S)
+            K = K.at[b, pos].set(k.astype(K.dtype))
+            V = V.at[b, pos].set(v.astype(V.dtype))
+            kj = jnp.arange(K.shape[1])
+            valid = kj[None, :] < (cl + S)[:, None]          # (B, Sk)
+            out = _attend(q, jnp.where(valid[:, :, None, None], K, 0),
+                          jnp.where(valid[:, :, None, None], V, 0),
+                          causal_offset=cl, window=c.window, scale=scale)
+            return (out.reshape(B, S, h * hd) @ p["wo"]), (K, V)
         K = jax.lax.dynamic_update_slice(K, k.astype(K.dtype), (0, cache_len, 0, 0))
         V = jax.lax.dynamic_update_slice(V, v.astype(V.dtype), (0, cache_len, 0, 0))
         # mask out cache positions beyond cache_len + S

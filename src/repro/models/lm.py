@@ -60,6 +60,17 @@ def _sub(tree: Dict, prefix: str) -> Dict:
             if k.startswith(prefix + ".")}
 
 
+def _positions(B: int, S: int, cache_len):
+    """(B, S) absolute positions.  ``cache_len`` scalar: every row starts at
+    the same offset (the one-shot serve path).  ``cache_len`` (B,): per-row
+    offsets — continuous-batching decode, where each slot sits at its own
+    sequence position."""
+    cl = jnp.asarray(cache_len)
+    if cl.ndim == 1:
+        return jnp.arange(S)[None, :] + cl[:, None]
+    return jnp.broadcast_to((jnp.arange(S) + cl)[None, :], (B, S))
+
+
 def _sites_for(cfg: ArchConfig, blk: Block) -> Dict[str, linearize.MaskSite]:
     rep = cfg.act_when_masked
     if blk.kind == "dense":
@@ -306,8 +317,7 @@ class LM:
                                     axis=1)
             x = self._constrain(x)
         B, S, _ = x.shape
-        positions = jnp.broadcast_to(
-            (jnp.arange(S) + cache_len)[None, :], (B, S))
+        positions = _positions(B, S, cache_len)
 
         new_cache = {"head": [], "stack": {}, "tail": []} \
             if cache is not None else None

@@ -9,12 +9,17 @@ DP axes; for long_500k (B=1) the KV-cache *sequence* axis shards over 'data'
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import glob
+import os
+import re
+from typing import Dict, Optional, Sequence, Tuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import masks as M, pi_cost
 from repro.models import lm as lm_lib
 
 
@@ -145,3 +150,219 @@ def _dp(mesh, dp_axes):
     for a in dp_axes:
         n *= mesh.shape[a]
     return n
+
+
+# ---------------------------------------------------------------- mask sets
+#
+# Serving multiple ReLU budgets from ONE resident parameter set: every named
+# mask set is stacked site-wise into a single device-resident array
+# {site: (n_sets, *site_shape)}, and `select` hands back device slices with
+# the exact shapes the jitted decode step was traced with.  Swapping budgets
+# between decode steps is therefore a pure argument substitution — no
+# re-jit, no host->device transfer, params untouched.
+
+
+class MaskSetError(ValueError):
+    """A mask set cannot be served: its site layout (names/shapes) does not
+    match the model, or a checkpointed set failed fingerprint validation."""
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskSetInfo:
+    """Provenance + billing identity of one loaded mask set."""
+
+    name: str
+    relu_cost: int
+    fingerprint: str
+    source: str = "inline"
+
+
+class MaskSetStore:
+    """Named, device-resident mask sets over one model's site layout.
+
+    Built from host mask trees (validated against ``site_shapes``), the
+    store stacks every site across sets and keeps the stack on device;
+    :meth:`select` returns per-set device views shaped exactly like a
+    single mask tree, so the serving loop hot-swaps ReLU budgets between
+    jitted decode steps without recompiling.
+    """
+
+    def __init__(self, site_shapes: Dict[str, Tuple[int, ...]],
+                 sets: Dict[str, M.MaskTree],
+                 sources: Optional[Dict[str, str]] = None):
+        """Validate each set's layout against ``site_shapes`` and stack.
+
+        ``site_shapes``: the model's mask-site layout (e.g. ``{k: s.shape
+        for k, s in model.mask_sites().items()}``).  ``sets``: name -> host
+        mask tree.  Raises :class:`MaskSetError` naming every missing /
+        extra / mis-shaped site, so a checkpoint from a different model
+        fails loudly instead of serving garbage.
+        """
+        if not sets:
+            raise MaskSetError("MaskSetStore needs at least one mask set")
+        self.site_shapes = dict(site_shapes)
+        self._names = list(sets.keys())
+        self._index = {n: i for i, n in enumerate(self._names)}
+        self._infos: Dict[str, MaskSetInfo] = {}
+        self._host: Dict[str, M.MaskTree] = {}
+        sources = sources or {}
+        for name, tree in sets.items():
+            problems = validate_site_layout(site_shapes, tree)
+            if problems:
+                raise MaskSetError(
+                    f"mask set {name!r} does not match the model's site "
+                    f"layout: " + "; ".join(problems))
+            host = {k: np.asarray(v, dtype=np.float32)
+                    for k, v in tree.items()}
+            self._host[name] = host
+            self._infos[name] = MaskSetInfo(
+                name=name, relu_cost=M.relu_cost(host),
+                fingerprint=M.fingerprint(host),
+                source=sources.get(name, "inline"))
+        self._stacked = {
+            k: jnp.asarray(np.stack([self._host[n][k]
+                                     for n in self._names]))
+            for k in sorted(site_shapes)}
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        """Set names in insertion order."""
+        return tuple(self._names)
+
+    def select(self, name: str) -> Dict[str, jnp.ndarray]:
+        """Device mask tree for ``name`` — slices of the resident stack."""
+        i = self._index[name]
+        return {k: v[i] for k, v in self._stacked.items()}
+
+    def host(self, name: str) -> M.MaskTree:
+        """Host (numpy) copy of the named set, for billing/inspection."""
+        return {k: v.copy() for k, v in self._host[name].items()}
+
+    def info(self, name: str) -> MaskSetInfo:
+        """Provenance + billing identity of the named set."""
+        return self._infos[name]
+
+    def pi_cost_per_token(self, name: str,
+                          proto: pi_cost.PIProtocol = pi_cost.PIProtocol()
+                          ) -> pi_cost.PICost:
+        """PI protocol cost of ONE token's forward under the named set."""
+        return pi_cost.cost_of_masks(self._host[name],
+                                     len(self.site_shapes), proto)
+
+    @classmethod
+    def from_run_dir(cls, run_dir: str,
+                     site_shapes: Dict[str, Tuple[int, ...]],
+                     names: Optional[Sequence[str]] = None
+                     ) -> "MaskSetStore":
+        """Load every completed sweep stage's ``final/`` masks as a set.
+
+        ``run_dir`` is a :mod:`repro.launch.sweep` output directory; each
+        ``stage_*_b<B>/final`` stage-init checkpoint becomes the set
+        ``"b<B>"``.  Every loaded tree is re-fingerprinted and compared to
+        the fingerprint recorded in the checkpoint manifest at save time —
+        a mismatch (bit rot, wrong model, hand-edited files) raises
+        :class:`MaskSetError` instead of silently serving the wrong budget.
+        ``names`` optionally restricts which sets load.
+        """
+        from repro.core import runner as runner_lib
+        stage_dirs = sorted(
+            d for d in glob.glob(os.path.join(run_dir, "stage_*_b*"))
+            if os.path.isdir(os.path.join(d, "final")))
+        if not stage_dirs:
+            raise MaskSetError(
+                f"no completed sweep stages (stage_*_b*/final) under "
+                f"{run_dir!r} — run launch.sweep first, or pass explicit "
+                "mask sets")
+        template = M.full_masks(site_shapes)
+        sets: Dict[str, M.MaskTree] = {}
+        sources: Dict[str, str] = {}
+        for d in stage_dirs:
+            m = re.search(r"_b(\d+)$", os.path.basename(d))
+            name = f"b{m.group(1)}" if m else os.path.basename(d)
+            if names is not None and name not in names:
+                continue
+            final = os.path.join(d, "final")
+            try:
+                init = runner_lib.load_stage_init(final, template,
+                                                  masks_only=True)
+            except runner_lib.CheckpointError as e:
+                raise MaskSetError(
+                    f"stage checkpoint {final!r} cannot be loaded as a "
+                    f"mask set (its site layout likely mismatches this "
+                    f"model's {sorted(site_shapes)}): {e}") from e
+            masks = init["masks"]
+            problems = validate_site_layout(site_shapes, masks)
+            if problems:
+                raise MaskSetError(
+                    f"stage checkpoint {final!r} was saved for a different "
+                    f"site layout than this model: " + "; ".join(problems))
+            want = init.get("meta", {}).get("mask_fingerprint")
+            got = M.fingerprint(masks)
+            if want and got != want:
+                raise MaskSetError(
+                    f"mask set {name!r} from {final!r} fails fingerprint "
+                    f"validation: manifest says {want[:12]}…, loaded tree "
+                    f"hashes {got[:12]}… — refusing to serve it")
+            sets[name] = masks
+            sources[name] = final
+        if names is not None:
+            missing = [n for n in names if n not in sets]
+            if missing:
+                raise MaskSetError(
+                    f"requested mask set(s) {missing} not found under "
+                    f"{run_dir!r} (have: {sorted(sets)})")
+        return cls(site_shapes, sets, sources)
+
+
+def validate_site_layout(site_shapes: Dict[str, Tuple[int, ...]],
+                         tree: M.MaskTree) -> list:
+    """Human-readable mismatches between a mask tree and a site layout.
+
+    Returns one string per problem (missing site, extra site, wrong shape)
+    — empty list means the tree is servable on this model.
+    """
+    problems = []
+    for k in sorted(set(site_shapes) - set(tree)):
+        problems.append(f"missing site {k!r}")
+    for k in sorted(set(tree) - set(site_shapes)):
+        problems.append(f"unknown site {k!r}")
+    for k in sorted(set(site_shapes) & set(tree)):
+        want, got = tuple(site_shapes[k]), tuple(np.shape(tree[k]))
+        if want != got:
+            problems.append(f"site {k!r}: model wants {want}, set has {got}")
+    return problems
+
+
+# ------------------------------------------------------ slot cache surgery
+#
+# Prefill/decode disaggregation: prefill runs on a (1, P) batch with its own
+# B=1 cache, then the result is scattered into one slot of the resident
+# decode cache.  Stack-level cache leaves carry a leading repeats dim, so
+# the batch axis is 1 there and 0 everywhere else (same rule as
+# `_cache_specs`).
+
+
+def _batch_axis(path) -> int:
+    return 1 if any(getattr(p, "key", None) == "stack" for p in path) else 0
+
+
+def make_insert_slot(model: lm_lib.LM):
+    """Closure scattering a B=1 prefill cache into slot ``i`` of a decode
+    cache: ``insert(big, small, i) -> big'``.  ``i`` is a traced argument,
+    so one jit serves every slot."""
+    del model   # the tree structure alone decides the batch axis
+
+    def insert(big, small, i):
+        def f(path, b, s):
+            ax = _batch_axis(path)
+            return jax.lax.dynamic_update_index_in_dim(
+                b, jnp.take(s, 0, axis=ax).astype(b.dtype), i, ax)
+        return jax.tree_util.tree_map_with_path(f, big, small)
+    return insert
+
+
+def read_slot_tokens(tokens, live: np.ndarray) -> np.ndarray:
+    """Host view of a (B, 1) device token batch, ``-1`` where not live."""
+    out = np.asarray(tokens).reshape(-1).copy()
+    out[~live] = -1
+    return out

@@ -253,3 +253,102 @@ def test_sweep_acc_unscored_and_disjoint_are_loud(tmp_path, capsys):
     notsweep = _write(tmp_path, "ns.json", {"backends": {}})
     rc, out = _run([base, notsweep, "--sweep-acc"], capsys)
     assert rc == 2 and "stages" in out
+
+
+# ------------------------------------------------- --serve mode
+
+
+def _serve(classes, completed=None, submitted=None, drained=True, **config):
+    """A minimal bench_serve report: {class: (tok_s, p95_ms)}."""
+    cfg = {"model": "tiny:reduced", "slots": 2, "max_len": 48, "max_new": 6,
+           "prompt_bucket": 16, "requests": 12, "budget_fracs": "1.0,0.25",
+           "n_devices": 1}
+    cfg.update(config)
+    n = submitted if submitted is not None else 12
+    return {"bench": "serve", "config": cfg,
+            "classes": {k: {"decode_tok_s": v[0], "total_ms_p95": v[1],
+                            "requests": 6}
+                        for k, v in classes.items()},
+            "total": {"submitted": n,
+                      "completed": completed if completed is not None else n,
+                      "drained": drained}}
+
+
+def test_serve_pass_and_throughput_regression(tmp_path, capsys):
+    base = _write(tmp_path, "b.json",
+                  _serve({"premium": (10.0, 500.0), "economy": (30.0, 400.0)}))
+    ok = _write(tmp_path, "ok.json",
+                _serve({"premium": (8.0, 900.0), "economy": (25.0, 800.0)}))
+    rc, out = _run([base, ok, "--serve"], capsys)
+    assert rc == 0, out
+    assert "PASS" in out and "completion: 12/12" in out
+
+    slow = _write(tmp_path, "slow.json",
+                  _serve({"premium": (5.0, 500.0), "economy": (30.0, 400.0)}))
+    rc, out = _run([base, slow, "--serve"], capsys)
+    assert rc == 1, out
+    assert "REGRESSION" in out and "premium:decode_tok_s" in out
+
+
+def test_serve_latency_ceiling(tmp_path, capsys):
+    """p95 latency gates against baseline x --latency-factor: generous by
+    default (runner noise), strict when asked."""
+    base = _write(tmp_path, "b.json", _serve({"premium": (10.0, 500.0)}))
+    slow = _write(tmp_path, "s.json", _serve({"premium": (10.0, 2000.0)}))
+    rc, out = _run([base, slow, "--serve"], capsys)      # 3x ceiling: over
+    assert rc == 1, out
+    assert "OVER CEILING" in out and "premium:total_ms_p95" in out
+    rc, out = _run([base, slow, "--serve", "--latency-factor", "5"], capsys)
+    assert rc == 0, out
+
+
+def test_serve_incomplete_or_undrained_fails(tmp_path, capsys):
+    base = _write(tmp_path, "b.json", _serve({"premium": (10.0, 500.0)}))
+    undrained = _write(tmp_path, "u.json",
+                       _serve({"premium": (10.0, 500.0)}, drained=False))
+    rc, out = _run([base, undrained, "--serve"], capsys)
+    assert rc == 1 and "complete+drain" in out
+
+    dropped = _write(tmp_path, "d.json",
+                     _serve({"premium": (10.0, 500.0)}, completed=10))
+    rc, out = _run([base, dropped, "--serve"], capsys)
+    assert rc == 1 and "INCOMPLETE" in out
+
+
+def test_serve_one_sided_classes_skip_but_disjoint_fails(tmp_path, capsys):
+    base = _write(tmp_path, "b.json", _serve({"premium": (10.0, 500.0),
+                                              "gold": (5.0, 100.0)}))
+    fresh = _write(tmp_path, "f.json", _serve({"premium": (10.0, 500.0),
+                                               "silver": (5.0, 100.0)}))
+    rc, out = _run([base, fresh, "--serve"], capsys)
+    assert rc == 0 and "skipped" in out
+
+    disjoint = _write(tmp_path, "dj.json", _serve({"iron": (1.0, 1.0)}))
+    rc, out = _run([base, disjoint, "--serve"], capsys)
+    assert rc == 2 and "no SLO classes" in out
+
+
+def test_serve_config_mismatch_and_malformed_are_loud(tmp_path, capsys):
+    base = _write(tmp_path, "b.json", _serve({"premium": (10.0, 500.0)}))
+    other = _write(tmp_path, "o.json",
+                   _serve({"premium": (10.0, 500.0)}, slots=4))
+    rc, out = _run([base, other, "--serve"], capsys)
+    assert rc == 2 and "not comparable" in out and "slots" in out
+
+    for blob, needle in [("{not json", "cannot load"),
+                         ('{"classes": {}}', "no 'classes'"),
+                         ('{"classes": {"p": {"requests": 1}}}',
+                          "decode_tok_s")]:
+        bad = _write(tmp_path, "bad.json", blob)
+        rc, out = _run([base, bad, "--serve"], capsys)
+        assert rc == 2, out
+        assert "FAIL" in out and needle in out and "Traceback" not in out
+
+    rc, out = _run([base, base, "--serve", "--sweep-acc"], capsys)
+    assert rc == 2 and "mutually exclusive" in out
+
+
+def test_serve_missing_baseline_names_the_generator(tmp_path, capsys):
+    fresh = _write(tmp_path, "f.json", _serve({"premium": (10.0, 500.0)}))
+    rc, out = _run([str(tmp_path / "nope.json"), fresh, "--serve"], capsys)
+    assert rc == 2 and "bench_serve" in out

@@ -1,0 +1,342 @@
+"""Serving primitives: MaskSetStore, hot-swap decode, ragged cache_len.
+
+Contracts under test (training.serve):
+
+- ``MaskSetStore`` stacks named mask sets device-resident, hands back
+  per-set slices shaped exactly like a single tree, validates site layouts
+  loudly, and fingerprint-checks checkpointed sets loaded from a sweep run
+  directory;
+- mask hot-swap is a pure argument substitution: one compiled decode step
+  serves every budget, bitwise-identical to a dedicated per-budget trace;
+- ``cache_len`` may be a ``(B,)`` vector (continuous batching): each slot
+  decodes at its own position, matching per-request B=1 decodes;
+- the sharded decode path (``jit_decode_step``) agrees with single-device
+  decode on a forced-multi-device mesh (subprocess, like
+  test_bcd_parallel).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import masks as M, pi_cost, runner as runner_lib
+from repro.models.lm import LM
+from repro.training import serve as serve_lib
+
+
+# ------------------------------------------------------------ MaskSetStore
+
+
+SHAPES = {"a": (6,), "b": (2, 4)}
+
+
+def _sets():
+    rng = np.random.default_rng(0)
+    full = M.full_masks(SHAPES)
+    soft = {k: rng.random(v.shape).astype(np.float32)
+            for k, v in full.items()}
+    total = M.count(full)
+    return {"hi": M.threshold(soft, total), "lo": M.threshold(soft,
+                                                              total // 2)}
+
+
+def test_store_stacks_and_selects():
+    sets = _sets()
+    store = serve_lib.MaskSetStore(SHAPES, sets)
+    assert store.names == ("hi", "lo")
+    for name in store.names:
+        sel = store.select(name)
+        assert set(sel) == set(SHAPES)
+        for k in sel:
+            assert isinstance(sel[k], jnp.ndarray)
+            assert sel[k].shape == SHAPES[k]
+            np.testing.assert_array_equal(np.asarray(sel[k]), sets[name][k])
+        info = store.info(name)
+        assert info.relu_cost == M.relu_cost(sets[name])
+        assert info.fingerprint == M.fingerprint(sets[name])
+    assert store.info("hi").relu_cost > store.info("lo").relu_cost
+
+
+def test_store_pi_cost_per_token_matches_cost_of_masks():
+    store = serve_lib.MaskSetStore(SHAPES, _sets())
+    got = store.pi_cost_per_token("lo")
+    want = pi_cost.cost_of_masks(store.host("lo"), len(SHAPES))
+    assert got == want
+
+
+def test_store_rejects_layout_mismatch():
+    good = _sets()["hi"]
+    for bad, needle in [
+            ({"a": good["a"]}, "missing site 'b'"),
+            ({**good, "c": np.ones(3, np.float32)}, "unknown site 'c'"),
+            ({**good, "a": np.ones(7, np.float32)}, "model wants (6,)")]:
+        with pytest.raises(serve_lib.MaskSetError, match="site layout"):
+            serve_lib.MaskSetStore(SHAPES, {"x": bad})
+        problems = serve_lib.validate_site_layout(SHAPES, bad)
+        assert any(needle in p for p in problems), (needle, problems)
+    with pytest.raises(serve_lib.MaskSetError, match="at least one"):
+        serve_lib.MaskSetStore(SHAPES, {})
+
+
+def _save_stage(run_dir, name, masks):
+    d = os.path.join(run_dir, name, "final")
+    runner_lib.save_stage_init(d, {"kind": "bcd", "masks": masks})
+    return d
+
+
+def test_store_from_run_dir_loads_and_fingerprints(tmp_path):
+    sets = _sets()
+    _save_stage(str(tmp_path), "stage_00_b24", sets["hi"])
+    _save_stage(str(tmp_path), "stage_01_b12", sets["lo"])
+    store = serve_lib.MaskSetStore.from_run_dir(str(tmp_path), SHAPES)
+    assert store.names == ("b24", "b12")
+    for name, src in (("b24", "hi"), ("b12", "lo")):
+        np.testing.assert_array_equal(store.host(name)["a"],
+                                      sets[src]["a"])
+        assert store.info(name).source.endswith("final")
+    # restricting names works; asking for an absent set fails loudly
+    only = serve_lib.MaskSetStore.from_run_dir(str(tmp_path), SHAPES,
+                                               names=["b12"])
+    assert only.names == ("b12",)
+    with pytest.raises(serve_lib.MaskSetError, match="not found"):
+        serve_lib.MaskSetStore.from_run_dir(str(tmp_path), SHAPES,
+                                            names=["b999"])
+
+
+def test_store_from_run_dir_rejects_tampered_masks(tmp_path):
+    sets = _sets()
+    final = _save_stage(str(tmp_path), "stage_00_b24", sets["hi"])
+    # overwrite one mask leaf after the manifest was written: the content
+    # hash no longer matches the recorded fingerprint
+    step = os.path.join(final, "step_00000000")
+    leaf = [f for f in os.listdir(step) if f.endswith(".npy")][0]
+    arrs = np.load(os.path.join(step, leaf))
+    np.save(os.path.join(step, leaf), np.zeros_like(arrs))
+    with pytest.raises(runner_lib.CheckpointError):
+        # deep validation catches the sha256 mismatch first
+        runner_lib.load_stage_init(final, M.full_masks(SHAPES),
+                                   masks_only=True)
+    with pytest.raises(serve_lib.MaskSetError):
+        serve_lib.MaskSetStore.from_run_dir(str(tmp_path), SHAPES)
+
+
+def test_store_from_run_dir_rejects_wrong_model_layout(tmp_path):
+    other = {"a": np.ones((9,), np.float32), "b": np.ones((2, 4),
+                                                          np.float32)}
+    _save_stage(str(tmp_path), "stage_00_b17", other)
+    with pytest.raises(serve_lib.MaskSetError,
+                       match="different site layout"):
+        serve_lib.MaskSetStore.from_run_dir(str(tmp_path), SHAPES)
+
+
+def test_store_from_run_dir_empty_is_clear(tmp_path):
+    with pytest.raises(serve_lib.MaskSetError, match="no completed sweep"):
+        serve_lib.MaskSetStore.from_run_dir(str(tmp_path), SHAPES)
+
+
+# ----------------------------------------------------- decode-step contracts
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_config("stablelm_1p6b").reduced()
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    shapes = {k: s.shape for k, s in model.mask_sites().items()}
+    full = M.full_masks(shapes)
+    rng = np.random.default_rng(1)
+    soft = {k: rng.random(v.shape).astype(np.float32)
+            for k, v in full.items()}
+    sets = {"full": full, "half": M.threshold(soft, M.count(full) // 2)}
+    store = serve_lib.MaskSetStore(shapes, sets)
+    return cfg, model, params, store
+
+
+def _prefill_then_decode(model, params, masks, prompt, cache, steps,
+                         decode, swap_to=None, swap_at=None):
+    """Greedy continuation; optionally hot-swap the mask tree mid-stream."""
+    prefill = jax.jit(serve_lib.make_prefill(model))
+    last, cache = prefill(params, masks[0] if isinstance(masks, list)
+                          else masks, prompt, cache)
+    tok = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    P = prompt.shape[1]
+    out = [np.asarray(tok)]
+    m = masks[0] if isinstance(masks, list) else masks
+    for t in range(steps):
+        if swap_at is not None and t == swap_at:
+            m = swap_to
+        tok, cache = decode(params, m, tok, cache,
+                            jnp.asarray(P + t, jnp.int32))
+        out.append(np.asarray(tok))
+    return np.concatenate(out, axis=1), cache
+
+
+def test_hot_swap_is_bitwise_and_does_not_recompile(lm):
+    """One compiled decode step serves every budget: swapping the mask tree
+    mid-stream gives exactly the tokens a dedicated per-budget trace gives,
+    and the swap adds no cache entry (masks are arguments, not constants)."""
+    cfg, model, params, store = lm
+    B, P, G = 2, 8, 6
+    rng = np.random.default_rng(2)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (B, P), dtype=np.int32))
+    shared = jax.jit(serve_lib.make_decode_step(model))
+
+    full, half = store.select("full"), store.select("half")
+    toks_full, _ = _prefill_then_decode(
+        model, params, full, prompt, model.init_cache(B, P + G + 1), G,
+        shared)
+    has_cache_api = hasattr(shared, "_cache_size")
+    n_compiles = shared._cache_size() if has_cache_api else None
+    toks_swap, _ = _prefill_then_decode(
+        model, params, full, prompt, model.init_cache(B, P + G + 1), G,
+        shared, swap_to=half, swap_at=3)
+    if has_cache_api:
+        assert shared._cache_size() == n_compiles   # swap never re-jits
+
+    # the swapped stream's prefix is bitwise the full-budget stream
+    np.testing.assert_array_equal(toks_swap[:, :4], toks_full[:, :4])
+    # and from the swap on it is bitwise what a dedicated half-budget
+    # decode produces from the same cache state
+    dedicated = jax.jit(serve_lib.make_decode_step(model))
+    toks_half, _ = _prefill_then_decode(
+        model, params, [full], prompt, model.init_cache(B, P + G + 1), G,
+        dedicated, swap_to=half, swap_at=3)
+    np.testing.assert_array_equal(toks_swap, toks_half)
+
+
+def test_vector_cache_len_matches_scalar(lm):
+    """A (B,) cache_len vector with equal entries computes the same decode
+    forward as the scalar path (different HLO, so allclose — bf16)."""
+    cfg, model, params, store = lm
+    masks = store.select("full")
+    B, P, G = 2, 6, 3
+    rng = np.random.default_rng(3)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (B, P), dtype=np.int32))
+    max_len = P + G + 2
+    prefill = jax.jit(serve_lib.make_prefill(model))
+    _, cache = prefill(params, masks, prompt, model.init_cache(B, max_len))
+    cache = jax.tree.map(np.asarray, cache)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, (B, 1), dtype=np.int32))
+
+    fwd = jax.jit(lambda p, m, t, c, cl: model.forward(p, m, t, cache=c,
+                                                       cache_len=cl))
+    ls, cs = fwd(params, masks, tok, jax.tree.map(jnp.asarray, cache),
+                 jnp.asarray(P, jnp.int32))
+    lv, cv = fwd(params, masks, tok, jax.tree.map(jnp.asarray, cache),
+                 jnp.full((B,), P, jnp.int32))
+    np.testing.assert_allclose(np.asarray(ls, np.float32),
+                               np.asarray(lv, np.float32),
+                               rtol=2e-2, atol=5e-2)
+    for a, b in zip(jax.tree.leaves(cs), jax.tree.leaves(cv)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=5e-2)
+
+
+def test_ragged_rows_are_independent_bitwise(lm):
+    """Continuous batching's correctness core: at fixed B, a slot's decode
+    stream is bitwise independent of what the other slots hold.  A request
+    served next to a neighbor produces exactly the tokens it produces with
+    that slot empty — same graph, same shapes, row-local values."""
+    cfg, model, params, store = lm
+    masks = store.select("full")
+    B, G, max_len = 2, 3, 12
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab, (1, p), dtype=np.int32)
+               for p in (6, 4)]
+    decode = jax.jit(serve_lib.make_decode_step(model))
+    insert = jax.jit(serve_lib.make_insert_slot(model))
+    prefill = jax.jit(serve_lib.make_prefill(model))
+
+    def run(live):
+        """Decode G steps with the requests in ``live`` occupying their
+        slots (others left at the zero-init cache)."""
+        big = model.init_cache(B, max_len)
+        tok = np.zeros((B,), np.int32)
+        cl = np.zeros((B,), np.int32)
+        for i in live:
+            p = prompts[i]
+            small = model.init_cache(1, max_len)
+            last, small = prefill(params, masks, jnp.asarray(p), small)
+            big = insert(big, small, jnp.asarray(i, jnp.int32))
+            tok[i] = int(jnp.argmax(last, -1)[0])
+            cl[i] = p.shape[1]
+        out = {i: [int(tok[i])] for i in live}
+        for _ in range(G):
+            nxt, big = decode(params, masks, jnp.asarray(tok[:, None]),
+                              big, jnp.asarray(cl))
+            tok = np.asarray(nxt).reshape(-1)
+            cl += 1
+            for i in live:
+                out[i].append(int(tok[i]))
+        return out
+
+    both = run([0, 1])
+    assert run([0])[0] == both[0]
+    assert run([1])[1] == both[1]
+
+
+_SHARDED_SERVE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax
+import jax.numpy as jnp
+from repro.configs import get_config
+from repro.core import linearize, masks as M
+from repro.launch.mesh import make_host_mesh
+from repro.models.lm import LM
+from repro.training import serve as serve_lib
+
+cfg = get_config("stablelm_1p6b").reduced()
+model = LM(cfg)
+params = model.init(jax.random.PRNGKey(0))
+masks = M.as_device(linearize.init_masks(model.mask_sites()))
+B, P, G = 4, 6, 4
+max_len = P + G + 1
+rng = np.random.default_rng(0)
+prompt = jnp.asarray(rng.integers(0, cfg.vocab, (B, P), dtype=np.int32))
+prefill = jax.jit(serve_lib.make_prefill(model))
+cache0 = model.init_cache(B, max_len)
+last, cache0 = prefill(params, masks, prompt, cache0)
+tok0 = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+cache0 = jax.tree.map(np.asarray, cache0)
+
+def run(decode, vec):
+    tok, cache = tok0, jax.tree.map(jnp.asarray, cache0)
+    out = [np.asarray(tok)]
+    for t in range(G):
+        cl = np.full((B,), P + t, np.int32) if vec else P + t
+        tok, cache = decode(params, masks, tok, cache,
+                            jnp.asarray(cl, jnp.int32))
+        out.append(np.asarray(tok))
+    return np.concatenate(out, 1)
+
+single = run(jax.jit(serve_lib.make_decode_step(model)), vec=True)
+mesh = make_host_mesh(4, 1)
+assert mesh.size == 4, mesh
+scfg = serve_lib.ServeCfg(dp_axes=("data",), max_len=max_len, batch=B)
+model.activation_spec = None
+with mesh:
+    sharded = run(serve_lib.jit_decode_step(model, mesh, scfg), vec=True)
+np.testing.assert_array_equal(single, sharded)
+print("SERVE_SHARDED_OK")
+"""
+
+
+def test_sharded_decode_matches_single_device_forced_multi_device():
+    """jit_decode_step's production cache shardings, 4 forced host devices,
+    vector cache_len: tokens identical to single-device decode."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _SHARDED_SERVE_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SERVE_SHARDED_OK" in out.stdout
