@@ -63,9 +63,11 @@ import numpy as np
 import jax
 
 from repro.analysis.roofline import SuffixCostModel
+from repro.configs import ARCH_IDS, get_config
 from repro.core import engine, linearize, masks as M
-from repro.data import ImageDatasetCfg, SyntheticImages
+from repro.data import ImageDatasetCfg, MarkovTokens, SyntheticImages
 from repro.launch import compile_cache, mesh as mesh_lib
+from repro.models.lm import LM
 from repro.models.resnet import CNN, CNNConfig
 
 
@@ -77,6 +79,22 @@ def build_pipeline(image_size=16, eval_batch=128):
         n_classes=4, image_size=image_size, n_train=256, n_test=64))
     params = model.init(jax.random.PRNGKey(0))
     batch = data.train_eval_set(eval_batch)
+    masks0 = linearize.init_masks(model.mask_sites())
+    return model, params, batch, masks0
+
+
+def build_pipeline_family(arch: str, eval_batch=4, seq=33):
+    """Per-family row: an LM arch at its reduced config on Markov tokens.
+
+    Same downstream contract as the ResNet pipeline (``make_param_eval_fn``
+    / ``make_suffix_eval_fns``); for scanned-stack families the deep depth
+    site is a per-repeat virtual site (``s0.rwkv@1``), so its suffix row
+    times the carry-checkpointed mid-scan cut."""
+    cfg = get_config(arch).reduced()
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mt = MarkovTokens(cfg.vocab, seed=0)
+    batch = {"tokens": mt.batch(eval_batch, seq, 10**6)["tokens"]}
     masks0 = linearize.init_masks(model.mask_sites())
     return model, params, batch, masks0
 
@@ -186,6 +204,12 @@ def main():
     # CI's PR gate passes --trials 3 to trade precision for runtime.
     ap.add_argument("--trials", type=int, default=5)
     ap.add_argument("--drc", type=int, default=64)
+    ap.add_argument("--arch", default="resnet",
+                    choices=["resnet"] + list(ARCH_IDS),
+                    help="workload family: 'resnet' (the default mini-CNN "
+                         "row) or an LM arch id at its reduced config — "
+                         "per-family rows land in the same history file, "
+                         "keyed by config.model")
     ap.add_argument("--eval-batch", type=int, default=4)
     ap.add_argument("--out", default="BENCH_bcd_eval.json")
     ap.add_argument("--history", default=None,
@@ -201,8 +225,13 @@ def main():
         compile_cache.enable(args.compile_cache)
         counter = compile_cache.hit_counter()
 
-    model, params, batch, masks0 = build_pipeline(
-        eval_batch=args.eval_batch)
+    if args.arch == "resnet":
+        model, params, batch, masks0 = build_pipeline(
+            eval_batch=args.eval_batch)
+    else:
+        model, params, batch, masks0 = build_pipeline_family(
+            args.arch, eval_batch=args.eval_batch)
+    repeat_sites = getattr(model, "site_repeats", lambda: None)()
     indices = M.sample_removal_indices(
         np.random.default_rng(0), masks0, args.drc, args.rt)
     # Don't let ragged-chunk padding exceed RT: with rt < chunk_size the
@@ -285,7 +314,8 @@ def main():
     per_depth = {}
     for depth, site in depth_sites(model).items():
         site_idx = M.sample_removal_indices_within(
-            np.random.default_rng(1), masks0, args.drc, args.rt, [site])
+            np.random.default_rng(1), masks0, args.drc, args.rt, [site],
+            repeat_sites=repeat_sites)
         rows = {"batched": [], "suffix": []}
         for name in rows:                     # compile + tune, untimed
             time_backend(backends[name], masks0, site_idx, chunk, 1)

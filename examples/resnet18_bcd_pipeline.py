@@ -53,11 +53,10 @@ manifest fingerprint.  Unset, the run is plain single-process.
 import argparse
 import os
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import bcd, engine, linearize, masks as M, runner
+from repro.core import bcd, linearize, masks as M, runner
 from repro.core.snl import SNLConfig, finetune, run_snl
 from repro.data import ImageDatasetCfg, SyntheticImages
 from repro.launch import compile_cache
@@ -174,38 +173,14 @@ def train_base(model, step, opt, batches, masks0):
 
 
 def make_bcd_evaluator(args, model, eval_b, holder, chunk_size, rt):
-    """The candidate engine: params are evaluator *context* (a jit input)
-    because finetuning rewrites them between outer steps.
-
-    Returns (evaluator, eval_acc, set_ctx): call ``set_ctx(params)`` after
-    every finetune — engines differ in context shape (the suffix engine
-    carries the eval batch alongside params), so callers never touch
-    ``set_context`` directly."""
-    eval_fn_p = model.make_param_eval_fn(eval_b)
-    acc_jit = jax.jit(eval_fn_p)
-    eval_acc = lambda m: float(acc_jit(M.as_device(m), holder["params"]))
-    if args.engine == "sequential":
-        return engine.make_evaluator("sequential", eval_acc=eval_acc), \
-            eval_acc, lambda p: None
-    # don't let ragged-chunk padding exceed RT (sharded may still
-    # round up to the device count; extras are sliced off)
-    pad = min(chunk_size, rt)
-    if args.engine == "suffix":
-        batch_np = {k: np.asarray(v) for k, v in eval_b.items()}
-        evaluator = engine.make_evaluator(
-            "suffix", split=model.make_suffix_eval_fns(),
-            context={"params": holder["params"], "batch": batch_np},
-            pad_to=pad, prefetch=args.prefetch,
-            # share-tied coordinates are overridden outside the fused
-            # conv/matmul kernels (linearize._apply_share_ties) — keep the
-            # gate un-fused when the move set can produce ties
-            fused_kernels="share" not in args.moves)
-        return evaluator, eval_acc, lambda p: evaluator.set_context(
-            {"params": p, "batch": batch_np})
-    evaluator = engine.make_evaluator(
-        args.engine, eval_fn=eval_fn_p, pad_to=pad,
-        context=holder["params"], prefetch=args.prefetch)
-    return evaluator, eval_acc, evaluator.set_context
+    """The candidate engine (shared family-agnostic builder —
+    ``launch.sweep.make_bcd_evaluator``); returns (evaluator, eval_acc,
+    set_ctx).  Share-tied coordinates are overridden outside the fused
+    conv/matmul kernels (linearize._apply_share_ties), so the gate stays
+    un-fused when the move set can produce ties."""
+    return sweep_lib.make_bcd_evaluator(
+        args.engine, model, eval_b, holder, chunk_size=chunk_size, rt=rt,
+        prefetch=args.prefetch, fused_kernels="share" not in args.moves)
 
 
 def run_sweep_mode(args):

@@ -286,6 +286,48 @@ def block_fwd_flops(cfg, blk, new_tokens: float, ctx: float,
     return f, wb, cache_bytes
 
 
+def moe_capacity_slots(cfg, seq: int) -> int:
+    """Per-expert slot count of the sort-based MoE dispatch.
+
+    Mirrors ``models.moe._capacity``: decode (seq == 1) is exact — one slot
+    per expert — and everything else rounds up to a multiple of 8 with a
+    floor of 8.  The expert einsums compute ALL ``E·C`` slots whether or
+    not tokens fill them, so segment-level costing must use this padded
+    figure, not the analytic ``top_k·capacity_factor`` per-token average.
+    """
+    if seq == 1:
+        return 1
+    cap = int(seq * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(8, -(-cap // 8) * 8)
+
+
+def lm_segment_fwd_flops(cfg, *, seq_len: int) -> list:
+    """Per-segment forward FLOPs of the unified LM (per-sample, prefill):
+    ``[embed, head…, stack repeat 0 … R-1, tail…, logits]``.
+
+    The scanned stack contributes one entry PER REPEAT — the per-repeat
+    prefix cuts in ``models.lm`` need per-repeat fractions, and every
+    repeat runs the identical pattern so the entries are equal.  MoE
+    blocks are corrected from :func:`block_fwd_flops`'s analytic
+    ``top_k·capacity_factor`` average to the dispatch's true padded slot
+    capacity (:func:`moe_capacity_slots`): the expert einsums pay for
+    every ``E·C`` slot, filled or not.
+    """
+    def f(blk):
+        fl = block_fwd_flops(cfg, blk, seq_len, seq_len, "prefill")[0]
+        if blk.kind == "moe":
+            analytic = seq_len * cfg.top_k * cfg.capacity_factor
+            slots = cfg.n_experts * moe_capacity_slots(cfg, seq_len)
+            fl += 2 * max(slots - analytic, 0.0) * 3 * cfg.d_model \
+                * cfg.d_ff_expert
+        return fl
+    rep = sum(f(b) for b in cfg.pattern)
+    return ([0.0] + [f(b) for b in cfg.head_blocks]
+            + [rep] * cfg.n_repeats
+            + [f(b) for b in cfg.tail]
+            + [2.0 * seq_len * cfg.d_model * cfg.vocab])
+
+
 def _iter_bench_history(path):
     """Yield parsed BENCH_history.jsonl entries, skipping malformed lines
     (the file is append-only across heterogeneous tool versions)."""

@@ -504,6 +504,19 @@ class SplitEval(NamedTuple):
     pre(ctx)}) == full(m, ctx)`` bitwise — the depth-0 analogue of the
     prefix-trie contract).  Optional: ``None`` keeps ``full`` folding from
     the raw input.
+
+    ``site_repeats`` (site -> R) marks mask sites whose (R, ·) array spans
+    R consecutive per-repeat cut segments starting at the site's
+    ``site_segment`` entry — scanned-stack sites with carry-checkpointed
+    per-repeat cuts (models.lm).  ``site_order``/``site_segment`` then also
+    carry *virtual* repeat-qualified names (``"s0.ffn@r"`` at segment
+    base+r) addressing the per-repeat cuts; ``suffix_sites`` keeps
+    returning real mask names only (they key candidate tree slices).
+    Grouping resolves each candidate coordinate's repeat row
+    arithmetically (``masks.group_blocks_by_site`` ``repeat_sites=``), and
+    :meth:`SuffixEvaluator.begin_step` diffs such sites per repeat row so
+    trie entries at earlier repeats survive deep-repeat base edits.
+    Optional: ``None`` means every site owns exactly one segment.
     """
     prefix: Callable[..., Any]
     suffix: Callable[..., Any]
@@ -514,6 +527,7 @@ class SplitEval(NamedTuple):
     prefix_fraction: Dict[str, float]  # site -> fwd-FLOP fraction above it
     prefix_ext: Optional[Callable[..., Any]] = None
     pre: Optional[Callable[..., Any]] = None
+    site_repeats: Optional[Dict[str, int]] = None
 
 
 class SitedChunk(NamedTuple):
@@ -793,14 +807,32 @@ class SuffixEvaluator:
         ``d <= min(changed segments)`` are still byte-identical prefixes and
         survive.  A BCD step that only flipped coordinates at/below the
         deepest cut (the common case late in a sweep) therefore keeps its
-        whole chain warm."""
+        whole chain warm.
+
+        Sites in ``SplitEval.site_repeats`` (scanned-stack masks spanning R
+        per-repeat segments) are diffed per repeat ROW: the effective
+        changed segment is the site's base segment plus the first repeat
+        row that differs, so a base edit at repeat r keeps every carry
+        checkpoint at repeats <= r warm instead of flushing the whole
+        stack's chain."""
         new = {k: np.asarray(v, dtype=np.float32)
                for k, v in base_masks.items()}
         if self._base_masks is None or set(new) != set(self._base_masks):
             self.trie.clear()
         elif len(self.trie):
-            changed = [self._split.site_segment[k] for k in new
-                       if not np.array_equal(new[k], self._base_masks[k])]
+            reps = self._split.site_repeats or {}
+            changed = []
+            for k in new:
+                if np.array_equal(new[k], self._base_masks[k]):
+                    continue
+                seg = self._split.site_segment[k]
+                rk = int(reps.get(k, 1))
+                if rk > 1:
+                    rows = np.any(new[k].reshape(rk, -1)
+                                  != self._base_masks[k].reshape(rk, -1),
+                                  axis=1)
+                    seg += int(np.flatnonzero(rows)[0])
+                changed.append(seg)
             if changed:
                 min_seg = min(changed)
                 self.trie.keep_where(lambda d: d <= min_seg)
@@ -943,7 +975,11 @@ def plan_sited_chunks(evaluator: SuffixEvaluator, indices, layout: list,
     share / add_back) group by the *shallowest* site they touch — over
     off ∪ on ∪ tie (``masks.group_moves_by_site``) — because a cached
     prefix is only reusable if it reads none of the candidate's edited
-    masks.  ``site is None`` marks chunks the cost model sent down the
+    masks.  Scanned-stack sites with per-repeat cuts
+    (``SplitEval.site_repeats``) resolve each coordinate to its repeat
+    row's segment, so a candidate editing only repeat r cuts at r's carry
+    checkpoint instead of the whole stack's entry.
+    ``site is None`` marks chunks the cost model sent down the
     full-forward fallback (shallow cut or undersized chunk); runs of
     adjacent fallback chunks are coalesced back up to ``chunk_size``
     (``masks.coalesce_fallback_chunks``) so a fragmented depth mix doesn't
@@ -958,10 +994,12 @@ def plan_sited_chunks(evaluator: SuffixEvaluator, indices, layout: list,
     split = evaluator._split
     if isinstance(indices, (list, tuple)):
         order, groups = M.group_moves_by_site(indices, layout,
-                                              split.site_segment)
+                                              split.site_segment,
+                                              repeat_sites=split.site_repeats)
     else:
-        order, groups = M.group_blocks_by_site(indices, layout,
-                                               split.site_segment)
+        order, groups = M.group_blocks_by_site(
+            indices, layout, split.site_segment,
+            repeat_sites=split.site_repeats)
     raw = []
     planned_cover = 0.0   # prefixes earlier planned chunks will have cached
     for seg, g0, g1 in groups:

@@ -67,6 +67,15 @@ def fused_route_mode() -> Optional[str]:
     return getattr(_ROUTE_STATE, "fused", None)
 
 
+# Activation kinds with a masked lowering (ref path + Pallas kernels).
+# Families register their gates against this set: dense/moe FFNs use the
+# config's act (relu/gelu/silu), expert FFNs share the routed experts'
+# (E, F) site, rwkv6's channel mix registers 'sqrelu' (relu(x)²), mamba
+# registers 'silu' on the gated inner width.
+KINDS = ("relu", "gelu", "silu", "sqrelu")
+REPLACEMENTS = ("identity", "poly2")
+
+
 @dataclasses.dataclass(frozen=True)
 class MaskSite:
     """One maskable nonlinearity site.
@@ -76,10 +85,26 @@ class MaskSite:
     per-channel (n_layers_in_stack, d_ff) for a scanned stack.
     kind:  activation at the site ('relu' | 'gelu' | 'silu' | 'sqrelu').
     replacement: 'identity' (Network Linearization) or 'poly2' (AutoReP).
+
+    Validated at registration: a typo'd kind would otherwise only surface
+    at trace time, deep inside the kernel dispatch of whichever backend
+    first evaluates the site.
     """
     shape: Tuple[int, ...]
     kind: str = "relu"
     replacement: str = "identity"
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"unknown activation kind {self.kind!r} (one of {KINDS})")
+        if self.replacement not in REPLACEMENTS:
+            raise ValueError(
+                f"unknown replacement {self.replacement!r} "
+                f"(one of {REPLACEMENTS})")
+        if not self.shape or any(int(d) <= 0 for d in self.shape):
+            raise ValueError(f"mask shape must be non-empty positive dims, "
+                             f"got {self.shape!r}")
 
 
 def init_masks(sites: Dict[str, MaskSite]) -> M.MaskTree:

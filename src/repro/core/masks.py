@@ -211,8 +211,21 @@ def materialize_chunks(flat: np.ndarray, layout: list, indices: np.ndarray,
         yield materialize_from_flat(flat, layout, indices[start:stop])
 
 
+def _repeat_row_sizes(layout: list,
+                      repeat_sites: Optional[Dict[str, int]]) -> np.ndarray:
+    """Per-layout-entry repeat-row size for repeat-aware rank resolution.
+
+    A site in ``repeat_sites`` spans R consecutive per-repeat ranks from its
+    base rank, with its flat coordinates laid out repeat-major — so a
+    coordinate's rank offset is ``local_offset // (size // R)``.  Sites not
+    listed have one repeat: row size = site size, offset always 0."""
+    return np.array([sz // int((repeat_sites or {}).get(k, 1))
+                     for k, _, sz, _ in layout], dtype=np.int64)
+
+
 def group_blocks_by_site(indices: np.ndarray, layout: list,
-                         rank_of_site: Dict[str, int]):
+                         rank_of_site: Dict[str, int],
+                         repeat_sites: Optional[Dict[str, int]] = None):
     """Group candidate removal blocks by their *earliest* touched site rank.
 
     ``indices``: (n, k) flat removal coordinates (``sample_removal_indices``
@@ -220,6 +233,13 @@ def group_blocks_by_site(indices: np.ndarray, layout: list,
     site name -> group rank — pass the model's segment indices so candidates
     that share a forward prefix land in the same group (the prefix-reuse
     engine's chunking contract: chunks never straddle a group).
+
+    ``repeat_sites`` (site -> R) marks scanned-stack sites whose (R, ·)
+    mask spans R consecutive per-repeat segments starting at the site's
+    base rank: a coordinate's effective rank is then
+    ``rank_of_site[site] + local_offset // (size // R)``, so candidates
+    editing only deep repeats group at their true (deeper) cut instead of
+    the whole-stack one.
 
     Returns ``(order, groups)``: ``order`` is an (n,) permutation of
     candidate positions sorted by group rank (stable, so sampling order
@@ -233,8 +253,13 @@ def group_blocks_by_site(indices: np.ndarray, layout: list,
     offs = np.array([off for _, off, _, _ in layout], dtype=np.int64)
     ranks = np.array([rank_of_site[k] for k, _, _, _ in layout],
                      dtype=np.int64)
-    site_of = np.searchsorted(offs, indices.reshape(-1), side="right") - 1
-    cand_rank = ranks[site_of].reshape(indices.shape).min(axis=1)
+    flat = indices.reshape(-1)
+    site_of = np.searchsorted(offs, flat, side="right") - 1
+    coord_rank = ranks[site_of]
+    if repeat_sites:
+        row_sz = _repeat_row_sizes(layout, repeat_sites)
+        coord_rank = coord_rank + (flat - offs[site_of]) // row_sz[site_of]
+    cand_rank = coord_rank.reshape(indices.shape).min(axis=1)
     return _group_by_rank(cand_rank)
 
 
@@ -586,50 +611,80 @@ def materialize_move_chunks(flat: np.ndarray, layout: list,
 
 
 def move_site_ranks(moves: Sequence[Move], layout: list,
-                    rank_of_site: Dict[str, int]) -> np.ndarray:
+                    rank_of_site: Dict[str, int],
+                    repeat_sites: Optional[Dict[str, int]] = None
+                    ) -> np.ndarray:
     """Each move's earliest-touched-site rank over off ∪ on ∪ tie.
 
     Multi-site moves (swap/share/add_back) are grouped by the *shallowest*
     site they edit: a cached forward prefix is only valid if it reads no
-    edited mask, so the cut must sit at or above every touched coordinate."""
+    edited mask, so the cut must sit at or above every touched coordinate.
+    ``repeat_sites`` resolves scanned-stack coordinates to their per-repeat
+    rank (same contract as :func:`group_blocks_by_site`)."""
     offs = np.array([off for _, off, _, _ in layout], dtype=np.int64)
     ranks = np.array([rank_of_site[k] for k, _, _, _ in layout],
                      dtype=np.int64)
+    row_sz = _repeat_row_sizes(layout, repeat_sites) if repeat_sites else None
     out = np.empty(len(moves), dtype=np.int64)
     for i, mv in enumerate(moves):
         coords = mv.touched()
+        if not coords.size:
+            out[i] = int(ranks.min())
+            continue
         site_of = np.searchsorted(offs, coords, side="right") - 1
-        out[i] = int(ranks[site_of].min()) if coords.size else int(ranks.min())
+        r = ranks[site_of]
+        if row_sz is not None:
+            r = r + (coords - offs[site_of]) // row_sz[site_of]
+        out[i] = int(r.min())
     return out
 
 
 def group_moves_by_site(moves: Sequence[Move], layout: list,
-                        rank_of_site: Dict[str, int]):
+                        rank_of_site: Dict[str, int],
+                        repeat_sites: Optional[Dict[str, int]] = None):
     """:func:`group_blocks_by_site` for typed moves: group by the earliest
-    touched site over off ∪ on ∪ tie (same ``(order, groups)`` contract)."""
+    touched site over off ∪ on ∪ tie (same ``(order, groups)`` and
+    ``repeat_sites`` contract)."""
     n = len(moves)
     if n == 0:
         return np.arange(0, dtype=np.int64), []
-    return _group_by_rank(move_site_ranks(moves, layout, rank_of_site))
+    return _group_by_rank(
+        move_site_ranks(moves, layout, rank_of_site, repeat_sites))
 
 
 def sample_removal_indices_within(
     rng: np.random.Generator, masks: MaskTree, drc: int, n: int,
-    sites: Iterable[str]
+    sites: Iterable[str], repeat_sites: Optional[Dict[str, int]] = None
 ) -> np.ndarray:
     """:func:`sample_removal_indices` restricted to the given sites'
     coordinates — site-local candidate blocks for the per-site-depth
     benchmark.  NOT part of Alg. 2's rng discipline (the real sampler draws
     from the global active set); returns (n, min(drc, #active-in-sites)).
+
+    Site names may be repeat-qualified (``"s0.ffn@1"`` — models.lm virtual
+    stack sites) when ``repeat_sites`` maps the base mask name to its
+    repeat count R: coordinates are then restricted to repeat r's row of
+    the stacked (R, ·) mask, so the benchmark can build candidates that
+    cut at one specific scan repeat.
     """
-    sites = set(sites)
     flat, layout = _flatten(masks)
+    wanted: Dict[str, set] = {}
+    for s in sites:
+        base, _, rtag = str(s).partition("@")
+        wanted.setdefault(base, set()).add(int(rtag) if rtag else None)
     sel = np.zeros(flat.size, dtype=bool)
     for k, off, sz, _ in layout:
-        if k in sites:
-            sel[off:off + sz] = True
+        rows = wanted.get(k)
+        if rows is None:
+            continue
+        row = sz // int((repeat_sites or {}).get(k, 1))
+        for r in rows:
+            if r is None:
+                sel[off:off + sz] = True
+            else:
+                sel[off + r * row:off + (r + 1) * row] = True
     if not sel.any():
-        raise ValueError(f"no mask coordinates in sites {sorted(sites)}")
+        raise ValueError(f"no mask coordinates in sites {sorted(set(sites))}")
     active = np.nonzero((flat > 0.5) & sel)[0]
     k = min(drc, active.size)
     return np.stack([rng.choice(active, size=k, replace=False)

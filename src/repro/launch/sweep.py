@@ -47,9 +47,56 @@ import threading
 import time
 from typing import Callable, List, Optional, Tuple
 
+import numpy as np
+import jax
+
 from repro.core import bcd as bcd_lib
+from repro.core import engine
 from repro.core import masks as M
 from repro.core import runner as runner_lib
+
+
+def make_bcd_evaluator(engine_name: str, model, eval_b, holder, *,
+                       chunk_size: int, rt: int, prefetch=2,
+                       fused_kernels: bool = True):
+    """Build the BCD candidate engine for any model family.
+
+    Model-agnostic: works for every model exposing the shared eval-closure
+    contract (``make_param_eval_fn`` / ``make_suffix_eval_fns`` — CNNs and
+    every ``models.lm`` family, including scanned-stack SSM/RWKV and MoE
+    configs whose suffix engine cuts mid-scan via carry checkpoints).
+    Params are evaluator *context* (a jit input) because finetuning
+    rewrites them between outer steps; ``holder`` is the live
+    ``{"params": ...}`` box the caller mutates.
+
+    Returns ``(evaluator, eval_acc, set_ctx)``: call ``set_ctx(params)``
+    after every finetune — engines differ in context shape (the suffix
+    engine carries the eval batch alongside params), so callers never
+    touch ``set_context`` directly.  ``fused_kernels=False`` keeps the
+    activation gate un-fused on the suffix backend (required when the move
+    set can produce share ties — see ``linearize._apply_share_ties``).
+    """
+    eval_fn_p = model.make_param_eval_fn(eval_b)
+    acc_jit = jax.jit(eval_fn_p)
+    eval_acc = lambda m: float(acc_jit(M.as_device(m), holder["params"]))
+    if engine_name == "sequential":
+        return engine.make_evaluator("sequential", eval_acc=eval_acc), \
+            eval_acc, lambda p: None
+    # don't let ragged-chunk padding exceed RT (sharded may still
+    # round up to the device count; extras are sliced off)
+    pad = min(chunk_size, rt)
+    if engine_name == "suffix":
+        batch_np = {k: np.asarray(v) for k, v in eval_b.items()}
+        evaluator = engine.make_evaluator(
+            "suffix", split=model.make_suffix_eval_fns(),
+            context={"params": holder["params"], "batch": batch_np},
+            pad_to=pad, prefetch=prefetch, fused_kernels=fused_kernels)
+        return evaluator, eval_acc, lambda p: evaluator.set_context(
+            {"params": p, "batch": batch_np})
+    evaluator = engine.make_evaluator(
+        engine_name, eval_fn=eval_fn_p, pad_to=pad,
+        context=holder["params"], prefetch=prefetch)
+    return evaluator, eval_acc, evaluator.set_context
 
 
 @dataclasses.dataclass

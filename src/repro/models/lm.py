@@ -60,6 +60,50 @@ def _sub(tree: Dict, prefix: str) -> Dict:
             if k.startswith(prefix + ".")}
 
 
+def _register_barrier_rules():
+    """``optimization_barrier`` ships without vmap/AD rules in jax 0.4.x;
+    the fence sits on paths the candidate engines vmap (stacked masks) and
+    training differentiates, so register the trivial ones: batching maps
+    the barrier over the batched operands, and the JVP passes tangents
+    through unfenced (the fence constrains compilation, not math)."""
+    from jax.interpreters import ad, batching
+    from jax._src.lax import lax as _lax
+    p = getattr(_lax, "optimization_barrier_p", None)
+    if p is None:                           # newer jax: rules built in
+        return
+    if p not in batching.primitive_batchers:
+        batching.primitive_batchers[p] = lambda args, dims: (
+            p.bind(*args), dims)
+    if p not in ad.primitive_jvps:
+        def _jvp(primals, tangents):
+            outs = p.bind(*primals)
+            tans = [jnp.zeros(o.shape, o.dtype)
+                    if isinstance(t, ad.Zero) else t
+                    for o, t in zip(outs, tangents)]
+            return outs, tans
+        ad.primitive_jvps[p] = _jvp
+
+
+_register_barrier_rules()
+
+
+def _fence(x):
+    """Segment-boundary compilation fence (``lax.optimization_barrier``).
+
+    Every split-forward cut point is a hard program boundary in the
+    prefix/suffix jits, so the segment after it compiles in isolation
+    there.  In the unsegmented forward the same boundary is an internal
+    value that XLA freely fuses across (embed fold into the first head
+    block, an unrolled trip-1 scan body into the final norm, …), which can
+    change the compiled arithmetic by an ulp or two and break the bitwise
+    ``prefix∘suffix == forward`` contract.  Fencing every segment boundary
+    in EVERY path makes each segment compile in isolation everywhere, so
+    the contract holds by construction.  The fence only blocks fusion
+    across the (B, S, D) residual stream — which the residual adds
+    materialize anyway — so it is free in practice."""
+    return jax.lax.optimization_barrier(x)
+
+
 def _positions(B: int, S: int, cache_len):
     """(B, S) absolute positions.  ``cache_len`` scalar: every row starts at
     the same offset (the one-shot serve path).  ``cache_len`` (B,): per-row
@@ -206,8 +250,8 @@ class LM:
                     shared_mask=msk.get("moe_shared"),
                     shared_site=(self._site(blk, "moe_shared")
                                  if cfg.n_shared_experts else None),
-                    poly=ply.get("moe"), soft=soft,
-                    act_spec=self.activation_spec)
+                    poly=ply.get("moe"), shared_poly=ply.get("moe_shared"),
+                    soft=soft, act_spec=self.activation_spec)
             return x, newc
         if blk.kind == "mamba":
             h = layers.rmsnorm(p["ln"], x)
@@ -240,16 +284,29 @@ class LM:
     # ------------------------------------------------------------ forward
 
     def _run_stack(self, params, masks, x, positions, *, poly, soft,
-                   cache=None, cache_len=0, remat=False):
+                   cache=None, cache_len=0, remat=False, lo_repeat=0,
+                   hi_repeat=None):
         """The scanned repeat stack: returns (x, scanned_cache).
 
         Shared verbatim by :meth:`forward` and the split forwards
         (:meth:`forward_prefix` / :meth:`forward_suffix`), so both trace
         the identical scan — the bitwise split-forward contract depends on
-        it."""
+        it.
+
+        ``lo_repeat``/``hi_repeat`` run only scan repeats ``[lo, hi)`` —
+        the split forwards' per-repeat carry checkpoints.  The slice of the
+        stacked xs is static (Python ints), so the scan body traces
+        identically to the full run, and the handoff at a repeat boundary
+        is bitwise: ``lax.scan`` materializes the carry between iterations
+        either way, so running repeats ``[0, r)`` then ``[r, R)`` from the
+        returned carry replays the exact per-iteration math of ``[0, R)``.
+        In the eval path (``cache=None``) the carry IS the (B, S, D) hidden
+        state — the repeat-r checkpoint is an ordinary boundary activation.
+        """
         cfg = self.cfg
         pattern = cfg.pattern
         R = cfg.n_repeats
+        hi_repeat = R if hi_repeat is None else hi_repeat
         xs = {"params": {str(p): params["stack"][str(p)]
                          for p, blk in enumerate(pattern) if not blk.shared},
               "masks": {f"s{p}.{suf}": masks[f"s{p}.{suf}"]
@@ -261,6 +318,18 @@ class LM:
                        for k, v in poly.items() if k.startswith("s")}}
         if cache is not None:
             xs["cache"] = cache["stack"]
+        if lo_repeat > 0 or hi_repeat < R:
+            xs = jax.tree.map(lambda a: a[lo_repeat:hi_repeat], xs)
+        # XLA unrolls trip-count-1 while loops and then fuses the inlined
+        # body with surrounding ops (embed fold, final norm), changing the
+        # arithmetic vs a multi-trip loop whose body compiles in isolation.
+        # Fencing the carry forces a sliced (possibly single-repeat) scan
+        # to compile in isolation too, keeping mid-scan prefix∘suffix
+        # bitwise-equal to the unsegmented forward.  For a multi-trip scan
+        # the loop boundary already isolates the body, so the fence is a
+        # no-op there.
+        x = _fence(x)
+        R = hi_repeat - lo_repeat
 
         def body(x, sl):
             x = self._constrain(x)
@@ -291,9 +360,11 @@ class LM:
                     x, _ = inner(x, jax.tree.map(lambda a: a[g], slG))
                 return x, None
 
-            return jax.lax.scan(jax.checkpoint(group_body), x, xsG)
+            out, scanned = jax.lax.scan(jax.checkpoint(group_body), x, xsG)
+            return _fence(out), scanned
         body_fn = jax.checkpoint(body) if remat else body
-        return jax.lax.scan(body_fn, x, xs)
+        out, scanned = jax.lax.scan(body_fn, x, xs)
+        return _fence(out), scanned
 
     def forward(self, params, masks, tokens, *, prefix_embeds=None,
                 poly=None, soft=False, cache=None, cache_len=0, remat=False,
@@ -324,7 +395,7 @@ class LM:
 
         for i, blk in enumerate(cfg.head_blocks):
             c = None if cache is None else cache["head"][i]
-            x, nc = self._layer_apply(blk, params["head"][i], x,
+            x, nc = self._layer_apply(blk, params["head"][i], _fence(x),
                                       _sub(masks, f"h{i}"),
                                       _sub(poly, f"h{i}"), soft,
                                       positions, c, cache_len)
@@ -339,7 +410,7 @@ class LM:
 
         for i, blk in enumerate(cfg.tail):
             c = None if cache is None else cache["tail"][i]
-            x, nc = self._layer_apply(blk, params["tail"][i], x,
+            x, nc = self._layer_apply(blk, params["tail"][i], _fence(x),
                                       _sub(masks, f"t{i}"),
                                       _sub(poly, f"t{i}"), soft,
                                       positions, c, cache_len)
@@ -355,18 +426,28 @@ class LM:
     # ------------------------------------------------------- split forward
     #
     # Segment boundaries for prefix-reuse candidate evaluation
-    # (core.engine.SuffixEvaluator): embed | head block i … | scanned stack
-    # | tail block i … | final norm + logits.  Every site inside the scanned
-    # stack maps to the *stack* segment (the scan is one compiled unit — a
-    # candidate mutating repeat r still re-runs the whole scan, but reuses
-    # embed + head), head/tail sites cut at their own block.  The split
-    # forwards reuse _layer_apply and _run_stack verbatim, so
-    # suffix(prefix(x)) traces the same primitives as forward(x) (eval
-    # path: no cache / remat / prefix_embeds).
+    # (core.engine.SuffixEvaluator): embed | head block i … | stack repeat 0
+    # … stack repeat R-1 | tail block i … | final norm + logits.  The
+    # scanned stack contributes one segment PER REPEAT: the eval-path scan
+    # carry is exactly the (B, S, D) hidden state, so the repeat-r boundary
+    # is a carry checkpoint — forward_prefix stops the scan after repeat
+    # r-1 and forward_suffix resumes it from the cached carry instead of
+    # re-running the whole stack.  Stack sites are addressed two ways: the
+    # REAL mask name ("s0.ffn" — the key in the mask tree, whose (R, ·)
+    # array spans every repeat) maps to its repeat-0 segment (the
+    # shallowest cut its coordinates can force), while virtual
+    # repeat-qualified names ("s0.ffn@r") address the per-repeat segments.
+    # site_order lists the virtual names; grouping resolves each candidate
+    # coordinate's true repeat row arithmetically
+    # (masks.group_blocks_by_site repeat_sites=).  The split forwards reuse
+    # _layer_apply and _run_stack verbatim, so suffix(prefix(x)) traces the
+    # same primitives as forward(x) (eval path: no cache / remat /
+    # prefix_embeds).
 
     def _segment_of_site(self) -> Dict[str, int]:
         cfg = self.cfg
         H = len(cfg.head_blocks)
+        R = cfg.n_repeats
         out = {}
         for i, blk in enumerate(cfg.head_blocks):
             for suf in _sites_for(cfg, blk):
@@ -374,30 +455,76 @@ class LM:
         for pos, blk in enumerate(cfg.pattern):
             for suf in _sites_for(cfg, blk):
                 out[f"s{pos}.{suf}"] = 1 + H
+                for r in range(R):
+                    out[f"s{pos}.{suf}@{r}"] = 1 + H + r
         for i, blk in enumerate(cfg.tail):
             for suf in _sites_for(cfg, blk):
-                out[f"t{i}.{suf}"] = 2 + H + i
+                out[f"t{i}.{suf}"] = 1 + H + R + i
         return out
 
+    def site_repeats(self) -> Dict[str, int]:
+        """Real stack mask name -> scan repeat count its (R, ·) array spans.
+
+        The repeat-aware grouping contract (``masks.group_blocks_by_site``
+        ``repeat_sites=``): a stack site's per-repeat segments are
+        consecutive from its base (repeat-0) segment, and its flat mask
+        coordinates are laid out repeat-major, so a coordinate's segment is
+        ``base + local_offset // (size // R)``."""
+        cfg = self.cfg
+        return {f"s{pos}.{suf}": cfg.n_repeats
+                for pos, blk in enumerate(cfg.pattern)
+                for suf in _sites_for(cfg, blk)}
+
     def site_order(self) -> Tuple[str, ...]:
-        """All mask sites in forward (topological) order."""
+        """All mask sites in forward (topological) order.
+
+        Stack sites appear once per scan repeat under their virtual
+        repeat-qualified name (``"s0.ffn@1"``); head/tail sites under their
+        real name.  Real stack names are deliberately absent — each segment
+        gets exactly one representative, and the engine's per-segment jits
+        key off the names listed here."""
         seg = self._segment_of_site()
-        return tuple(sorted(seg, key=lambda s: (seg[s], s)))
+        reps = self.site_repeats()
+        return tuple(sorted((s for s in seg if s not in reps),
+                            key=lambda s: (seg[s], s)))
 
     def site_segments(self) -> Dict[str, int]:
-        """site -> segment index (sites sharing a segment share a prefix)."""
+        """site -> segment index (sites sharing a segment share a prefix).
+
+        Contains BOTH namings of stack sites: real mask names at their
+        repeat-0 segment (mask-tree diffing, grouping rank lookups) and
+        virtual ``@r`` names at repeat r's segment (prefix/suffix cuts)."""
         return self._segment_of_site()
 
     def suffix_sites(self, site: str) -> Tuple[str, ...]:
-        """Sites consumed by :meth:`forward_suffix` for this cut."""
+        """Real mask names consumed by :meth:`forward_suffix` for this cut.
+
+        These are the keys the engine slices candidate stacked trees by, so
+        only real (mask-tree) names appear.  A real site is included iff
+        its DEEPEST segment is at/after the cut — a stack site's (R, ·)
+        array reaches repeat R-1, so a cut at any repeat ships the full
+        stack arrays (rows before the cut repeat ride along but are never
+        read: the suffix statically slices the scan xs)."""
         seg = self._segment_of_site()
         cut = seg[site]
-        return tuple(s for s in self.site_order() if seg[s] >= cut)
+        reps = self.site_repeats()
+
+        def deepest(s):
+            return seg[s] + (reps[s] - 1 if s in reps else 0)
+        return tuple(s for s in sorted((k for k in seg if "@" not in k),
+                                       key=lambda s: (seg[s], s))
+                     if deepest(s) >= cut)
 
     def forward_prefix(self, params, masks, tokens, site, *, poly=None,
                        soft=False, from_site=None, cached=None):
         """Forward up to (excluding) the segment applying ``site``; returns
         the cached (B, S, D) boundary hidden state.
+
+        A stack cut at repeat r (virtual site ``"s0.ffn@r"``) stops the
+        scan after repeat r-1; the returned hidden state is the scan carry
+        at that boundary (the eval-path carry IS the (B, S, D) activation),
+        so the trie stores and extends carry checkpoints like any other
+        prefix — including repeat-to-repeat extension.
 
         Multi-depth entry: ``from_site``/``cached`` resume from an earlier
         prefix's boundary state instead of the token embedding, folding
@@ -410,6 +537,7 @@ class LM:
         cut = seg[site]
         lo = 0 if from_site is None else seg[from_site]
         H = len(cfg.head_blocks)
+        R = cfg.n_repeats
         if from_site is None:
             x = jnp.take(params["embed"], tokens, axis=0)
             x = self._constrain(x)
@@ -422,19 +550,22 @@ class LM:
                 break
             if 1 + i < lo:
                 continue
-            x, _ = self._layer_apply(blk, params["head"][i], x,
+            x, _ = self._layer_apply(blk, params["head"][i], _fence(x),
                                      _sub(masks, f"h{i}"),
                                      _sub(poly, f"h{i}"), soft,
                                      positions, None, 0)
-        if lo <= 1 + H < cut:
+        # repeats whose segment 1+H+r lies in [lo, cut)
+        lo_r = min(max(lo - (1 + H), 0), R)
+        hi_r = min(max(cut - (1 + H), 0), R)
+        if hi_r > lo_r:
             x, _ = self._run_stack(params, masks, x, positions, poly=poly,
-                                   soft=soft)
+                                   soft=soft, lo_repeat=lo_r, hi_repeat=hi_r)
         for i, blk in enumerate(cfg.tail):
-            if 2 + H + i >= cut:
+            if 1 + H + R + i >= cut:
                 break
-            if 2 + H + i < lo:
+            if 1 + H + R + i < lo:
                 continue
-            x, _ = self._layer_apply(blk, params["tail"][i], x,
+            x, _ = self._layer_apply(blk, params["tail"][i], _fence(x),
                                      _sub(masks, f"t{i}"),
                                      _sub(poly, f"t{i}"), soft,
                                      positions, None, 0)
@@ -449,28 +580,34 @@ class LM:
 
     def forward_suffix(self, params, masks, cached, site, *, poly=None,
                        soft=False):
-        """Finish forward from a :meth:`forward_prefix` cache -> logits."""
+        """Finish forward from a :meth:`forward_prefix` cache -> logits.
+
+        For a stack cut at repeat r the scan RESUMES from the cached carry
+        (repeats ``[r, R)`` only) — a mid-scan candidate no longer re-runs
+        the whole stack."""
         cfg = self.cfg
         poly = poly or {}
         cut = self._segment_of_site()[site]
         H = len(cfg.head_blocks)
+        R = cfg.n_repeats
         x = cached
         B, S, _ = x.shape
         positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
         for i, blk in enumerate(cfg.head_blocks):
             if 1 + i < cut:
                 continue
-            x, _ = self._layer_apply(blk, params["head"][i], x,
+            x, _ = self._layer_apply(blk, params["head"][i], _fence(x),
                                      _sub(masks, f"h{i}"),
                                      _sub(poly, f"h{i}"), soft,
                                      positions, None, 0)
-        if 1 + H >= cut:
+        lo_r = min(max(cut - (1 + H), 0), R)
+        if lo_r < R:
             x, _ = self._run_stack(params, masks, x, positions, poly=poly,
-                                   soft=soft)
+                                   soft=soft, lo_repeat=lo_r, hi_repeat=R)
         for i, blk in enumerate(cfg.tail):
-            if 2 + H + i < cut:
+            if 1 + H + R + i < cut:
                 continue
-            x, _ = self._layer_apply(blk, params["tail"][i], x,
+            x, _ = self._layer_apply(blk, params["tail"][i], _fence(x),
                                      _sub(masks, f"t{i}"),
                                      _sub(poly, f"t{i}"), soft,
                                      positions, None, 0)
@@ -480,21 +617,16 @@ class LM:
     def site_prefix_fractions(self, *, seq_len: int = 64) -> Dict[str, float]:
         """site -> fraction of forward FLOPs strictly before its segment.
 
-        Analytic (roofline.block_fwd_flops, prefill mode, per-sample); the
-        suffix cost model thresholds on it.  ``seq_len`` only matters
-        through the attention quadratic term."""
+        Analytic (roofline.lm_segment_fwd_flops, prefill mode, per-sample);
+        the suffix cost model thresholds on it.  ``seq_len`` only matters
+        through the attention quadratic term.  Keyed by BOTH namings of
+        stack sites: the real mask name carries its repeat-0 (shallowest)
+        fraction, virtual ``@r`` names the per-repeat fractions."""
         from repro.analysis import roofline
-        cfg = self.cfg
-        H = len(cfg.head_blocks)
-
-        def f(blk):
-            return roofline.block_fwd_flops(cfg, blk, seq_len, seq_len,
-                                            "prefill")[0]
-        # per-segment flops: embed(≈0) | head… | stack | tail… | logits
-        seg_flops = ([0.0] + [f(b) for b in cfg.head_blocks]
-                     + [sum(f(b) for b in cfg.pattern) * cfg.n_repeats]
-                     + [f(b) for b in cfg.tail]
-                     + [2.0 * seq_len * cfg.d_model * cfg.vocab])
+        # per-segment flops: embed(≈0) | head… | stack repeat 0 … R-1 |
+        # tail… | logits (one entry PER scan repeat, MoE at true padded
+        # slot capacity)
+        seg_flops = roofline.lm_segment_fwd_flops(self.cfg, seq_len=seq_len)
         total = max(sum(seg_flops), 1.0)
         before, cum = [], 0.0
         for v in seg_flops:
@@ -535,7 +667,8 @@ class LM:
             suffix_sites=self.suffix_sites,
             prefix_fraction=self.site_prefix_fractions(),
             prefix_ext=prefix_ext_fn,
-            pre=pre_fn)
+            pre=pre_fn,
+            site_repeats=self.site_repeats())
 
     # ------------------------------------------------------- eval closures
     #

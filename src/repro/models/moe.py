@@ -63,34 +63,57 @@ def _capacity(c: MoECfg, seq: int) -> int:
 
 
 def _dispatch_row(x, logits, c: MoECfg, C: int):
-    """x: (S, d), logits: (S, E) -> gathered (E*C, d), slot bookkeeping."""
+    """x: (S, d), logits: (S, E) -> gathered (E*C, d), slot bookkeeping.
+
+    The bookkeeping is carried in UNSORTED per-(token, k) layout (sort
+    inverted via the int32 scatter-of-a-permutation idiom from
+    :func:`_route` — unique indices, order-independent) so
+    :func:`_combine_row` is a fixed-order gather + top-k reduction with no
+    duplicate-index scatter."""
     S = x.shape[0]
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     gates, eidx = jax.lax.top_k(probs, c.top_k)          # (S, k)
     gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
     flat_e = eidx.reshape(-1)                            # (S*k,)
     flat_t = jnp.repeat(jnp.arange(S), c.top_k)
-    flat_g = gates.reshape(-1)
     order = jnp.argsort(flat_e)
-    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    se, st = flat_e[order], flat_t[order]
     # position within expert along the sorted order
     onehot = jax.nn.one_hot(se, c.n_experts, dtype=jnp.int32)
     pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0), se[:, None],
                               axis=1)[:, 0] - 1
     keep = pos < C
     slot = jnp.where(keep, se * C + pos, c.n_experts * C)  # overflow slot
+    # duplicate indices occur only at the overflow slot, where every write
+    # is zeros — kept slots are unique, so the .set is order-independent
     xg = jnp.zeros((c.n_experts * C + 1, x.shape[1]), x.dtype)
     xg = xg.at[slot].set(jnp.where(keep[:, None], x[st], 0))
-    return xg[:-1], (st, sg, slot, keep)
+    slot_tk = jnp.zeros((S * c.top_k,), jnp.int32).at[order].set(
+        slot.astype(jnp.int32)).reshape(S, c.top_k)
+    keep_tk = jnp.zeros((S * c.top_k,), bool).at[order].set(
+        keep).reshape(S, c.top_k)
+    return xg[:-1], (gates, slot_tk, keep_tk)
 
 
 def _combine_row(y_slots, book, S, d):
-    st, sg, slot, keep = book
-    pad = jnp.zeros((1, d), y_slots.dtype)
-    ys = jnp.concatenate([y_slots, pad], axis=0)[slot]
-    w = (sg * keep).astype(ys.dtype)[:, None]
-    out = jnp.zeros((S, d), y_slots.dtype)
-    return out.at[st].add(ys * w)
+    """Combine expert outputs back to tokens with a fixed-order top-k sum.
+
+    Replaces the historical ``out.at[st].add(ys * w)`` scatter-add: ``st``
+    held every token ``top_k`` times, and XLA's accumulation order over
+    duplicate scatter indices is unspecified — so the same routing could
+    combine in different orders under the per-row vmap vs the
+    candidate-stacked (double-vmapped) lowering, breaking the engine's
+    bitwise stacked-vs-sequential contract when capacity overflow drops
+    tokens.  Gathering per (token, k) and reducing over the k axis is a
+    plain fixed-association sum — identical however it is batched, and
+    matching ``batched_gather``'s einsum combine."""
+    gates, slot_tk, keep_tk = book
+    k = slot_tk.shape[1]
+    ypad = jnp.concatenate([y_slots, jnp.zeros((1, d), y_slots.dtype)],
+                           axis=0)
+    ytk = ypad[slot_tk.reshape(-1)].reshape(S, k, d)
+    w = gates.astype(ytk.dtype) * keep_tk.astype(ytk.dtype)
+    return jnp.einsum("skd,sk->sd", ytk, w)
 
 
 def _route(logits, c: MoECfg, C: int):
@@ -120,9 +143,11 @@ def _route(logits, c: MoECfg, C: int):
 
 
 def moe_ffn(p, c: MoECfg, x, mask, site: linearize.MaskSite,
-            shared_mask=None, shared_site=None, *, poly=None, soft=False,
-            act_spec=None):
-    """x: (B, S, d).  mask: (E, F) per-expert channel masks.  act_spec: the
+            shared_mask=None, shared_site=None, *, poly=None,
+            shared_poly=None, soft=False, act_spec=None):
+    """x: (B, S, d).  mask: (E, F) per-expert channel masks.  shared_poly:
+    poly2 coefficients for the shared-expert FFN gate (the ``moe_shared``
+    site — distinct from the routed experts' ``poly``).  act_spec: the
     model's (B,S,D) PartitionSpec — its batch axes are re-asserted on the
     (B,E,C,·) expert tensors (GSPMD drops batch sharding through the
     dispatch gathers otherwise — §Perf, mixtral)."""
@@ -184,5 +209,5 @@ def moe_ffn(p, c: MoECfg, x, mask, site: linearize.MaskSite,
         y = jax.vmap(row_scatter)(x, logits)
     if "shared" in p:
         y = y + layers.ffn(p["shared"], x, shared_mask, shared_site,
-                           poly=None, soft=soft)
+                           poly=shared_poly, soft=soft)
     return y.astype(x.dtype)

@@ -4,6 +4,19 @@ Both are expressed as *chunked linear attention* — the TPU-native adaptation
 of the token-serial CUDA recurrences (DESIGN §3): intra-chunk work is dense
 einsums on the MXU, only chunk-boundary states are carried by lax.scan.
 The decode path is the exact O(1)-state recurrence (long_500k cells).
+
+State locality (the split-forward contract these blocks must keep): all
+recurrent state — the linear-attention state carried over sequence chunks,
+the token-shift left-neighbor — lives WITHIN one block application and is
+re-initialized from zeros (prefill) or the decode cache on every call.
+Nothing recurrent crosses stack repeats: the only value a repeat hands the
+next one is the (B, S, D) residual stream, which is exactly the carry of
+``lm.LM._run_stack``'s repeat scan.  That is what makes a mid-scan cut a
+plain carry checkpoint — ``forward_suffix`` can resume the stack at repeat
+r from the cached hidden state without replaying any per-block recurrence.
+A block that carried sequence state across repeats would silently break
+the bitwise ``prefix∘suffix == forward`` contract (tests: family cuts in
+``tests/test_split_forward.py``).
 """
 from __future__ import annotations
 

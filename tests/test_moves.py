@@ -153,6 +153,125 @@ def test_suffix_mixed_moves_at_every_prefetch_depth(setup, seq_ref,
     _assert_same_result(seq_ref(MIXED), res)
 
 
+# ------------------------------------ family matrix (SSM / RWKV / MoE)
+#
+# The same backend×move contract on recurrent and mixture-of-experts
+# families: candidates cut the scanned stack mid-repeat (carry-checkpointed
+# suffix prefixes) and, for MoE, flow through capacity-overflow token
+# dropping — both must stay invisible to selection.
+
+FAMILY_ARCHS = ("rwkv6_3b", "deepseek_moe_16b")
+FAMILY_KINDS = ("remove", "swap", "stage_drop")
+
+
+@pytest.fixture(scope="module")
+def family_setup():
+    from repro.configs.base import get_config
+    from repro.models.lm import LM
+    out = {}
+    for arch in FAMILY_ARCHS:
+        model = LM(get_config(arch).reduced())
+        params = model.init(jax.random.PRNGKey(0))
+        batch = {"tokens": np.random.default_rng(0).integers(
+            0, model.cfg.vocab, (2, 17)).astype(np.int32)}
+        masks0 = linearize.init_masks(model.mask_sites())
+        out[arch] = (model, params, batch, masks0)
+    return out
+
+
+@pytest.fixture(scope="module")
+def family_seq_ref(family_setup):
+    cache = {}
+
+    def ref(arch, moves):
+        key = (arch, tuple(moves))
+        if key not in cache:
+            model, params, batch, masks0 = family_setup[arch]
+            cache[key] = _run(model, params, batch, masks0,
+                              _make_ev("sequential", model, params, batch),
+                              moves)
+        return cache[key]
+    return ref
+
+
+@pytest.mark.parametrize("backend", BACKENDS[1:])
+@pytest.mark.parametrize("kind", FAMILY_KINDS)
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_family_backend_matches_sequential_per_kind(family_setup,
+                                                    family_seq_ref, arch,
+                                                    backend, kind):
+    """{rwkv6, deepseek-moe} × {batched, sharded, pipelined, suffix} ×
+    {remove, swap, stage_drop}: bit-identical masks, trial counts and
+    early-exit flags vs the per-family sequential reference."""
+    model, params, batch, masks0 = family_setup[arch]
+    res = _run(model, params, batch, masks0,
+               _make_ev(backend, model, params, batch), (kind,))
+    _assert_same_result(family_seq_ref(arch, (kind,)), res)
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_family_suffix_mixed_moves(family_setup, family_seq_ref, arch):
+    """All three kinds in one descent on the suffix backend — mid-scan
+    stack cuts and head/shared sites interleave in the candidate stream."""
+    model, params, batch, masks0 = family_setup[arch]
+    res = _run(model, params, batch, masks0,
+               _make_ev("suffix", model, params, batch), FAMILY_KINDS)
+    _assert_same_result(family_seq_ref(arch, FAMILY_KINDS), res)
+
+
+_FAMILY_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax
+from repro.configs.base import get_config
+from repro.core import bcd, engine, linearize, masks as M
+from repro.launch import mesh as mesh_lib
+from repro.models.lm import LM
+
+for arch in ("rwkv6_3b", "deepseek_moe_16b"):
+    model = LM(get_config(arch).reduced())
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": np.random.default_rng(0).integers(
+        0, model.cfg.vocab, (2, 17)).astype(np.int32)}
+    masks0 = linearize.init_masks(model.mask_sites())
+    cfg = bcd.BCDConfig(b_target=M.count(masks0) - 2 * 16, drc=16, rt=6,
+                        adt=0.5, finetune_every_step=False, seed=3,
+                        chunk_size=3, moves=("remove", "swap", "stage_drop"))
+    eval_acc = model.make_eval_acc(params, batch)
+    seq = bcd.run_bcd(masks0, cfg, eval_acc,
+                      evaluator=engine.SequentialEvaluator(eval_acc))
+    mesh = mesh_lib.make_candidate_mesh()
+    assert len(mesh.devices.reshape(-1)) == 4, mesh
+    shd = bcd.run_bcd(masks0, cfg, eval_acc,
+                      evaluator=engine.ShardedEvaluator(
+                          model.make_eval_fn(params, batch), mesh, pad_to=3))
+    for k in seq.masks:
+        np.testing.assert_array_equal(seq.masks[k], shd.masks[k])
+    assert [(h.trials, h.found_early, h.move_kind) for h in seq.history] \
+        == [(h.trials, h.found_early, h.move_kind) for h in shd.history]
+    assert seq.move_stats == shd.move_stats
+    print(arch, "FAMILY_SHARDED_OK")
+"""
+
+
+def test_family_moves_on_forced_multi_device_mesh():
+    """SSM + MoE mixed-kind descent on 4 forced host devices: candidate-
+    axis sharding over scanned-stack masks selects the identical moves as
+    the sequential reference."""
+    import os
+    import subprocess
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _FAMILY_SHARDED_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert out.stdout.count("FAMILY_SHARDED_OK") == 2
+
+
 _MOVES_SHARDED_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

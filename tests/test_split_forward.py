@@ -22,8 +22,17 @@ import numpy as np
 import jax
 import pytest
 
+# hypothesis is an optional dev dep (pip extra: test) — bare environments
+# must still collect/run the deterministic tests, so only the property
+# tests below are guarded.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
 from repro.analysis.roofline import SuffixCostModel
-from repro.configs.base import ArchConfig, Block
+from repro.configs.base import ArchConfig, Block, get_config
 from repro.core import bcd, engine, linearize, masks as M
 from repro.data import ImageDatasetCfg, SyntheticImages
 from repro.models.lm import LM
@@ -93,13 +102,177 @@ def test_lm_split_forward_bitwise_per_site():
     full = np.asarray(
         jax.jit(lambda p, m, t: model.forward(p, m, t)[0])(params, md,
                                                            tokens))
-    assert model.site_order() == ("h0.ffn", "s0.ffn", "s1.ffn", "t0.ffn")
+    # stack sites are addressed by virtual per-repeat names, one per
+    # (site, repeat); repeat-0 cuts sort at the same segment
+    assert model.site_order() == ("h0.ffn", "s0.ffn@0", "s1.ffn@0",
+                                  "s0.ffn@1", "s1.ffn@1", "t0.ffn")
+    assert model.site_repeats() == {"s0.ffn": 2, "s1.ffn": 2}
     for site in model.site_order():
         def composed(p, m, t, site=site):
             return model.forward_suffix(
                 p, m, model.forward_prefix(p, m, t, site), site)
         out = np.asarray(jax.jit(composed)(params, md, tokens))
         np.testing.assert_array_equal(out, full, err_msg=site)
+
+
+# ----------------------------------------- SSM / MoE family contract
+
+
+def _family_setup(arch_id, seed=0, B=2, S=17):
+    """Reduced-config LM + non-trivial masks + a token batch."""
+    model = LM(get_config(arch_id).reduced())
+    params = model.init(jax.random.PRNGKey(seed))
+    masks = linearize.init_masks(model.mask_sites())
+    rng = np.random.default_rng(seed)
+    masks = M.sample_removal_block(rng, masks, 16)
+    tokens = np.asarray(rng.integers(0, model.cfg.vocab, (B, S),
+                                     dtype=np.int32))
+    return model, params, masks, tokens
+
+
+def _assert_lm_split_bitwise(model, params, masks, tokens):
+    """prefix∘suffix == forward bitwise at every site, with prefix and
+    suffix compiled as SEPARATE jits (the engine's program boundaries)."""
+    md = M.as_device(masks)
+    full = np.asarray(jax.jit(
+        lambda p, m, t: model.forward(p, m, t)[0])(params, md, tokens))
+    for site in model.site_order():
+        pj = jax.jit(lambda p, m, t, s=site: model.forward_prefix(p, m, t, s))
+        sj = jax.jit(lambda p, m, c, s=site: model.forward_suffix(p, m, c, s))
+        out = np.asarray(sj(params, md, pj(params, md, tokens)))
+        np.testing.assert_array_equal(
+            out, full, err_msg=f"prefix∘suffix != forward at site {site}")
+    return md, full
+
+
+def test_ssm_split_forward_bitwise_per_site_including_mid_scan():
+    """rwkv6 reduced is a pure scanned stack (no head/tail): every cut is a
+    carry checkpoint, and the repeat-1 cut resumes the scan mid-stack."""
+    model, params, masks, tokens = _family_setup("rwkv6_3b")
+    assert model.site_order() == ("s0.rwkv@0", "s0.rwkv@1")
+    assert model.site_repeats() == {"s0.rwkv": 2}
+    _assert_lm_split_bitwise(model, params, masks, tokens)
+
+
+def test_moe_split_forward_bitwise_per_site_including_mid_scan():
+    """deepseek-moe reduced: dense head + scanned MoE stack with routed +
+    shared-expert sites; capacity-overflow token dropping is live at this
+    sequence length, so routing determinism is part of the contract."""
+    model, params, masks, tokens = _family_setup("deepseek_moe_16b")
+    assert model.site_order() == ("h0.ffn", "s0.moe@0", "s0.moe_shared@0",
+                                  "s0.moe@1", "s0.moe_shared@1")
+    _assert_lm_split_bitwise(model, params, masks, tokens)
+
+
+@pytest.mark.parametrize("arch_id", ["rwkv6_3b", "deepseek_moe_16b"])
+def test_carry_checkpoint_prefix_extension_roundtrip(arch_id):
+    """Trie-extension contract along repeats: ``prefix_ext(a, b, m,
+    prefix(a)) == prefix(b)`` bitwise for consecutive cuts — the carry
+    checkpoint at repeat r resumes the scan instead of re-running it."""
+    model, params, masks, tokens = _family_setup(arch_id, seed=1)
+    md = M.as_device(masks)
+    order, segs = model.site_order(), model.site_segments()
+    pairs = [(order[i], order[i + 1]) for i in range(len(order) - 1)
+             if segs[order[i]] < segs[order[i + 1]]]
+    assert pairs, "no consecutive cut pair to extend across"
+    for a, b in pairs:
+        pa = jax.jit(lambda m, a=a: model.forward_prefix(
+            params, m, tokens, a))(md)
+        pe = jax.jit(lambda m, c, a=a, b=b: model.forward_prefix(
+            params, m, tokens, b, from_site=a, cached=c))(md, pa)
+        pb = jax.jit(lambda m, b=b: model.forward_prefix(
+            params, m, tokens, b))(md)
+        np.testing.assert_array_equal(
+            np.asarray(pe), np.asarray(pb),
+            err_msg=f"prefix_ext({a} -> {b}) != prefix({b})")
+
+
+def test_suffix_trie_extends_along_repeats_and_row_diff_invalidation():
+    """Carry-aware prefix caching: a repeat-0 checkpoint is EXTENDED to the
+    repeat-1 cut (one more scan repeat, no recompute from tokens), and
+    ``begin_step`` diffing is per repeat row — editing only repeat-1 rows
+    of the stacked base mask keeps every checkpoint warm, editing repeat-0
+    rows drops the mid-scan one."""
+    model = LM(get_config("rwkv6_3b").reduced())
+    params = model.init(jax.random.PRNGKey(2))
+    masks0 = linearize.init_masks(model.mask_sites())
+    tokens = np.asarray(np.random.default_rng(2).integers(
+        0, model.cfg.vocab, (2, 17), dtype=np.int32))
+    ctx = {"params": params, "batch": {"tokens": tokens}}
+    ev = engine.make_evaluator("suffix", split=model.make_suffix_eval_fns(),
+                               context=ctx, pad_to=4)
+    seq = engine.SequentialEvaluator(
+        model.make_eval_acc(params, {"tokens": tokens}))
+    segs, reps = model.site_segments(), model.site_repeats()
+    rng = np.random.default_rng(0)
+    idx0 = M.sample_removal_indices_within(rng, masks0, 8, 4, ["s0.rwkv@0"],
+                                           repeat_sites=reps)
+    idx1 = M.sample_removal_indices_within(rng, masks0, 8, 4, ["s0.rwkv@1"],
+                                           repeat_sites=reps)
+    st0 = M.materialize_candidates(masks0, idx0)
+    st1 = M.materialize_candidates(masks0, idx1)
+    ev.begin_step(masks0)
+    a0 = ev.evaluate(engine.SitedChunk("s0.rwkv@0", st0))
+    np.testing.assert_allclose(a0, seq.evaluate(st0), atol=1e-4)
+    a1 = ev.evaluate(engine.SitedChunk("s0.rwkv@1", st1))
+    np.testing.assert_allclose(a1, seq.evaluate(st1), atol=1e-4)
+    assert ev.trie.extensions == 1 and ev.trie.misses == 1, \
+        (ev.trie.extensions, ev.trie.misses)
+    assert ev.trie.depths() == (segs["s0.rwkv@0"], segs["s0.rwkv@1"])
+    # repeat-1-only base edit: prefixes fold repeats strictly BEFORE their
+    # cut, so both carry checkpoints stay warm
+    edited = {k: np.array(v) for k, v in masks0.items()}
+    edited["s0.rwkv"][1].flat[0] = 0.0
+    ev.begin_step(edited)
+    assert ev.trie.depths() == (segs["s0.rwkv@0"], segs["s0.rwkv@1"])
+    # a repeat-0 edit invalidates the mid-scan checkpoint (it folded that
+    # repeat) but keeps the embed-only depth
+    edited2 = {k: np.array(v) for k, v in masks0.items()}
+    edited2["s0.rwkv"][0].flat[0] = 0.0
+    ev.begin_step(edited2)
+    assert ev.trie.depths() == (segs["s0.rwkv@0"],)
+
+
+if HAS_HYPOTHESIS:
+    _PROP_LM = {}
+
+    def _prop_lm():
+        if not _PROP_LM:
+            cfg = ArchConfig(
+                name="tiny-repeats", family="dense", n_layers=6, d_model=32,
+                n_heads=2, n_kv_heads=2, d_ff=48, vocab=64, head_dim=16,
+                pattern=(Block("dense"),), head_blocks=(Block("dense"),),
+                dtype="float32")
+            model = LM(cfg)
+            assert cfg.n_repeats == 4
+            _PROP_LM["model"] = model
+            _PROP_LM["params"] = model.init(jax.random.PRNGKey(0))
+        return _PROP_LM["model"], _PROP_LM["params"]
+
+    @settings(deadline=None, max_examples=10)
+    @given(r=st.integers(min_value=0, max_value=3),
+           seed=st.integers(min_value=0, max_value=2 ** 16))
+    def test_property_cut_at_any_repeat_matches_unsegmented(r, seed):
+        """Cutting the scanned stack at an arbitrary repeat r is bitwise
+        the unsegmented forward, for arbitrary masks and token batches."""
+        model, params = _prop_lm()
+        rng = np.random.default_rng(seed)
+        masks = linearize.init_masks(model.mask_sites())
+        masks = M.sample_removal_block(rng, masks, 8)
+        tokens = np.asarray(rng.integers(0, model.cfg.vocab, (2, 9),
+                                         dtype=np.int32))
+        md = M.as_device(masks)
+        site = f"s0.ffn@{r}"
+        full = np.asarray(jax.jit(
+            lambda m, t: model.forward(params, m, t)[0])(md, tokens))
+        out = np.asarray(jax.jit(
+            lambda m, t, s=site: model.forward_suffix(
+                params, m, model.forward_prefix(params, m, t, s), s))(
+                    md, tokens))
+        np.testing.assert_array_equal(out, full, err_msg=site)
+else:
+    def test_property_cut_at_any_repeat_matches_unsegmented():
+        pytest.skip("hypothesis not installed (pip extra: test)")
 
 
 def _assert_pre_contract(split, ctx, masks):
@@ -195,6 +368,14 @@ def test_suffix_sites_and_fractions_are_monotone():
     assert lfr["h0.ffn"] == 0.0
     assert lfr["t0.ffn"] > lfr["s0.ffn"] > lfr["h0.ffn"]
     assert lm.suffix_sites("s1.ffn") == ("s0.ffn", "s1.ffn", "t0.ffn")
+    # per-repeat cuts: deeper repeats reuse a larger prefix; the REAL mask
+    # name maps to its repeat-0 segment (the shallowest cut its
+    # coordinates can force)
+    assert lfr["s0.ffn@1"] > lfr["s0.ffn@0"] == lfr["s0.ffn"]
+    # a mid-scan cut still ships the full (R, ·) stack arrays: a stack
+    # site's deepest repeat is always at/after any stack cut
+    assert lm.suffix_sites("s0.ffn@1") == ("s0.ffn", "s1.ffn", "t0.ffn")
+    assert lm.suffix_sites("t0.ffn") == ("t0.ffn",)
 
 
 # -------------------------------------------------- grouping / planning
@@ -217,6 +398,58 @@ def test_group_blocks_by_site():
     order0, groups0 = M.group_blocks_by_site(
         np.zeros((0, 2), np.int64), layout, rank)
     assert order0.size == 0 and groups0 == []
+
+
+def test_group_blocks_by_site_repeat_aware():
+    """With ``repeat_sites``, a stack coordinate's rank is its repeat-0
+    rank plus its repeat row — candidates touching only deep repeats group
+    at deeper segments (larger reusable prefixes)."""
+    masks = {"h0.ffn": np.ones((4,), np.float32),
+             "s0.ffn": np.ones((2, 4), np.float32)}   # R=2, 4 per repeat
+    _, layout = M._flatten(masks)      # h0:[0,4) s0:[4,12) repeat-major
+    rank = {"h0.ffn": 0, "s0.ffn": 1}
+    reps = {"s0.ffn": 2}
+    indices = np.array([[8, 9],        # repeat 1 only -> rank 2
+                        [4, 10],       # earliest repeat 0 -> rank 1
+                        [0, 11],       # head coord -> rank 0
+                        [10, 11]])     # repeat 1 -> rank 2
+    order, groups = M.group_blocks_by_site(indices, layout, rank,
+                                           repeat_sites=reps)
+    np.testing.assert_array_equal(order, [2, 1, 0, 3])
+    assert groups == [(0, 0, 1), (1, 1, 2), (2, 2, 4)]
+    # without repeat_sites every stack coordinate collapses to rank 1
+    _, flat_groups = M.group_blocks_by_site(indices, layout, rank)
+    assert [g[0] for g in flat_groups] == [0, 1]
+    # move_site_ranks agrees coordinate-wise (swap ranks by its shallowest
+    # touched coordinate across off ∪ on)
+    moves = [M.Move.remove(np.array([8, 9])),
+             M.Move.swap(np.array([4]), np.array([10])),
+             M.Move.remove(np.array([0, 11])),
+             M.Move.remove(np.array([10, 11]))]
+    np.testing.assert_array_equal(
+        M.move_site_ranks(moves, layout, rank, repeat_sites=reps),
+        [2, 1, 0, 2])
+
+
+def test_sample_removal_indices_within_virtual_repeat_sites():
+    """Virtual ``site@r`` names restrict sampling to that repeat's rows of
+    the stacked (R, ·) mask array."""
+    masks = {"h0.ffn": np.ones((6,), np.float32),
+             "s0.ffn": np.ones((2, 6), np.float32)}
+    _, layout = M._flatten(masks)      # h0:[0,6) s0:[6,18)
+    rng = np.random.default_rng(0)
+    idx = M.sample_removal_indices_within(rng, masks, 3, 4, ["s0.ffn@1"],
+                                          repeat_sites={"s0.ffn": 2})
+    assert idx.shape == (4, 3)
+    assert ((idx >= 12) & (idx < 18)).all(), idx    # repeat-1 rows only
+    idx0 = M.sample_removal_indices_within(rng, masks, 3, 4, ["s0.ffn@0"],
+                                           repeat_sites={"s0.ffn": 2})
+    assert ((idx0 >= 6) & (idx0 < 12)).all(), idx0
+    # the bare real name still spans every repeat
+    idx_all = M.sample_removal_indices_within(rng, masks, 3, 16, ["s0.ffn"],
+                                              repeat_sites={"s0.ffn": 2})
+    assert ((idx_all >= 6) & (idx_all < 18)).all()
+    assert (idx_all < 12).any() and (idx_all >= 12).any()
 
 
 def test_coalesce_fallback_chunks():
