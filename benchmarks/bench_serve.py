@@ -10,12 +10,24 @@ ReLU-budget mask set) and writes ``BENCH_serve.json``:
 - totals: submitted vs completed (the drain check), wall seconds, and
   aggregate decode tok/s.
 
-CI gates this report with ``check_bench_regression --serve`` against the
-committed baseline:
+**Overload mode** (``--overload N``): arrivals are generated at N× the
+loop's modeled service capacity under a virtual clock, with per-class
+deadlines, a bounded admission queue, a :class:`DegradationLadder` over the
+stored budgets, and (``--fault-plan default``) the committed chaos
+:class:`FaultPlan` injected at every crosspoint.  The report gains an
+``overload`` section — deadline-hit-rate, goodput (tokens delivered within
+deadline per second), degrade/shed rates, retries, and the sha256 of the
+admit/degrade/shed decision log.  Virtual time makes every number in that
+section bit-for-bit reproducible for a given seed + plan, which is what
+lets CI gate it tightly.
+
+CI gates these reports with ``check_bench_regression --serve``:
 
     PYTHONPATH=src python -m benchmarks.bench_serve --out BENCH_serve.json
+    PYTHONPATH=src python -m benchmarks.bench_serve --overload 3 \
+        --fault-plan default --out BENCH_serve_overload.json
     PYTHONPATH=src python -m benchmarks.check_bench_regression \
-        BENCH_serve.json BENCH_serve_new.json --serve
+        BENCH_serve_overload.json BENCH_serve_overload_new.json --serve
 """
 from __future__ import annotations
 
@@ -27,9 +39,78 @@ import numpy as np
 import jax
 
 from repro.configs import get_config
-from repro.launch import serve_loop
+from repro.core import pi_cost
+from repro.launch import faults, serve_loop
 from repro.models.lm import LM
 from repro.training import serve as serve_lib
+
+#: Protocol used for overload runs: bandwidth-bound (12.5 MB/s ≈ 100 Mb/s
+#: WAN) so per-token latency scales with the mask set's ReLU count and the
+#: budget ladder's rungs have materially different prices — with the
+#: default 1 Gb/s + 10 ms RTT protocol, round-trips dominate at reduced
+#: scale and degradation would buy almost nothing.
+OVERLOAD_PROTO = pi_cost.PIProtocol(bandwidth_bytes_per_s=12.5e6,
+                                    rtt_s=0.001)
+
+
+def parse_args(argv=None):
+    """CLI for both the fair-weather and the overload load shapes."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm_1p6b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=48)
+    ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--prompt-bucket", type=int, default=16)
+    ap.add_argument("--budget-fracs", default="1.0,0.25",
+                    help="comma keep-fracs -> synthetic mask sets; one SLO "
+                         "class per set (≥2 for the CI contract)")
+    ap.add_argument("--masks-from", default=None, metavar="RUN_DIR",
+                    help="serve checkpointed sweep masks instead")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--overload", type=float, default=0.0, metavar="FACTOR",
+                    help="generate arrivals at FACTOR x modeled capacity "
+                         "under a virtual clock with deadlines, a bounded "
+                         "queue, and the degradation ladder (0 = off)")
+    ap.add_argument("--fault-plan", choices=("none", "default"),
+                    default="none",
+                    help="chaos schedule injected during overload runs")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--deadline-slack", type=float, default=2.5,
+                    help="per-class deadline = slack x modeled mean "
+                         "request latency under the class's own set")
+    ap.add_argument("--queue-cap", type=int, default=4,
+                    help="bounded per-class admission queue (overload mode)")
+    ap.add_argument("--out", default="BENCH_serve_new.json")
+    return ap.parse_args(argv)
+
+
+def _mean_prompt_len(args) -> float:
+    cap = args.max_len - args.max_new
+    return (2 + max(3, cap) - 1) / 2            # mean of the submit range
+
+
+def _overload_classes(store, args):
+    """One deadlined SLO class per budget; deadline = slack × its own
+    modeled mean request latency (deterministic: pure cost model)."""
+    classes = []
+    mean_total = _mean_prompt_len(args) + args.max_new
+    for name in store.names:
+        per = store.pi_cost_per_token(name, OVERLOAD_PROTO).online_latency_s
+        deadline_ms = args.deadline_slack * per * mean_total * 1e3
+        classes.append(serve_loop.SLOClass(
+            name=name, mask_set=name, max_new_tokens=args.max_new,
+            deadline_ms=deadline_ms))
+    return classes
+
+
+def make_fault_plan(args):
+    """The committed chaos schedule, or None."""
+    if args.fault_plan == "default":
+        return faults.default_chaos_plan(seed=args.fault_seed)
+    return None
 
 
 def build_loop(args):
@@ -45,10 +126,19 @@ def build_loop(args):
     else:
         fracs = [float(x) for x in args.budget_fracs.split(",")]
         store = serve_loop.threshold_mask_sets(model, fracs, seed=args.seed)
-    classes = serve_loop.default_classes(store, args.max_new)
-    loop = serve_loop.ServeLoop(
-        model, params, store, classes, slots=args.slots,
-        max_len=args.max_len, prompt_bucket=args.prompt_bucket)
+    if args.overload:
+        loop = serve_loop.ServeLoop(
+            model, params, store, _overload_classes(store, args),
+            slots=args.slots, max_len=args.max_len,
+            prompt_bucket=args.prompt_bucket,
+            ladder=serve_loop.DegradationLadder.from_store(store),
+            queue_cap=args.queue_cap, clock=faults.VirtualClock(),
+            fault_plan=make_fault_plan(args), proto=OVERLOAD_PROTO)
+    else:
+        classes = serve_loop.default_classes(store, args.max_new)
+        loop = serve_loop.ServeLoop(
+            model, params, store, classes, slots=args.slots,
+            max_len=args.max_len, prompt_bucket=args.prompt_bucket)
     return cfg, loop
 
 
@@ -66,25 +156,81 @@ def run_load(loop, cfg, args):
     return time.perf_counter() - t0
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="stablelm_1p6b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--full", dest="reduced", action="store_false")
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--slots", type=int, default=2)
-    ap.add_argument("--max-len", type=int, default=48)
-    ap.add_argument("--max-new", type=int, default=6)
-    ap.add_argument("--prompt-bucket", type=int, default=16)
-    ap.add_argument("--budget-fracs", default="1.0,0.25",
-                    help="comma keep-fracs -> synthetic mask sets; one SLO "
-                         "class per set (≥2 for the CI contract)")
-    ap.add_argument("--masks-from", default=None, metavar="RUN_DIR",
-                    help="serve checkpointed sweep masks instead")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default="BENCH_serve_new.json")
-    args = ap.parse_args(argv)
+def run_overload(loop, cfg, args):
+    """Arrivals at ``--overload`` × modeled capacity, stepped per arrival.
 
+    Mean service seconds per request is the modeled per-token cost
+    averaged over classes, times mean (prompt + generated) tokens; the
+    interarrival gap divides that by ``factor × total slots``.  A
+    ``burst`` fault replaces the gap with a same-instant batch of extra
+    arrivals — that is what drives queues into their bound.  Returns the
+    number of requests submitted (bursts included).
+    """
+    rng = np.random.default_rng(args.seed)
+    names = list(loop.lanes)
+    mean_total = _mean_prompt_len(args) + args.max_new
+    mean_service = float(np.mean(
+        [loop.latency.estimate_s(loop.lanes[n].slo.mask_set,
+                                 _mean_prompt_len(args), args.max_new)
+         for n in names]))
+    gap_s = mean_service / (args.overload * args.slots * len(names))
+    submitted = 0
+
+    def _arrival(i):
+        slo = names[i % len(names)]
+        cap = args.max_len - loop.lanes[slo].slo.max_new_tokens
+        plen = int(rng.integers(2, max(3, cap)))
+        loop.submit(rng.integers(0, cfg.vocab, plen), slo)
+
+    i = 0
+    while submitted < args.requests:
+        loop.clock.advance(gap_s)
+        _arrival(i)
+        i += 1
+        submitted += 1
+        fault = loop.fault_plan.draw("burst") if loop.fault_plan else None
+        if fault is not None and fault.kind == "burst":
+            for _ in range(fault.burst):
+                _arrival(i)
+                i += 1
+                submitted += 1
+        loop.step()
+    t0 = time.perf_counter()
+    loop.shutdown(drain=True)
+    return submitted, time.perf_counter() - t0
+
+
+def overload_report(loop, stats, submitted, factor, plan):
+    """The gated ``overload`` section: every number here is virtual-time
+    deterministic for a given (seed, plan)."""
+    expired = sum(r.shed_reason == "deadline_expired" for r in loop.shed)
+    return {
+        "factor": factor,
+        "fault_plan": plan.describe() if plan else None,
+        "submitted": submitted,
+        "terminal": stats["terminal"],
+        "all_terminal": (stats["terminal"] == submitted
+                         and stats["pending"] == 0),
+        "served": sum(r.state == "served" for r in loop.completed),
+        "degraded": sum(r.state == "degraded" for r in loop.completed),
+        "shed": stats["shed"],
+        "expired": expired,
+        "deadline_hit_rate": stats["deadline_hit_rate"],
+        "goodput_tok_s": stats["goodput_tok_s"],
+        "degrade_rate": stats["degrade_rate"],
+        "shed_rate": stats["shed_rate"],
+        "retries": stats["retries"],
+        "faults_injected": stats["faults_injected"],
+        "decisions_sha256": stats["decisions_sha256"],
+    }
+
+
+def run_bench(args):
+    """Build, warm, drive, and report; returns ``(loop, report)``.
+
+    Importable entry point: the CI chaos-smoke job reruns this and asserts
+    over ``loop.completed`` / ``loop.shed`` directly.
+    """
     cfg, loop = build_loop(args)
     # warm the compiled prefill/decode shapes so measured latencies are
     # steady-state, not jit time
@@ -95,7 +241,10 @@ def main(argv=None):
     warm.submit(np.arange(1, 3), warm.store.names[0])
     warm.shutdown(drain=True)
 
-    wall = run_load(loop, cfg, args)
+    if args.overload:
+        submitted, wall = run_overload(loop, cfg, args)
+    else:
+        submitted, wall = args.requests, run_load(loop, cfg, args)
     stats = loop.stats()
     gen = sum(len(r.tokens) - 1 for r in loop.completed)
     report = {
@@ -107,24 +256,46 @@ def main(argv=None):
                    "requests": args.requests,
                    "budget_fracs": args.budget_fracs,
                    "masks_from": args.masks_from,
-                   "n_devices": jax.device_count(), "seed": args.seed},
+                   "n_devices": jax.device_count(), "seed": args.seed,
+                   "overload": args.overload,
+                   "fault_plan": args.fault_plan,
+                   "fault_seed": args.fault_seed,
+                   "deadline_slack": args.deadline_slack,
+                   "queue_cap": args.queue_cap if args.overload else None},
         "classes": stats["classes"],
-        "total": {"submitted": args.requests,
+        "total": {"submitted": submitted,
                   "completed": stats["completed"],
                   "drained": stats["pending"] == 0,
                   "wall_s": wall,
                   "decode_tok_s": gen / wall if wall > 0 else 0.0},
     }
+    if args.overload:
+        report["overload"] = overload_report(
+            loop, stats, submitted, args.overload, loop.fault_plan)
+    return loop, report
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    loop, report = run_bench(args)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
     for name, c in report["classes"].items():
-        print(f"{name}: {c['requests']} reqs, "
-              f"{c.get('decode_tok_s', 0):.1f} tok/s, "
+        print(f"{name}: {c['requests']} reqs "
+              f"({c['served']} served, {c['degraded']} degraded, "
+              f"{c['shed']} shed), "
               f"p95 total {c.get('total_ms_p95', 0):.0f} ms, "
               f"relu_cost {c['relu_cost']}")
+    if "overload" in report:
+        o = report["overload"]
+        print(f"overload x{o['factor']}: {o['terminal']}/{o['submitted']} "
+              f"terminal, deadline-hit {o['deadline_hit_rate']:.2f}, "
+              f"goodput {o['goodput_tok_s']:.1f} tok/s, "
+              f"degrade {o['degrade_rate']:.2f}, shed {o['shed_rate']:.2f}")
     print(f"wrote {args.out} ({report['total']['completed']}/"
-          f"{report['total']['submitted']} completed in {wall:.1f}s)")
+          f"{report['total']['submitted']} completed in "
+          f"{report['total']['wall_s']:.1f}s)")
     return 0
 
 

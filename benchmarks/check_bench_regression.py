@@ -40,8 +40,18 @@ queues — an undrained loop is a scheduler bug, not noise:
     PYTHONPATH=src python -m benchmarks.check_bench_regression \
         BENCH_serve.json BENCH_serve_new.json --serve [--latency-factor 3]
 
+When both serve reports carry an ``overload`` section (produced by
+``bench_serve --overload``), the gate additionally requires the fresh
+run's deadline-hit-rate to hold within ``--tolerance`` (absolute) of the
+baseline, goodput within ``--tolerance`` (ratio), shed-rate under
+baseline + tolerance, and **every** submitted request to have reached a
+terminal state.  Overload and fair-weather reports are never comparable
+(exit 2), and a class that completed zero requests (everything shed) is
+unusable input — fix the operating point, exit 2.
+
 Exit codes: 0 pass, 1 candidates/sec regression, floor violation,
-accuracy-at-budget drop, or serve-mode throughput/latency/drain failure,
+accuracy-at-budget drop, or serve-mode throughput/latency/drain/overload
+failure,
 2 unusable input (missing or malformed report,
 incomparable operating points, malformed/missing gate key, unscored or
 non-overlapping sweep curves) — always with a human-readable FAIL
@@ -70,10 +80,19 @@ OPERATING_POINT_KEYS = ("rt", "chunk_size", "prefetch", "drc", "eval_batch",
                         "model", "n_devices", "backend")
 
 # Same idea for serving reports: two BENCH_serve.json runs are only
-# comparable at the same model / slot count / sequence budget / load.
+# comparable at the same model / slot count / sequence budget / load —
+# and, for overload runs, the same overload factor, fault plan + seed,
+# deadline slack, and queue bound (they define the chaos schedule the
+# decision log is replayed against).
 SERVE_OPERATING_POINT_KEYS = ("model", "slots", "max_len", "max_new",
                               "prompt_bucket", "requests", "budget_fracs",
-                              "n_devices")
+                              "n_devices", "overload", "fault_plan",
+                              "fault_seed", "deadline_slack", "queue_cap")
+
+# The overload section's gated metrics: all must be numeric rates/counts.
+OVERLOAD_NUMERIC_KEYS = ("factor", "submitted", "terminal", "served",
+                         "degraded", "shed", "expired", "deadline_hit_rate",
+                         "goodput_tok_s", "degrade_rate", "shed_rate")
 
 
 def config_mismatches(baseline: dict, fresh: dict) -> list:
@@ -301,6 +320,15 @@ def load_serve(path: str, which: str):
         print(f"FAIL: {which} serve report {path} has no 'classes' table — "
               "not a bench_serve report?")
         return None
+    zero = [n for n, rec in classes.items()
+            if isinstance(rec, dict) and rec.get("requests") == 0]
+    if zero:
+        print(f"FAIL: {which} serve report {path}: class(es) {sorted(zero)} "
+              "completed zero requests (every request shed?) — no "
+              "latency/throughput to gate.  Raise the class's deadline or "
+              "queue cap, or lower --overload, so the committed operating "
+              "point completes at least one request per class.")
+        return None
     bad = [n for n, rec in classes.items()
            if not isinstance(rec, dict)
            or not isinstance(rec.get("decode_tok_s"), (int, float))
@@ -310,6 +338,21 @@ def load_serve(path: str, which: str):
               "missing numeric 'decode_tok_s'/'total_ms_p95' (did the load "
               "run serve any requests in that class?)")
         return None
+    over = report.get("overload")
+    if over is not None:
+        if not isinstance(over, dict):
+            print(f"FAIL: {which} serve report {path}: 'overload' section "
+                  "is not an object — regenerate with benchmarks."
+                  "bench_serve --overload")
+            return None
+        malformed = [k for k in OVERLOAD_NUMERIC_KEYS
+                     if not isinstance(over.get(k), (int, float))
+                     or isinstance(over.get(k), bool)]
+        if malformed:
+            print(f"FAIL: {which} serve report {path}: overload section "
+                  f"missing numeric key(s) {sorted(malformed)} — "
+                  "regenerate with the current benchmarks.bench_serve")
+            return None
     return report
 
 
@@ -351,11 +394,69 @@ def compare_serve(baseline: dict, fresh: dict, tolerance: float,
     return failures, common, lines
 
 
+def compare_overload(baseline: dict, fresh: dict, tolerance: float):
+    """Overload-mode gate over the two reports' ``overload`` sections.
+
+    Deadline-hit-rate is gated absolutely (fresh >= baseline −
+    tolerance), goodput as a ratio (>= 1 − tolerance of baseline), and
+    shed-rate as a ceiling (<= baseline + tolerance) — under a virtual
+    clock all three are deterministic, so the tolerance only absorbs
+    intentional re-tuning, not runner noise.  ``all_terminal`` must hold
+    outright: a hung or unterminated request is a scheduler bug.
+
+    Returns (failures, lines).
+    """
+    old, new = baseline["overload"], fresh["overload"]
+    failures, lines = [], []
+
+    hit_ok = new["deadline_hit_rate"] >= \
+        old["deadline_hit_rate"] - tolerance - _EPS
+    if not hit_ok:
+        failures.append("deadline_hit_rate")
+    lines.append(f"  deadline_hit_rate: {old['deadline_hit_rate']:.3f} -> "
+                 f"{new['deadline_hit_rate']:.3f} (floor "
+                 f"{old['deadline_hit_rate'] - tolerance:.3f})  "
+                 f"{'OK' if hit_ok else 'REGRESSION'}")
+
+    ratio = new["goodput_tok_s"] / old["goodput_tok_s"] \
+        if old["goodput_tok_s"] > 0 else float("inf")
+    good_ok = ratio >= 1.0 - tolerance - _EPS
+    if not good_ok:
+        failures.append("goodput_tok_s")
+    lines.append(f"  goodput: {old['goodput_tok_s']:.2f} -> "
+                 f"{new['goodput_tok_s']:.2f} tok/s ({ratio:.2f}x)  "
+                 f"{'OK' if good_ok else 'REGRESSION'}")
+
+    shed_ok = new["shed_rate"] <= old["shed_rate"] + tolerance + _EPS
+    if not shed_ok:
+        failures.append("shed_rate")
+    lines.append(f"  shed_rate: {old['shed_rate']:.3f} -> "
+                 f"{new['shed_rate']:.3f} (ceiling "
+                 f"{old['shed_rate'] + tolerance:.3f})  "
+                 f"{'OK' if shed_ok else 'OVER CEILING'}")
+
+    term_ok = new.get("all_terminal") is True
+    if not term_ok:
+        failures.append("all_terminal")
+    lines.append(f"  terminal: {new['terminal']}/{new['submitted']} "
+                 f"({new['served']} served, {new['degraded']} degraded, "
+                 f"{new['shed']} shed, {new['expired']} expired)  "
+                 f"{'OK' if term_ok else 'NOT ALL TERMINAL'}")
+    return failures, lines
+
+
 def run_serve(args) -> int:
     """``--serve`` mode: gate a fresh BENCH_serve.json against baseline."""
     baseline = load_serve(args.baseline, "baseline")
     fresh = load_serve(args.fresh, "fresh")
     if baseline is None or fresh is None:
+        return 2
+    base_over = "overload" in baseline
+    if base_over != ("overload" in fresh):
+        print("FAIL: serve reports are not comparable — "
+              f"{'baseline' if base_over else 'fresh'} has an overload "
+              "section and the other does not (one was run with "
+              "--overload, the other without)")
         return 2
     mismatches = [
         f"{k}: baseline={baseline.get('config', {}).get(k)!r} "
@@ -370,8 +471,13 @@ def run_serve(args) -> int:
             print(f"  {m}")
         return 2
     total = fresh.get("total", {})
-    served_ok = total.get("completed") == total.get("submitted") \
-        and total.get("drained") is True
+    if base_over:
+        # overloaded runs shed by design: completion == every request
+        # reaching a *terminal* state, gated in compare_overload below
+        served_ok = total.get("drained") is True
+    else:
+        served_ok = total.get("completed") == total.get("submitted") \
+            and total.get("drained") is True
     failures, common, lines = compare_serve(
         baseline, fresh, args.tolerance, args.latency_factor)
     print(f"serve regression check (tolerance {args.tolerance:.0%}, "
@@ -381,6 +487,15 @@ def run_serve(args) -> int:
     print(f"  completion: {total.get('completed')}/"
           f"{total.get('submitted')} drained={total.get('drained')}  "
           f"{'OK' if served_ok else 'INCOMPLETE'}")
+    over_failures = []
+    if base_over:
+        over_failures, over_lines = compare_overload(
+            baseline, fresh, args.tolerance)
+        print(f"overload gate (factor "
+              f"{fresh['overload']['factor']:g}x, tolerance "
+              f"{args.tolerance:.0%}):")
+        for line in over_lines:
+            print(line)
     if common == 0:
         print("FAIL: the two reports share no SLO classes — nothing to "
               "gate")
@@ -389,8 +504,9 @@ def run_serve(args) -> int:
         print("FAIL: fresh serve run did not complete+drain every "
               "submitted request — scheduler bug, not runner noise")
         return 1
-    if failures:
-        print(f"FAIL: serving regression in {', '.join(failures)}")
+    if failures or over_failures:
+        print(f"FAIL: serving regression in "
+              f"{', '.join(failures + over_failures)}")
         return 1
     print("PASS")
     return 0

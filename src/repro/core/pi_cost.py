@@ -67,7 +67,10 @@ def cost_of_masks(masks, n_nonlinear_layers: int,
 
 def bill_request(relu_count: int, n_nonlinear_layers: int, tokens: int,
                  proto: PIProtocol = PIProtocol(),
-                 linear_params: int = 0) -> dict:
+                 linear_params: int = 0, *,
+                 mask_set: str | None = None,
+                 fingerprint: str | None = None,
+                 degraded_from: str | None = None) -> dict:
     """Per-request PI bill: one token-forward :func:`cost`, scaled by tokens.
 
     A served request runs ``tokens`` forwards (prompt positions during
@@ -75,6 +78,12 @@ def bill_request(relu_count: int, n_nonlinear_layers: int, tokens: int,
     pays the set's per-token protocol cost.  Returns a JSON-ready dict —
     this is the number a serving tier reports per request (the paper's
     ReLU-count ≈ PI-latency claim, priced).
+
+    ``mask_set``/``fingerprint`` stamp the identity of the set the request
+    was *actually served under*; ``degraded_from`` records the set its SLO
+    class originally routed to when overload admission degraded it to a
+    cheaper budget — the bill then prices the degraded set, auditable
+    against its fingerprint.
     """
     per_tok = cost(relu_count, n_nonlinear_layers, proto, linear_params)
     return {
@@ -84,7 +93,25 @@ def bill_request(relu_count: int, n_nonlinear_layers: int, tokens: int,
         "pi_online_bytes": per_tok.online_bytes * tokens,
         "pi_offline_bytes": per_tok.offline_bytes * tokens,
         "pi_online_s": per_tok.online_latency_s * tokens,
+        "mask_set": mask_set,
+        "fingerprint": fingerprint,
+        "degraded_from": degraded_from,
     }
+
+
+def estimate_request_s(relu_count: int, n_nonlinear_layers: int,
+                       prompt_tokens: int, gen_tokens: int,
+                       proto: PIProtocol = PIProtocol()) -> float:
+    """Model-side end-to-end latency estimate for one served request.
+
+    The admission controller's price of a candidate admission before any
+    measurement exists: every prompt position and every generated token is
+    one forward at the mask set's per-token protocol cost.  The serve
+    loop seeds its per-mask-set prefill/decode EWMAs from this estimate
+    and refines them with measured latencies as requests complete.
+    """
+    per_tok = cost(relu_count, n_nonlinear_layers, proto)
+    return per_tok.online_latency_s * (int(prompt_tokens) + int(gen_tokens))
 
 
 def saving(b_ref: int, b_target: int, n_layers: int,

@@ -102,27 +102,78 @@ class FileCoordinator:
     ``world_size`` ranks and report exactly which ranks are missing when the
     timeout expires — a SIGKILLed peer surfaces as a named
     :class:`CoordinatorError`, not a silent hang.
+
+    **Liveness**: every rank refreshes a per-rank lease file
+    (``lease_rank_<r>``, every ``lease_interval_s``) while it waits inside
+    ``barrier``/``broadcast``.  When a wait times out, each missing rank's
+    lease distinguishes *dead* (lease expired — the process was SIGKILLed
+    or the host vanished) from *wedged* (lease fresh — alive but stuck
+    elsewhere, e.g. a divergent call sequence) from *never started* (no
+    lease at all).  Lease age uses the shared filesystem's mtime, so
+    cross-host clock skew cannot mis-declare a peer dead.
     """
 
     def __init__(self, root: str, rank: int, world_size: int, *,
                  session: str = "s0", poll_s: float = 0.02,
-                 timeout_s: float = 300.0):
+                 timeout_s: float = 300.0, lease_interval_s: float = 1.0,
+                 lease_ttl_s: float = 5.0):
         """Join rendezvous directory ``root/<session>`` as ``rank``.
 
         ``timeout_s`` bounds every barrier/broadcast wait (overridable per
         call); ``poll_s`` is the filesystem polling interval.
+        ``lease_interval_s`` is the heartbeat refresh period while waiting;
+        a peer whose lease is older than ``lease_ttl_s`` at timeout is
+        reported dead (keep ttl comfortably above the interval — a slow
+        shared filesystem delays renames).
         """
         if not (0 <= rank < world_size):
             raise CoordinatorError(
                 f"rank {rank} outside world of size {world_size}")
+        if lease_ttl_s <= lease_interval_s:
+            raise CoordinatorError(
+                f"lease_ttl_s {lease_ttl_s} must exceed lease_interval_s "
+                f"{lease_interval_s} or every slow heartbeat reads as a "
+                "death")
         self.rank = int(rank)
         self.world_size = int(world_size)
         self.session = str(session)
         self._dir = os.path.join(root, self.session)
         self._poll_s = float(poll_s)
         self._timeout_s = float(timeout_s)
+        self._lease_interval_s = float(lease_interval_s)
+        self._lease_ttl_s = float(lease_ttl_s)
+        self._lease_at = -float("inf")
         self._seq: dict = {}
         os.makedirs(self._dir, exist_ok=True)
+        self._refresh_lease()
+
+    # ------------------------------------------------------------- leases
+
+    def _lease_path(self, rank: int) -> str:
+        return os.path.join(self._dir, f"lease_rank_{rank:05d}")
+
+    def _refresh_lease(self) -> None:
+        """Touch this rank's lease (atomic, at most once per interval)."""
+        now = time.monotonic()
+        if now - self._lease_at < self._lease_interval_s:
+            return
+        mine = self._lease_path(self.rank)
+        with open(mine + ".tmp", "w") as f:
+            f.write(str(time.time()))
+        os.replace(mine + ".tmp", mine)
+        self._lease_at = now
+
+    def _peer_status(self, rank: int) -> str:
+        """Human-readable liveness verdict for one missing rank."""
+        try:
+            age = time.time() - os.path.getmtime(self._lease_path(rank))
+        except OSError:
+            return f"rank {rank} never started (no lease)"
+        if age > self._lease_ttl_s:
+            return (f"rank {rank} dead (lease expired "
+                    f"{age - self._lease_ttl_s:.1f}s ago)")
+        return (f"rank {rank} alive (lease {age:.1f}s old) but not here — "
+                "wedged or on a divergent call sequence?")
 
     @property
     def is_writer(self) -> bool:
@@ -152,14 +203,16 @@ class FileCoordinator:
                                        else timeout_s)
         want = {f"rank_{r:05d}" for r in range(self.world_size)}
         while True:
+            self._refresh_lease()
             have = {p for p in os.listdir(d) if not p.endswith(".tmp")}
             if want <= have:
                 return
             if time.monotonic() > deadline:
                 missing = sorted(int(p.split("_")[1]) for p in want - have)
+                verdicts = "; ".join(self._peer_status(r) for r in missing)
                 raise CoordinatorError(
                     f"barrier {tag!r} (session {self.session}) timed out "
-                    f"waiting for rank(s) {missing} — dead or wedged peer; "
+                    f"waiting for rank(s) {missing}: {verdicts} — "
                     "relaunch all ranks with a fresh session")
             time.sleep(self._poll_s)
 
@@ -180,11 +233,13 @@ class FileCoordinator:
         deadline = time.monotonic() + (self._timeout_s if timeout_s is None
                                        else timeout_s)
         while not os.path.exists(path):
+            self._refresh_lease()
             if time.monotonic() > deadline:
                 raise CoordinatorError(
                     f"broadcast {tag!r} (session {self.session}): rank "
-                    f"{self.rank} timed out waiting for the writer — dead "
-                    "or wedged rank 0; relaunch with a fresh session")
+                    f"{self.rank} timed out waiting for the writer — "
+                    f"{self._peer_status(0)}; relaunch with a fresh "
+                    "session")
             time.sleep(self._poll_s)
         with open(path) as f:
             return json.load(f)["payload"]

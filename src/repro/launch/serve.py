@@ -56,6 +56,10 @@ def main(argv=None):
         except serve_lib.MaskSetError as e:
             raise SystemExit(f"error: {e}")
         name = args.mask_set or store.names[0]
+        try:
+            store.verify(name)       # refuse to serve a corrupted set
+        except serve_lib.MaskSetError as e:
+            raise SystemExit(f"error: {e}")
         info = store.info(name)
         print(f"serving mask set {name!r} from {info.source} "
               f"(relu_cost={info.relu_cost}, "

@@ -242,6 +242,34 @@ class MaskSetStore:
         """Provenance + billing identity of the named set."""
         return self._infos[name]
 
+    def verify(self, name: str, observed: Optional[str] = None) -> str:
+        """Re-fingerprint the named set against its load-time provenance.
+
+        Recomputes the host tree's sha256 and compares it to the
+        fingerprint recorded when the set entered the store; returns the
+        verified fingerprint or raises :class:`MaskSetError` on mismatch
+        (bit rot, device/host divergence — refuse to serve and bill a set
+        whose identity cannot be proven).  ``observed`` substitutes the
+        recomputed value — the serving tier's fault-injection surface
+        (``launch.faults`` corrupts it to drill the retry/degrade path).
+        """
+        want = self._infos[name].fingerprint
+        got = observed if observed is not None \
+            else M.fingerprint(self._host[name])
+        if got != want:
+            raise MaskSetError(
+                f"mask set {name!r} fails fingerprint verification: "
+                f"provenance says {want[:12]}…, observed {got[:12]}… — "
+                "refusing to serve it")
+        return want
+
+    def cheaper_sets(self, name: str) -> Tuple[str, ...]:
+        """Stored set names strictly cheaper (fewer billable ReLUs) than
+        ``name``, most expensive first — the natural degradation order."""
+        cost = self._infos[name].relu_cost
+        below = [n for n in self._names if self._infos[n].relu_cost < cost]
+        return tuple(sorted(below, key=lambda n: -self._infos[n].relu_cost))
+
     def pi_cost_per_token(self, name: str,
                           proto: pi_cost.PIProtocol = pi_cost.PIProtocol()
                           ) -> pi_cost.PICost:

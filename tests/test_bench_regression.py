@@ -352,3 +352,106 @@ def test_serve_missing_baseline_names_the_generator(tmp_path, capsys):
     fresh = _write(tmp_path, "f.json", _serve({"premium": (10.0, 500.0)}))
     rc, out = _run([str(tmp_path / "nope.json"), fresh, "--serve"], capsys)
     assert rc == 2 and "bench_serve" in out
+
+
+# ------------------------------------------------- --serve overload mode
+
+
+def _overload(classes=None, requests=6, **over):
+    """A minimal overloaded bench_serve report (completed < submitted is
+    legal there: shed requests terminate without completing)."""
+    rep = _serve(classes or {"premium": (4.0, 2000.0)},
+                 submitted=38, completed=16,
+                 overload=3.0, fault_plan="default", fault_seed=5,
+                 deadline_slack=2.5, queue_cap=4)
+    for rec in rep["classes"].values():
+        rec["requests"] = requests
+    section = {"factor": 3.0, "fault_plan": {"seed": 5, "specs": []},
+               "submitted": 38, "terminal": 38, "all_terminal": True,
+               "served": 14, "degraded": 2, "shed": 22, "expired": 3,
+               "deadline_hit_rate": 0.30, "goodput_tok_s": 4.5,
+               "degrade_rate": 0.05, "shed_rate": 0.55,
+               "retries": {}, "faults_injected": {},
+               "decisions_sha256": "deadbeef"}
+    section.update(over)
+    rep["overload"] = section
+    return rep
+
+
+def test_overload_pass_and_incomplete_is_legal(tmp_path, capsys):
+    """Shedding under overload is by design: completed < submitted passes
+    as long as every request reached a terminal state and queues drained."""
+    base = _write(tmp_path, "b.json", _overload())
+    fresh = _write(tmp_path, "f.json", _overload())
+    rc, out = _run([base, fresh, "--serve"], capsys)
+    assert rc == 0, out
+    assert "overload gate" in out and "PASS" in out
+    assert "completion: 16/38" in out
+
+
+def test_overload_deadline_and_goodput_regressions(tmp_path, capsys):
+    base = _write(tmp_path, "b.json", _overload())
+    worse = _write(tmp_path, "w.json",
+                   _overload(deadline_hit_rate=0.30 - 0.31))
+    rc, out = _run([base, worse, "--serve"], capsys)
+    assert rc == 1, out
+    assert "deadline_hit_rate" in out and "REGRESSION" in out
+
+    slow = _write(tmp_path, "s.json", _overload(goodput_tok_s=1.0))
+    rc, out = _run([base, slow, "--serve"], capsys)
+    assert rc == 1 and "goodput_tok_s" in out
+
+    sheddy = _write(tmp_path, "sh.json", _overload(shed_rate=0.99))
+    rc, out = _run([base, sheddy, "--serve"], capsys)
+    assert rc == 1 and "shed_rate" in out and "OVER CEILING" in out
+
+
+def test_overload_hung_request_fails_outright(tmp_path, capsys):
+    base = _write(tmp_path, "b.json", _overload())
+    hung = _write(tmp_path, "h.json",
+                  _overload(all_terminal=False, terminal=37))
+    rc, out = _run([base, hung, "--serve"], capsys)
+    assert rc == 1, out
+    assert "NOT ALL TERMINAL" in out and "all_terminal" in out
+
+
+def test_overload_presence_mismatch_is_incomparable(tmp_path, capsys):
+    over = _write(tmp_path, "o.json", _overload())
+    plain = _write(tmp_path, "p.json",
+                   _serve({"premium": (4.0, 2000.0)},
+                          overload=3.0, fault_plan="default", fault_seed=5,
+                          deadline_slack=2.5, queue_cap=4))
+    rc, out = _run([over, plain, "--serve"], capsys)
+    assert rc == 2, out
+    assert "overload section" in out and "not comparable" in out
+
+
+def test_zero_completed_class_is_unusable_input(tmp_path, capsys):
+    """Satellite bugfix: a class that shed everything has no latency or
+    throughput keys — exit 2 naming the class, not a KeyError."""
+    base = _write(tmp_path, "b.json", _overload())
+    starved = _overload()
+    starved["classes"]["economy"] = {"requests": 0, "shed": 19,
+                                     "shed_reasons": {"queue_full": 19}}
+    bad = _write(tmp_path, "z.json", starved)
+    rc, out = _run([base, bad, "--serve"], capsys)
+    assert rc == 2, out
+    assert "economy" in out and "zero requests" in out
+    assert "Traceback" not in out
+
+
+def test_malformed_overload_sections_are_loud(tmp_path, capsys):
+    base = _write(tmp_path, "b.json", _overload())
+    for mutate, needle in [
+            (lambda r: r.__setitem__("overload", "3x"), "not an object"),
+            (lambda r: r["overload"].pop("goodput_tok_s"), "goodput_tok_s"),
+            (lambda r: r["overload"].__setitem__("shed_rate", "high"),
+             "shed_rate"),
+            (lambda r: r["overload"].__setitem__("deadline_hit_rate", True),
+             "deadline_hit_rate")]:
+        rep = _overload()
+        mutate(rep)
+        bad = _write(tmp_path, "m.json", rep)
+        rc, out = _run([base, bad, "--serve"], capsys)
+        assert rc == 2, out
+        assert "FAIL" in out and needle in out and "Traceback" not in out

@@ -450,3 +450,99 @@ def test_multihost_drill_sigkill_writer(tmp_path, drill_reference):
     assert got0["FP"] == got1["FP"] == ref_fp
     assert got0["HIST"] == got1["HIST"] == ref_hist
     _assert_single_lineage(ckpt)
+
+
+# ------------------------------------------------------------- liveness
+
+
+# Child rank: loads coordinator.py by path (no package import — keeps the
+# subprocess light), reaches the start barrier, then blocks forever in a
+# broadcast wait, refreshing its lease the whole time.
+_CHILD = """
+import importlib.util, sys
+spec = importlib.util.spec_from_file_location("coord", sys.argv[1])
+mod = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(mod)
+c = mod.FileCoordinator(sys.argv[2], 1, 2, session="liv", poll_s=0.01,
+                        timeout_s=60, lease_interval_s=0.05,
+                        lease_ttl_s=0.5)
+c.barrier("start")
+c.broadcast("never")          # parent never publishes: wait + heartbeat
+"""
+
+
+def test_sigkilled_rank_is_reported_dead_by_lease(tmp_path):
+    """SIGKILL a peer mid-wait: the survivor's next barrier timeout names
+    the rank DEAD via its expired lease, not just 'missing'."""
+    root = str(tmp_path / "coord")
+    child = subprocess.Popen([sys.executable, "-c", _CHILD,
+                              coord_lib.__file__.replace(".pyc", ".py"),
+                              root])
+    try:
+        parent = coord_lib.FileCoordinator(root, 0, 2, session="liv",
+                                           poll_s=0.01, timeout_s=60,
+                                           lease_interval_s=0.05,
+                                           lease_ttl_s=0.5)
+        parent.barrier("start", timeout_s=30)   # child is up and waiting
+        child.kill()                            # SIGKILL: no cleanup runs
+        child.wait(timeout=10)
+        import time
+        time.sleep(0.8)                         # let the lease expire
+        with pytest.raises(coord_lib.CoordinatorError,
+                           match=r"rank 1 dead \(lease expired"):
+            parent.barrier("probe", timeout_s=0.3)
+    finally:
+        if child.poll() is None:
+            child.kill()
+
+
+def test_never_started_rank_has_no_lease(tmp_path):
+    c = coord_lib.FileCoordinator(str(tmp_path), 0, 2, timeout_s=0.2,
+                                  poll_s=0.01)
+    with pytest.raises(coord_lib.CoordinatorError,
+                       match=r"rank 1 never started \(no lease\)"):
+        c.barrier("lonely")
+
+
+def test_wedged_rank_reads_alive_not_dead(tmp_path):
+    """A peer stuck in a DIFFERENT wait keeps refreshing its lease: the
+    timeout must call it alive/wedged, not dead — that distinction is what
+    tells the operator whether to relaunch or to debug a divergent call
+    sequence."""
+    root = str(tmp_path / "coord")
+    stop = threading.Event()
+
+    def wedged_rank():
+        c = coord_lib.FileCoordinator(root, 1, 2, session="s0",
+                                      poll_s=0.01, timeout_s=30,
+                                      lease_interval_s=0.05,
+                                      lease_ttl_s=5.0)
+        c.barrier("start")
+        try:
+            c.broadcast("elsewhere", timeout_s=10)   # wrong wait: wedged
+        except coord_lib.CoordinatorError:
+            pass
+        stop.set()
+
+    t = threading.Thread(target=wedged_rank)
+    t.start()
+    try:
+        parent = coord_lib.FileCoordinator(root, 0, 2, session="s0",
+                                           poll_s=0.01, timeout_s=30,
+                                           lease_interval_s=0.05,
+                                           lease_ttl_s=5.0)
+        parent.barrier("start", timeout_s=30)
+        with pytest.raises(coord_lib.CoordinatorError,
+                           match=r"rank 1 alive .* wedged"):
+            parent.barrier("probe", timeout_s=0.4)
+    finally:
+        # unblock the wedged thread's broadcast so the test exits cleanly
+        parent.broadcast("elsewhere", {"bye": True})
+        t.join(timeout=15)
+    assert stop.is_set()
+
+
+def test_lease_ttl_must_exceed_interval(tmp_path):
+    with pytest.raises(coord_lib.CoordinatorError, match="lease_ttl_s"):
+        coord_lib.FileCoordinator(str(tmp_path), 0, 1,
+                                  lease_interval_s=2.0, lease_ttl_s=1.0)

@@ -1,0 +1,225 @@
+"""Deterministic fault injection: plans, retries, clocks, loop integration.
+
+Contracts under test (launch.faults + ServeLoop crosspoints):
+
+- a FaultPlan is bit-for-bit reproducible: same (specs, seed) -> same draw
+  sequence, and each crosspoint's stream is independent of how often the
+  other crosspoints are consulted;
+- VirtualClock makes every ServeLoop timestamp model-derived, so two runs
+  with the same seed + plan log identical admit/degrade/shed decisions;
+- every injected fault terminates: retried to success, degraded, or shed —
+  never a hung loop, and shed requests are never billed;
+- a corrupted mask-set fingerprint is detected at admission
+  (MaskSetStore.verify) and the request degrades or sheds, not serves.
+"""
+import json
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.launch import faults, serve_loop
+from repro.models.lm import LM
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("stablelm_1p6b").reduced()
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    store = serve_loop.threshold_mask_sets(model, [1.0, 0.25], seed=0)
+    return cfg, model, params, store
+
+
+def _loop(served, *, plan=None, retries=None, ladder=False, max_new=3):
+    cfg, model, params, store = served
+    classes = [serve_loop.SLOClass("premium", store.names[0], max_new),
+               serve_loop.SLOClass("economy", store.names[1], max_new)]
+    lad = serve_loop.DegradationLadder.from_store(store) if ladder else None
+    return serve_loop.ServeLoop(
+        model, params, store, classes, slots=2, max_len=32, prompt_bucket=8,
+        clock=faults.VirtualClock(), fault_plan=plan, retries=retries,
+        ladder=lad)
+
+
+# ---------------------------------------------------------------- FaultPlan
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="unknown crosspoint"):
+        faults.FaultSpec("warp", "fail", 0.5)
+    with pytest.raises(ValueError, match="outside"):
+        faults.FaultSpec("prefill", "fail", 1.5)
+
+
+def test_plan_draws_are_reproducible():
+    specs = (faults.FaultSpec("prefill", "fail", 0.3),
+             faults.FaultSpec("prefill", "slow", 0.3, delay_s=0.1),
+             faults.FaultSpec("decode", "stall", 0.2, delay_s=0.05))
+    a = faults.FaultPlan(specs, seed=11)
+    b = faults.FaultPlan(specs, seed=11)
+    seq_a = [a.draw("prefill") for _ in range(64)]
+    seq_b = [b.draw("prefill") for _ in range(64)]
+    assert seq_a == seq_b
+    assert any(s is not None for s in seq_a)
+    c = faults.FaultPlan(specs, seed=12)
+    assert [c.draw("prefill") for _ in range(64)] != seq_a
+
+
+def test_crosspoint_streams_are_independent():
+    """Consulting one crosspoint more often must not shift another's
+    schedule — that is what makes replay under retries exact."""
+    specs = (faults.FaultSpec("prefill", "fail", 0.3),
+             faults.FaultSpec("decode", "stall", 0.3, delay_s=0.01))
+    a = faults.FaultPlan(specs, seed=3)
+    b = faults.FaultPlan(specs, seed=3)
+    for _ in range(50):                       # extra decode traffic on b
+        b.draw("decode")
+    assert [a.draw("prefill") for _ in range(32)] == \
+        [b.draw("prefill") for _ in range(32)]
+
+
+def test_rate_edges():
+    always = faults.FaultPlan((faults.FaultSpec("prefill", "fail", 1.0),),
+                              seed=0)
+    never = faults.FaultPlan((faults.FaultSpec("prefill", "fail", 0.0),),
+                             seed=0)
+    assert all(always.draw("prefill") is not None for _ in range(16))
+    assert all(never.draw("prefill") is None for _ in range(16))
+    assert never.stats() == {}
+    assert always.stats() == {"prefill": {"fail": 16}}
+
+
+def test_plan_describe_is_json_ready():
+    plan = faults.default_chaos_plan(seed=7)
+    desc = json.loads(json.dumps(plan.describe()))
+    assert desc["seed"] == 7
+    assert {s["crosspoint"] for s in desc["specs"]} == set(faults.CROSSPOINTS)
+
+
+def test_corrupt_fingerprint_never_matches():
+    fp = "a" * 64
+    bad = faults.corrupt_fingerprint(fp)
+    assert bad != fp
+    assert bad == faults.corrupt_fingerprint(fp)      # deterministic
+
+
+def test_virtual_clock():
+    clk = faults.VirtualClock(start=1.0)
+    assert clk.now() == 1.0
+    clk.advance(0.25)
+    assert clk.now() == 1.25
+    with pytest.raises(ValueError, match="advance"):
+        clk.advance(-0.1)
+
+
+# ------------------------------------------------------- loop integration
+
+def test_prefill_faults_retry_to_success(served):
+    """Sub-certain fail rate: some prefills need retries but every request
+    still reaches a terminal state and every completion is billed."""
+    plan = faults.FaultPlan((faults.FaultSpec("prefill", "fail", 0.4),),
+                            seed=5)
+    loop = _loop(served, plan=plan)
+    rng = np.random.default_rng(0)
+    for i in range(8):
+        loop.submit(rng.integers(0, served[0].vocab, 6),
+                    ("premium", "economy")[i % 2])
+    loop.shutdown(drain=True)
+    stats = loop.stats()
+    assert stats["terminal"] == 8 and stats["pending"] == 0
+    assert plan.stats().get("prefill", {}).get("fail", 0) > 0
+    assert all(r.bill is not None for r in loop.completed)
+    assert all(r.bill is None for r in loop.shed)
+
+
+def test_certain_prefill_failure_sheds_with_reason(served):
+    plan = faults.FaultPlan((faults.FaultSpec("prefill", "fail", 1.0),),
+                            seed=0)
+    loop = _loop(served, plan=plan)
+    req = loop.submit(np.arange(1, 6), "premium")
+    loop.shutdown(drain=True)
+    assert req.state == "shed" and req.shed_reason == "prefill_failed"
+    assert req.bill is None
+    pol = loop.retries["prefill"]
+    assert loop.fault_stats["prefill"]["injected"] == pol.max_attempts
+    assert loop.fault_stats["prefill"]["gave_up"] == 1
+
+
+def test_slow_prefill_absorbed_within_timeout(served):
+    plan = faults.FaultPlan(
+        (faults.FaultSpec("prefill", "slow", 1.0, delay_s=0.05),), seed=0)
+    loop = _loop(served, plan=plan)
+    req = loop.submit(np.arange(1, 6), "premium")
+    loop.shutdown(drain=True)
+    assert req.state == "served"                 # delay absorbed as latency
+    assert loop.fault_stats["prefill"]["injected"] > 0
+    assert loop.fault_stats["prefill"]["gave_up"] == 0
+
+
+def test_slow_prefill_beyond_timeout_is_a_failure(served):
+    plan = faults.FaultPlan(
+        (faults.FaultSpec("prefill", "slow", 1.0, delay_s=0.5),), seed=0)
+    retries = {"prefill": faults.RetryPolicy(max_attempts=2, backoff_s=0.0,
+                                             timeout_s=0.1)}
+    loop = _loop(served, plan=plan, retries=retries)
+    req = loop.submit(np.arange(1, 6), "premium")
+    loop.shutdown(drain=True)
+    assert req.state == "shed" and req.shed_reason == "prefill_failed"
+
+
+def test_decode_stall_is_retried_in_place(served):
+    plan = faults.FaultPlan(
+        (faults.FaultSpec("decode", "stall", 1.0, delay_s=0.02),), seed=0)
+    loop = _loop(served, plan=plan)
+    req = loop.submit(np.arange(1, 6), "premium")
+    loop.shutdown(drain=True)
+    assert req.state == "served" and len(req.tokens) == 3
+    assert loop.fault_stats["decode"]["injected"] > 0
+
+
+def test_corrupt_fingerprint_sheds_without_ladder(served):
+    plan = faults.FaultPlan(
+        (faults.FaultSpec("fingerprint", "corrupt", 1.0),), seed=0)
+    loop = _loop(served, plan=plan)
+    req = loop.submit(np.arange(1, 6), "premium")
+    loop.shutdown(drain=True)
+    assert req.state == "shed" and req.shed_reason == "mask_corrupt"
+    assert req.bill is None and loop.fault_stats["fingerprint"]["gave_up"] > 0
+
+
+def test_corrupt_fingerprint_recovers_via_retry(served):
+    """50% corruption: verification retries succeed often enough that the
+    load completes; nothing is served off an unverified set."""
+    plan = faults.FaultPlan(
+        (faults.FaultSpec("fingerprint", "corrupt", 0.5),), seed=1)
+    loop = _loop(served, plan=plan, ladder=True)
+    rng = np.random.default_rng(0)
+    for i in range(8):
+        loop.submit(rng.integers(0, served[0].vocab, 6),
+                    ("premium", "economy")[i % 2])
+    loop.shutdown(drain=True)
+    stats = loop.stats()
+    assert stats["terminal"] == 8 and stats["pending"] == 0
+    for r in loop.completed:       # billed set is always the verified one
+        assert r.bill["fingerprint"] == \
+            loop.store.info(r.mask_set).fingerprint
+
+
+def test_same_seed_replays_decisions_bitwise(served):
+    """The acceptance criterion: same seed + plan -> identical
+    admit/degrade/shed decision log, hash-equal."""
+    def run():
+        plan = faults.default_chaos_plan(seed=42)
+        loop = _loop(served, plan=plan, ladder=True)
+        rng = np.random.default_rng(9)
+        for i in range(10):
+            loop.submit(rng.integers(0, served[0].vocab,
+                                     int(rng.integers(2, 12))),
+                        ("premium", "economy")[i % 2])
+        loop.shutdown(drain=True)
+        return loop
+    a, b = run(), run()
+    assert a.decision_log == b.decision_log
+    assert a.stats()["decisions_sha256"] == b.stats()["decisions_sha256"]
+    assert [r.state for r in a.completed] == [r.state for r in b.completed]

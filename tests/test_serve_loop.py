@@ -97,7 +97,9 @@ def test_billing_is_pi_cost_of_served_mask_set(served):
         assert r.mask_set == info.name
         assert r.mask_fingerprint == info.fingerprint
         tokens = len(r.prompt) + len(r.tokens)
-        want = pi_cost.bill_request(info.relu_cost, n_sites, tokens=tokens)
+        want = pi_cost.bill_request(info.relu_cost, n_sites, tokens=tokens,
+                                    mask_set=info.name,
+                                    fingerprint=info.fingerprint)
         assert r.bill == want
         # and the bill is the per-token protocol cost scaled by tokens
         per_tok = pi_cost.cost_of_masks(store.host(r.mask_set), n_sites)
@@ -154,3 +156,188 @@ def test_validation_errors_are_loud(served):
         loop.submit(np.zeros(100, np.int32), "premium")
     with pytest.raises(ValueError, match="prompt length"):
         loop.submit(np.zeros(0, np.int32), "premium")
+
+
+# ---------------------------------------------------- overload robustness
+
+def _wan():
+    """Bandwidth-bound protocol: per-token cost scales with ReLU count, so
+    the kf100/kf025 latency spread is ~4x and deadlines discriminate."""
+    return pi_cost.PIProtocol(bandwidth_bytes_per_s=12.5e6, rtt_s=0.0)
+
+
+def _deadline_loop(served, deadline_ms, *, ladder=False, queue_cap=None,
+                   max_new=3):
+    from repro.launch import faults
+    cfg, model, params, store = served
+    classes = [
+        serve_loop.SLOClass("premium", store.names[0], max_new,
+                            deadline_ms=deadline_ms, priority=1),
+        serve_loop.SLOClass("economy", store.names[1], max_new,
+                            deadline_ms=None)]
+    lad = serve_loop.DegradationLadder.from_store(store) if ladder else None
+    clock = faults.VirtualClock()
+    loop = serve_loop.ServeLoop(model, params, store, classes, slots=2,
+                                max_len=32, prompt_bucket=8, ladder=lad,
+                                queue_cap=queue_cap, clock=clock,
+                                proto=_wan())
+    return loop, clock
+
+
+def test_generous_deadline_is_served_and_hit(served):
+    loop, _ = _deadline_loop(served, deadline_ms=5000.0)
+    req = loop.submit(np.arange(1, 6), "premium")
+    loop.shutdown(drain=True)
+    assert req.state == "served" and req.deadline_hit
+    stats = loop.stats()
+    assert stats["classes"]["premium"]["deadline_hit_rate"] == 1.0
+    assert stats["deadline_hit_rate"] == 1.0
+    assert stats["goodput_tok_s"] > 0
+
+
+def test_unmeetable_deadline_sheds_before_prefill(served):
+    """Without a ladder, a deadline the estimate cannot meet is shed with
+    a reason — no prefill compute is wasted and nothing is billed."""
+    loop, _ = _deadline_loop(served, deadline_ms=150.0)
+    est = loop.latency.estimate_s(loop.store.names[0], 5, 3)
+    assert est > 0.150                       # premise of the test
+    req = loop.submit(np.arange(1, 6), "premium")
+    loop.shutdown(drain=True)
+    assert req.state == "shed"
+    assert req.shed_reason == "deadline_unmeetable"
+    assert req.bill is None and req.tokens == []
+    assert loop.decision_log[-1]["decision"] == "shed"
+
+
+def test_degradation_ladder_reroutes_and_bills_cheaper_set(served):
+    """The tentpole: an unmeetable premium deadline degrades down the
+    ladder to the cheaper set, serves within deadline, and is billed at
+    the *degraded* set's ReLU cost with full provenance stamped."""
+    cfg, model, params, store = served
+    loop, _ = _deadline_loop(served, deadline_ms=150.0, ladder=True)
+    req = loop.submit(np.arange(1, 6), "premium")
+    loop.shutdown(drain=True)
+    assert req.state == "degraded" and req.deadline_hit
+    assert req.degraded_from == store.names[0]
+    assert req.mask_set == store.names[1]
+    info = store.info(store.names[1])
+    tokens = len(req.prompt) + len(req.tokens)
+    assert req.bill == pi_cost.bill_request(
+        info.relu_cost, len(store.site_shapes), tokens=tokens,
+        proto=_wan(), mask_set=info.name, fingerprint=info.fingerprint,
+        degraded_from=store.names[0])
+    stats = loop.stats()
+    assert stats["degrade_rate"] == 1.0
+    decisions = [d["decision"] for d in loop.decision_log
+                 if d["rid"] == req.rid]
+    assert decisions == ["degrade", "admit"]
+
+
+def test_expired_request_cancelled_unbilled(served):
+    """A request whose deadline passes while queued is cancelled before
+    any prefill — terminal, un-billed, reason recorded."""
+    loop, clock = _deadline_loop(served, deadline_ms=100.0)
+    req = loop.submit(np.arange(1, 6), "premium")
+    clock.advance(1.0)                       # deadline passes in the queue
+    loop.shutdown(drain=True)
+    assert req.state == "shed" and req.cancelled
+    assert req.shed_reason == "deadline_expired"
+    assert req.bill is None and req.tokens == []
+
+
+def test_bounded_queue_sheds_overflow(served):
+    loop, _ = _deadline_loop(served, deadline_ms=None, queue_cap=2)
+    reqs = [loop.submit(np.arange(1, 6), "premium") for _ in range(4)]
+    assert [r.state for r in reqs] == ["queued", "queued", "shed", "shed"]
+    assert all(r.shed_reason == "queue_full" for r in reqs[2:])
+    loop.shutdown(drain=True)
+    assert loop.stats()["terminal"] == 4
+    assert loop.stats()["classes"]["premium"]["shed_reasons"] == \
+        {"queue_full": 2}
+
+
+def test_edf_orders_admission_by_deadline_then_priority(served):
+    """Queued requests admit earliest-deadline-first, not FIFO: a later
+    arrival with a tighter deadline jumps the queue."""
+    cfg, model, params, store = served
+    from repro.launch import faults
+    classes = [
+        serve_loop.SLOClass("premium", store.names[0], 2,
+                            deadline_ms=60000.0),
+        serve_loop.SLOClass("rush", store.names[0], 2, deadline_ms=500.0)]
+    loop = serve_loop.ServeLoop(model, params, store, classes, slots=1,
+                                max_len=32, prompt_bucket=8,
+                                clock=faults.VirtualClock(), proto=_wan())
+    relaxed = loop.submit(np.arange(1, 6), "premium")
+    rush = loop.submit(np.arange(1, 6), "rush")
+    # same lane heap is per class; check cross-class via shared-set lane:
+    # rush lives on its own lane, so instead assert within one class
+    lane = loop.lanes["premium"]
+    later_tight = serve_loop.Request(rid=99, slo="premium",
+                                     prompt=np.arange(1, 4), max_new=2,
+                                     deadline_s=0.1)
+    lane.push(later_tight)
+    assert lane.pop() is later_tight         # EDF beats FIFO order
+    assert lane.pop() is relaxed
+    assert rush.state == "queued"
+
+
+def test_ladder_validation_is_loud(served):
+    cfg, model, params, store = served
+    with pytest.raises(ValueError, match="not in the mask-set store"):
+        serve_loop.DegradationLadder(("nope",)).validate(store)
+    with pytest.raises(ValueError, match="strictly descending"):
+        serve_loop.DegradationLadder(
+            (store.names[1], store.names[0])).validate(store)
+    lad = serve_loop.DegradationLadder.from_store(store)
+    assert lad.rungs == (store.names[0], store.names[1])
+    assert lad.below(store, store.names[0]) == (store.names[1],)
+    assert lad.below(store, store.names[1]) == ()
+
+
+def test_recurrent_family_requires_exact_prefill():
+    """Satellite bugfix: state-carrying caches (rwkv/mamba blocks) carry
+    state through padded prompt positions, so bucketed prefill must be
+    rejected at construction — and exact-length prefill must serve."""
+    cfg = get_config("rwkv6_3b").reduced()
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    store = serve_loop.threshold_mask_sets(model, [1.0], seed=0)
+    classes = [serve_loop.SLOClass("only", store.names[0], 2)]
+    with pytest.raises(ValueError, match=r"prompt_bucket=None"):
+        serve_loop.ServeLoop(model, params, store, classes,
+                             slots=1, max_len=24, prompt_bucket=16)
+    loop = serve_loop.ServeLoop(model, params, store, classes,
+                                slots=1, max_len=24, prompt_bucket=None)
+    req = loop.submit(np.arange(1, 7) % cfg.vocab, "only")
+    loop.shutdown(drain=True)
+    assert req.state == "served" and len(req.tokens) == 2
+
+
+def test_no_drain_leaves_no_poisoned_state(served):
+    """Satellite: after shutdown(drain=False) cancels in-flight work, a
+    FRESH loop over the same store serves bit-identically to one that
+    never saw the cancelled loop — no poisoned device state, all lanes
+    released, nothing billed for cancelled work."""
+    cfg = served[0]
+    prompt = np.arange(1, 8) % cfg.vocab
+
+    before = _loop(served, max_new=4)
+    want = before.submit(prompt, "premium")
+    before.shutdown(drain=True)
+
+    victim = _loop(served, max_new=4, slots=1)
+    reqs = _submit_n(victim, cfg, 3, classes=("premium",))
+    victim.step()                            # one live, two queued
+    victim.shutdown(drain=False)
+    assert all(r.state == "cancelled" for r in reqs)
+    assert all(r.bill is None for r in reqs)
+    for lane in victim.lanes.values():       # lanes fully released
+        assert not lane.live.any()
+        assert all(r is None for r in lane.reqs)
+        assert not lane.heap and not lane.cache_len.any()
+
+    after = _loop(served, max_new=4)
+    got = after.submit(prompt, "premium")
+    after.shutdown(drain=True)
+    assert got.tokens == want.tokens
